@@ -1,0 +1,26 @@
+"""App. D: training-set selection ablation — query / corpus-query / corpus
+strategies (claim C4: robust to the training distribution, actual queries
+slightly best)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import recall_at
+from repro.core.index import candidates
+
+
+def run():
+    q, qm = common.queries()
+    truth = common.ground_truth()
+    out = {}
+    for strategy in ("corpus-query", "corpus", "query"):
+        idx = common.lemur_index(128, query_strategy=strategy)
+        cand = candidates(idx, q, qm, k_prime=200)
+        rec = float(recall_at(cand, truth).mean())
+        out[strategy] = rec
+        common.emit(f"appendix_d_{strategy}", 0.0, f"recall200={rec:.3f}")
+    common.save_json("appendix_d_training", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Shared benchmark substrate: one synthetic corpus + trained LEMUR indexes,
+cached across the per-figure benchmarks (building the d'-ablation indexes is
+the expensive step)."""
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LemurConfig, build_index, maxsim
+from repro.data import synthetic
+
+RESULTS = pathlib.Path("results")
+RESULTS.mkdir(exist_ok=True)
+
+# CPU-scaled benchmark setting (statistics mirror SCIDOCS: m≈25k docs).
+M, D, AVG_T, MAX_T = 12000, 48, 16, 24
+N_QUERIES, Q_TOKENS, K = 96, 8, 10
+
+_BENCH_CFG = dict(m_pretrain=1024, n_train=16384, n_ols=4096, epochs=80,
+                  batch_size=512, lr=3e-3, grad_clip=0.5, k=K)
+
+
+@functools.lru_cache(maxsize=1)
+def corpus():
+    return synthetic.make_corpus(m=M, d=D, avg_tokens=AVG_T, max_tokens=MAX_T,
+                                 n_centers=96, topic_strength=1.6, seed=0)
+
+
+@functools.lru_cache(maxsize=1)
+def queries():
+    c = corpus()
+    q = jnp.asarray(synthetic.queries_from_corpus_query(c, N_QUERIES, Q_TOKENS,
+                                                        encoder_noise=0.15, seed=99))
+    qm = jnp.ones(q.shape[:2], bool)
+    return q, qm
+
+
+@functools.lru_cache(maxsize=1)
+def ground_truth():
+    c = corpus()
+    q, qm = queries()
+    docs = jnp.asarray(c.doc_tokens)
+    mask = jnp.asarray(c.doc_mask)
+    _, truth = maxsim.true_topk(q, qm, docs, mask, K)
+    return truth
+
+
+@functools.lru_cache(maxsize=4)
+def lemur_index(d_prime: int, query_strategy: str = "corpus-query"):
+    """Deterministic build; disk-cached (psi params + W) so repeated benchmark
+    runs skip the training/OLS stage and only re-measure query latency."""
+    import numpy as np
+
+    from repro.anns import ivf as _ivf
+    from repro.core.index import LemurIndex
+    from repro.core.model import TargetStats
+
+    cfg = LemurConfig(d=D, d_prime=d_prime, anns="ivf", ivf_nprobe=32, sq8=True,
+                      k_prime=512, query_strategy=query_strategy, **_BENCH_CFG)
+    cache = RESULTS / f"bench_index_m{M}_d{d_prime}_{query_strategy}_e{cfg.epochs}.npz"
+    c = corpus()
+    if cache.exists():
+        z = np.load(cache)
+        psi = {"dense": {"kernel": jnp.asarray(z["k"]), "bias": jnp.asarray(z["b"])},
+               "ln": {"scale": jnp.asarray(z["g"]), "bias": jnp.asarray(z["beta"])}}
+        idx = LemurIndex(cfg, psi, TargetStats(jnp.asarray(z["mean"]), jnp.asarray(z["std"])),
+                         jnp.asarray(z["W"]), jnp.asarray(c.doc_tokens),
+                         jnp.asarray(c.doc_mask), None)
+        ann = _ivf.build_ivf(jax.random.PRNGKey(3), idx.W, cfg.ivf_nlist, sq8=cfg.sq8)
+        return idx._replace(ann=ann)
+    idx = build_index(jax.random.PRNGKey(0), c, cfg)
+    np.savez(cache, k=np.asarray(idx.psi["dense"]["kernel"]),
+             b=np.asarray(idx.psi["dense"]["bias"]),
+             g=np.asarray(idx.psi["ln"]["scale"]), beta=np.asarray(idx.psi["ln"]["bias"]),
+             mean=np.asarray(idx.stats.mean), std=np.asarray(idx.stats.std),
+             W=np.asarray(idx.W))
+    return idx
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock seconds per call (jit-compiled fns; blocks on ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """CSV line per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, obj):
+    (RESULTS / f"bench_{name}.json").write_text(json.dumps(obj, indent=1))

@@ -1,0 +1,72 @@
+"""Fig. 2 (left + right): latent-dimension ablation.
+
+Left:  Recall-k@k' of exact-latent LEMUR candidates for d' ∈ {64, 128, 256}
+       vs a 10x-wider MUVERA FDE — claim C1: learned beats data-oblivious at
+       a fraction of the dimension.
+Right: end-to-end (ANNS + rerank) latency/recall per d' — claim C2:
+       diminishing returns beyond the middle d'.
+(d' values are CPU-scaled from the paper's 1024/2048/4096; the *ratios*
+to the FDE dimension match the paper's setup.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.anns import MuveraConfig, doc_fde, mips_topk, query_fde
+from repro.core import recall_at
+from repro.core.index import candidates, query
+
+D_PRIMES = (64, 128, 256)
+FDE_DIM = 1280  # 10x the middle d' — mirrors "10240 vs 1024" in the paper
+KPRIMES = (20, 50, 100, 200, 400)
+
+
+def run():
+    q, qm = common.queries()
+    truth = common.ground_truth()
+    out = {"kprimes": list(KPRIMES), "recall_curves": {}, "e2e": {}}
+
+    # --- left: candidate recall vs k' ---
+    for dp in D_PRIMES:
+        idx = common.lemur_index(dp)
+        rs = []
+        for kp in KPRIMES:
+            cand = candidates(idx, q, qm, k_prime=kp)
+            rs.append(float(recall_at(cand, truth).mean()))
+        out["recall_curves"][f"lemur_d{dp}"] = rs
+        common.emit(f"fig2_recall_lemur_d{dp}_k{KPRIMES[-1]}", 0.0, f"recall={rs[-1]:.3f}")
+
+    mcfg = MuveraConfig(r_reps=20, k_sim=5, final_dim=FDE_DIM)
+    c = common.corpus()
+    dfde = doc_fde(jnp.asarray(c.doc_tokens), jnp.asarray(c.doc_mask), mcfg)
+    qfde = query_fde(q, qm, mcfg)
+    rs = []
+    for kp in KPRIMES:
+        _, cand = mips_topk(qfde, dfde, kp)
+        rs.append(float(recall_at(cand, truth).mean()))
+    out["recall_curves"][f"muvera_fde{FDE_DIM}"] = rs
+    common.emit(f"fig2_recall_muvera_fde{FDE_DIM}_k{KPRIMES[-1]}", 0.0, f"recall={rs[-1]:.3f}")
+
+    # --- right: end-to-end latency vs recall per d' ---
+    for dp in D_PRIMES:
+        idx = common.lemur_index(dp)
+
+        def go(qq, qqm):
+            return query(idx, qq, qqm, k_prime=200, use_ann=True)
+
+        t = common.timeit(jax.jit(go), q, qm)
+        _, ids = go(q, qm)
+        rec = float(recall_at(ids, truth).mean())
+        qps = q.shape[0] / t
+        out["e2e"][f"d{dp}"] = {"recall": rec, "qps": qps}
+        common.emit(f"fig2_e2e_lemur_d{dp}", t / q.shape[0] * 1e6,
+                    f"recall={rec:.3f},qps={qps:.0f}")
+
+    common.save_json("fig2_dprime", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Kernel-layer micro-benchmarks: ops-vs-ref wall time (CPU: reference path
+is the measurement; the Pallas path is TPU-targeted and validated in
+interpret mode by tests).  Reports the arithmetic layout costs that drive
+the §Perf napkin math."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.anns.quantization import sq8_quant
+from repro.kernels import ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    out = {}
+    # token_maxsim (rerank/OLS-target contraction)
+    x = jnp.asarray(rng.standard_normal((512, 128)), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((2048, 24, 128)), jnp.float32)
+    mask = jnp.ones((2048, 24), bool)
+    f = jax.jit(lambda a, b, c: ref.token_maxsim_ref(a, b, c))
+    t = common.timeit(f, x, docs, mask)
+    flops = 2 * 512 * 2048 * 24 * 128
+    out["token_maxsim"] = {"s": t, "gflops": flops / t / 1e9}
+    common.emit("kernel_token_maxsim", t * 1e6, f"gflops={flops/t/1e9:.1f}")
+
+    # fused_psi
+    k = jnp.asarray(rng.standard_normal((128, 2048)) * 0.05, jnp.float32)
+    b = jnp.zeros(2048); g = jnp.ones(2048); beta = jnp.zeros(2048)
+    xx = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
+    f = jax.jit(lambda a: ref.fused_psi_ref(a, k, b, g, beta))
+    t = common.timeit(f, xx)
+    out["fused_psi"] = {"s": t}
+    common.emit("kernel_fused_psi", t * 1e6, "n=4096,d128->2048")
+
+    # mips_sq8 scan
+    corpus = jnp.asarray(rng.standard_normal((65536, 128)), jnp.float32)
+    codes, scales = sq8_quant(corpus)
+    qv = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    f = jax.jit(lambda a: ref.mips_sq8_ref(a, codes, scales))
+    t = common.timeit(f, qv)
+    flops = 2 * 64 * 65536 * 128
+    out["mips_sq8"] = {"s": t, "gflops": flops / t / 1e9}
+    common.emit("kernel_mips_sq8", t * 1e6, f"gflops={flops/t/1e9:.1f}")
+
+    common.save_json("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig2       # one
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
+results/bench_*.json consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels"]
+
+
+def main() -> None:
+    which = sys.argv[1:] or BENCHES
+    t0 = time.time()
+    if any(w.startswith("fig2") for w in which):
+        from benchmarks import fig2_dprime
+
+        fig2_dprime.run()
+    if any(w.startswith("fig3") for w in which):
+        from benchmarks import fig3_anns
+
+        fig3_anns.run()
+    if any(w.startswith("table2") for w in which):
+        from benchmarks import table2_qps
+
+        table2_qps.run()
+    if any(w.startswith("appendix") for w in which):
+        from benchmarks import appendix_d_training
+
+        appendix_d_training.run()
+    if any(w.startswith("kernel") for w in which):
+        from benchmarks import kernels_bench
+
+        kernels_bench.run()
+    print(f"# total bench time: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

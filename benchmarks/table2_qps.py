@@ -1,0 +1,113 @@
+"""Table 2 / Fig. 4: best QPS at ≥80% recall (k=10, CPU-scaled corpus) —
+LEMUR vs MUVERA(+same ANNS/rerank) vs PLAID-style token pruning vs exact
+MaxSim brute force.
+
+Grid-searches each method's query hyperparameters and reports the fastest
+configuration that clears the recall bar (the paper's Pareto protocol)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.anns import (
+    MuveraConfig,
+    build_ivf,
+    build_token_pruning,
+    doc_fde,
+    query_fde,
+    search_ivf,
+    search_token_pruning,
+)
+from repro.core import maxsim, recall_at
+from repro.core.index import query
+
+RECALL_BAR = 0.8
+
+
+def _best(rows):
+    ok = [r for r in rows if r["recall"] >= RECALL_BAR]
+    if not ok:
+        return max(rows, key=lambda r: r["recall"]) | {"note": "recall bar missed"}
+    return max(ok, key=lambda r: r["qps"])
+
+
+def run():
+    c = common.corpus()
+    q, qm = common.queries()
+    truth = common.ground_truth()
+    docs = jnp.asarray(c.doc_tokens)
+    mask = jnp.asarray(c.doc_mask)
+    out = {}
+
+    # --- LEMUR ---
+    idx = common.lemur_index(128)
+    rows = []
+    for nprobe in (8, 16, 32, 64):
+        for kp in (50, 100, 200):
+            fn = jax.jit(lambda a, b, n=nprobe, k=kp: query(idx, a, b, k_prime=k,
+                                                            use_ann=True, nprobe=n))
+            t = common.timeit(fn, q, qm, iters=3)
+            _, ids = fn(q, qm)
+            rows.append({"nprobe": nprobe, "k_prime": kp,
+                         "recall": float(recall_at(ids, truth).mean()),
+                         "qps": q.shape[0] / t})
+    out["lemur"] = _best(rows)
+
+    # --- MUVERA (FDE + same IVF + same rerank) ---
+    mcfg = MuveraConfig(r_reps=20, k_sim=5, final_dim=1280)
+    dfde = doc_fde(docs, mask, mcfg)
+    qfde = query_fde(q, qm, mcfg)
+    fde_ivf = build_ivf(jax.random.PRNGKey(1), dfde, sq8=True)
+    rows = []
+    for nprobe in (8, 16, 32, 64):
+        for kp in (50, 100, 200):
+            def fn(qq, qqm, n=nprobe, k=kp):
+                _, cand = search_ivf(fde_ivf, query_fde(qq, qqm, mcfg), n, k)
+                return maxsim.rerank(qq, qqm, jnp.maximum(cand, 0), docs, mask, common.K)
+
+            jfn = jax.jit(fn)
+            t = common.timeit(jfn, q, qm, iters=3)
+            _, ids = jfn(q, qm)
+            rows.append({"nprobe": nprobe, "k_prime": kp,
+                         "recall": float(recall_at(ids, truth).mean()),
+                         "qps": q.shape[0] / t})
+    out["muvera"] = _best(rows)
+
+    # --- PLAID-style token pruning ---
+    tp = build_token_pruning(jax.random.PRNGKey(2), docs, mask)
+    rows = []
+    for nprobe in (2, 4, 8):
+        for kp in (100, 200, 400):
+            def fn(qq, qqm, n=nprobe, k=kp):
+                _, cand = search_token_pruning(tp, qq, qqm, nprobe=n, k_prime=k,
+                                               m=common.M)
+                return maxsim.rerank(qq, qqm, jnp.maximum(cand, 0), docs, mask, common.K)
+
+            jfn = jax.jit(fn)
+            t = common.timeit(jfn, q, qm, iters=3)
+            _, ids = jfn(q, qm)
+            rows.append({"nprobe": nprobe, "k_prime": kp,
+                         "recall": float(recall_at(ids, truth).mean()),
+                         "qps": q.shape[0] / t})
+    out["token_pruning"] = _best(rows)
+
+    # --- exact MaxSim brute force (the latency ceiling) ---
+    fn = jax.jit(lambda a, b: maxsim.true_topk(a, b, docs, mask, common.K))
+    t = common.timeit(fn, q, qm, iters=3)
+    out["exact_maxsim"] = {"recall": 1.0, "qps": q.shape[0] / t}
+
+    for name, r in out.items():
+        common.emit(f"table2_{name}", 1e6 / max(r["qps"], 1e-9),
+                    f"recall={r['recall']:.3f},qps={r['qps']:.0f}")
+    common.save_json("table2_qps", out)
+
+    lemur_qps = out["lemur"]["qps"]
+    best_base = max(out["muvera"]["qps"], out["token_pruning"]["qps"])
+    common.emit("table2_speedup_vs_best_baseline", 0.0,
+                f"x{lemur_qps / max(best_base, 1e-9):.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

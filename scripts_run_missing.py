@@ -1,0 +1,13 @@
+import subprocess, sys, json, pathlib
+mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+cells = [tuple(l.split("|")) for l in pathlib.Path("/tmp/missing.txt").read_text().splitlines() if l]
+for arch, shape in cells:
+    try:
+        r = subprocess.run([sys.executable,"-m","repro.launch.dryrun","--arch",arch,
+                            "--shape",shape,"--mesh",mesh],
+                           env={"PYTHONPATH":"src","PATH":"/usr/bin:/bin","HOME":"/root"}, timeout=3000)
+        rc = r.returncode
+    except Exception as e:
+        rc = repr(e)
+    print(f"=== {arch} x {shape}: rc={rc}", flush=True)
+print("DONE", flush=True)

@@ -1,0 +1,26 @@
+from repro.anns.bruteforce import mips_topk
+from repro.anns.ivf import IVFIndex, build_ivf, search_ivf
+from repro.anns.kmeans import kmeans
+from repro.anns.quantization import sq8_dequant, sq8_quant
+from repro.anns.dessert import DessertConfig, build_dessert, search_dessert
+from repro.anns.muvera import MuveraConfig, doc_fde, query_fde
+from repro.anns.token_pruning import TokenPruningIndex, build_token_pruning, search_token_pruning
+
+__all__ = [
+    "mips_topk",
+    "IVFIndex",
+    "build_ivf",
+    "search_ivf",
+    "kmeans",
+    "sq8_quant",
+    "sq8_dequant",
+    "DessertConfig",
+    "build_dessert",
+    "search_dessert",
+    "MuveraConfig",
+    "doc_fde",
+    "query_fde",
+    "TokenPruningIndex",
+    "build_token_pruning",
+    "search_token_pruning",
+]

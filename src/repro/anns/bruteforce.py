@@ -1,0 +1,44 @@
+"""Exact (brute-force) MIPS with blocked streaming top-k.
+
+The corpus is scanned in blocks; a running top-k is merged per block so peak
+memory is O(B·(k + block)) — this is the "exact inference" arm of Fig. 3 and
+the building block of the sharded retrieval step (one block per device,
+all-gather of per-shard top-k, global merge)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def mips_topk(q: jax.Array, corpus: jax.Array, k: int, block: int = 8192):
+    """q: (B, d); corpus: (m, d) -> (scores (B, k), ids (B, k))."""
+    B = q.shape[0]
+    m, d = corpus.shape
+    nb = -(-m // block)
+    pad = nb * block - m
+    cp = jnp.pad(corpus, ((0, pad), (0, 0))).reshape(nb, block, d)
+
+    init = (
+        jnp.full((B, k), -jnp.inf, jnp.float32),
+        jnp.full((B, k), -1, jnp.int32),
+    )
+
+    def step(carry, xs):
+        top_s, top_i = carry
+        cb, off = xs
+        s = (q @ cb.T).astype(jnp.float32)  # (B, block)
+        ids = off + jnp.arange(block, dtype=jnp.int32)
+        valid = ids < m
+        s = jnp.where(valid[None, :], s, -jnp.inf)
+        bs, bi = jax.lax.top_k(s, min(k, block))
+        cand_s = jnp.concatenate([top_s, bs], axis=1)
+        cand_i = jnp.concatenate([top_i, jnp.take(ids, bi)], axis=1)
+        ms, mi = jax.lax.top_k(cand_s, k)
+        return (ms, jnp.take_along_axis(cand_i, mi, axis=1)), None
+
+    offsets = (jnp.arange(nb) * block).astype(jnp.int32)
+    (top_s, top_i), _ = jax.lax.scan(step, init, (cp, offsets))
+    return top_s, top_i

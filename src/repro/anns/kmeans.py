@@ -1,0 +1,45 @@
+"""Mini-batch-free Lloyd's k-means in JAX (TPU-friendly: pure matmuls)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
+def kmeans(key, x: jax.Array, k: int, iters: int = 10, block: int = 65536):
+    """x: (n, d) -> (centroids (k, d), assignment (n,)).
+
+    Assignment by max inner product of mean-centered... no — standard
+    Euclidean: argmin ||x - c||² = argmax (x·c - ||c||²/2), computed as one
+    matmul per iteration (blocked over n).
+    """
+    n, d = x.shape
+    init_idx = jax.random.choice(key, n, (k,), replace=False)
+    cent = x[init_idx]
+
+    def assign(cent):
+        half = 0.5 * jnp.sum(jnp.square(cent), axis=1)
+
+        def blk(xb):
+            s = xb @ cent.T - half[None, :]
+            return jnp.argmax(s, axis=1)
+
+        nb = -(-n // block)
+        pad = nb * block - n
+        xp = jnp.pad(x, ((0, pad), (0, 0))).reshape(nb, block, d)
+        a = jax.lax.map(blk, xp).reshape(-1)[:n]
+        return a
+
+    def step(cent, _):
+        a = assign(cent)
+        sums = jnp.zeros((k, d), x.dtype).at[a].add(x)
+        counts = jnp.zeros((k,), x.dtype).at[a].add(1.0)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep empty clusters where they were
+        new = jnp.where(counts[:, None] > 0, new, cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent, assign(cent)

@@ -1,0 +1,93 @@
+"""MUVERA baseline (Jayaram et al., 2024): fixed-dimensional encodings.
+
+Data-oblivious single-vector reduction: R independent SimHash partitions of
+R^d into 2^k_sim buckets; a document's FDE block is the per-bucket *centroid*
+of its tokens (empty buckets backfilled with the doc centroid), a query's is
+the per-bucket *sum*; blocks are concatenated and randomly projected to
+``final_dim``.  E[<q_fde, d_fde>] approximates MaxSim (their Thm 2.1).
+
+Paper-recommended config (§6.3): R=40, k_sim=6, d_proj=d, final 10240 dims.
+This is the comparison target for claims C1/C2 — LEMUR's *learned* 1024-d
+embeddings beat these 10240-d FDEs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ConfigBase
+
+
+@dataclasses.dataclass(frozen=True)
+class MuveraConfig(ConfigBase):
+    r_reps: int = 40
+    k_sim: int = 6
+    d_proj: int = 0          # 0 => identity (d_proj = d), per paper
+    final_dim: int = 10240
+    seed: int = 7
+
+
+def _partition_params(cfg: MuveraConfig, d: int):
+    key = jax.random.PRNGKey(cfg.seed)
+    kh, kp, kf = jax.random.split(key, 3)
+    hyper = jax.random.normal(kh, (cfg.r_reps, cfg.k_sim, d))
+    d_proj = cfg.d_proj or d
+    if cfg.d_proj:
+        proj = jax.random.choice(kp, jnp.asarray([-1.0, 1.0]), (cfg.r_reps, d, d_proj))
+        proj = proj / jnp.sqrt(d_proj)
+    else:
+        proj = None
+    inner = cfg.r_reps * (2**cfg.k_sim) * d_proj
+    final = jax.random.choice(kf, jnp.asarray([-1.0, 1.0]), (inner, cfg.final_dim))
+    final = final / jnp.sqrt(cfg.final_dim)
+    return hyper, proj, final
+
+
+def _bucket_ids(tokens, hyper):
+    """tokens: (..., T, d); hyper: (R, k, d) -> (..., R, T) int32 in [0, 2^k)."""
+    bits = jnp.einsum("...td,rkd->...rtk", tokens, hyper) > 0
+    weights = 2 ** jnp.arange(hyper.shape[1])
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.int32)
+
+
+def _fde(tokens, mask, cfg: MuveraConfig, *, is_query: bool):
+    """tokens: (B, T, d); mask: (B, T) -> (B, final_dim)."""
+    d = tokens.shape[-1]
+    hyper, proj, final = _partition_params(cfg, d)
+    nb = 2**cfg.k_sim
+    b = _bucket_ids(tokens, hyper)  # (B, R, T)
+    onehot = jax.nn.one_hot(b, nb, dtype=tokens.dtype)  # (B, R, T, nb)
+    onehot = onehot * mask[:, None, :, None]
+    t = tokens
+    if proj is not None:
+        t = jnp.einsum("btd,rde->brte", tokens, proj)  # (B, R, T, d_proj)
+    else:
+        t = jnp.broadcast_to(tokens[:, None], (tokens.shape[0], cfg.r_reps, *tokens.shape[1:]))
+    sums = jnp.einsum("brtn,brte->brne", onehot, t)     # (B, R, nb, dp)
+    if is_query:
+        block = sums
+    else:
+        cnt = jnp.sum(onehot, axis=2)                   # (B, R, nb)
+        centroid = sums / jnp.maximum(cnt[..., None], 1.0)
+        # empty-bucket backfill: document centroid (approximation of MUVERA's
+        # nearest-token fill; noted in DESIGN.md §3)
+        doc_cent = jnp.sum(t * mask[:, None, :, None], axis=2) / jnp.maximum(
+            jnp.sum(mask, axis=1)[:, None, None], 1.0
+        )
+        block = jnp.where(cnt[..., None] > 0, centroid, doc_cent[:, :, None, :])
+    flat = block.reshape(block.shape[0], -1)
+    return flat @ final
+
+
+def doc_fde(tokens, mask, cfg: MuveraConfig, *, block: int = 512):
+    outs = []
+    for lo in range(0, tokens.shape[0], block):
+        outs.append(_fde(tokens[lo : lo + block], mask[lo : lo + block], cfg, is_query=False))
+    return jnp.concatenate(outs, axis=0)
+
+
+def query_fde(tokens, mask, cfg: MuveraConfig):
+    return _fde(tokens, mask, cfg, is_query=True)

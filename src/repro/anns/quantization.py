@@ -1,0 +1,22 @@
+"""Per-row symmetric int8 scalar quantization (Glass-style SQ)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sq8_quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (..., d) -> (int8 codes, fp32 per-row scales (...,))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def sq8_dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def sq8_dot(q_query: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """fp query (B, d) x int8 corpus (m, d) with per-row scales -> (B, m)."""
+    s = q_query @ codes.astype(q_query.dtype).T
+    return s * scale[None, :]

@@ -1,0 +1,98 @@
+"""PLAID-style token-level pruning baseline (§5.1 family).
+
+Pipeline (Santhanam et al. 2022a, simplified to its retrieval core):
+  1. cluster ALL corpus token embeddings (nlist = 16·sqrt(n) pow2-floored,
+     the paper's §6.3 rule);
+  2. per query token, score the centroids and probe the top-`nprobe`
+     clusters;
+  3. approximate per-document score = Σ_q max over that query token's probed
+     centroids containing the doc (centroid-interaction), accumulated by
+     scatter-max over the clusters' (token -> doc) lists;
+  4. exact MaxSim rerank of the top-k' docs.
+
+This is the representative of the token-pruning family the paper argues
+against: token-level proximity is a weak proxy for document MaxSim, so k'
+must be large for recall — which is exactly what the benchmarks show.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.kmeans import kmeans
+
+
+class TokenPruningIndex(NamedTuple):
+    centroids: jax.Array   # (nlist, d)
+    doc_lists: jax.Array   # (nlist, cap) int32 doc id per member token, -1 pad
+    counts: jax.Array      # (nlist,)
+
+
+def plaid_nlist(n_tokens: int) -> int:
+    raw = 16 * int(np.sqrt(max(n_tokens, 1)))
+    return max(16, 1 << (raw.bit_length() - 1))
+
+
+def build_token_pruning(key, doc_tokens, doc_mask, *, nlist: int = 0,
+                        kmeans_iters: int = 8, train_sample: int = 262144,
+                        cap_quantile: float = 1.0) -> TokenPruningIndex:
+    m, T, d = doc_tokens.shape
+    flat = np.asarray(doc_tokens[doc_mask])          # (n_tokens, d)
+    tok_doc = np.broadcast_to(np.arange(m)[:, None], (m, T))[np.asarray(doc_mask)]
+    n = flat.shape[0]
+    nlist = nlist or plaid_nlist(n)
+
+    sample = flat
+    if n > train_sample:
+        ridx = np.random.default_rng(0).choice(n, train_sample, replace=False)
+        sample = flat[ridx]
+    centroids, _ = kmeans(key, jnp.asarray(sample), nlist, iters=kmeans_iters)
+    half = 0.5 * jnp.sum(jnp.square(centroids), axis=1)
+    assign = np.asarray(jnp.argmax(jnp.asarray(flat) @ centroids.T - half[None, :], axis=1))
+
+    counts = np.bincount(assign, minlength=nlist)
+    cap = int(max(1, np.quantile(counts, cap_quantile) if cap_quantile < 1.0 else counts.max()))
+    doc_lists = np.full((nlist, cap), -1, np.int32)
+    pos = np.zeros(nlist, np.int64)
+    order = np.argsort(assign, kind="stable")
+    for i in order:
+        c = assign[i]
+        if pos[c] < cap:
+            doc_lists[c, pos[c]] = tok_doc[i]
+            pos[c] += 1
+    return TokenPruningIndex(centroids, jnp.asarray(doc_lists), jnp.asarray(counts, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k_prime", "m"))
+def search_token_pruning(index: TokenPruningIndex, q, q_mask, *, nprobe: int,
+                         k_prime: int, m: int):
+    """q: (B, Tq, d) -> (approx_scores (B, k'), cand_ids (B, k'))."""
+    B, Tq, d = q.shape
+    cs = jnp.einsum("bqd,cd->bqc", q, index.centroids)      # (B, Tq, nlist)
+    probe_s, probe = jax.lax.top_k(cs, nprobe)              # (B, Tq, nprobe)
+
+    def per_query(args):
+        probe_q, score_q, mask_q = args  # (Tq, nprobe), (Tq, nprobe), (Tq,)
+
+        def per_token(acc, xs):
+            pr, sc, mk = xs  # (nprobe,), (nprobe,), ()
+            docs = jnp.take(index.doc_lists, pr, axis=0)    # (nprobe, cap)
+            val = jnp.broadcast_to(sc[:, None], docs.shape)
+            val = jnp.where((docs >= 0) & mk, val, -jnp.inf)
+            # per-token best centroid-proxy score for each doc
+            tok_acc = jnp.full((m,), -jnp.inf).at[jnp.maximum(docs, 0).reshape(-1)].max(
+                val.reshape(-1)
+            )
+            return acc + jnp.maximum(tok_acc, 0.0), None
+
+        acc, _ = jax.lax.scan(
+            per_token, jnp.zeros((m,)), (probe_q, score_q, mask_q)
+        )
+        return acc
+
+    approx = jax.lax.map(per_query, (probe, probe_s, q_mask))   # (B, m)
+    return jax.lax.top_k(approx, k_prime)

@@ -1,0 +1,20 @@
+from repro.common.config import ConfigBase, field
+from repro.common.pytree import (
+    tree_cast,
+    tree_global_norm,
+    tree_map,
+    tree_size,
+    tree_zeros_like,
+)
+from repro.common.prng import PRNGSeq
+
+__all__ = [
+    "ConfigBase",
+    "field",
+    "PRNGSeq",
+    "tree_cast",
+    "tree_global_norm",
+    "tree_map",
+    "tree_size",
+    "tree_zeros_like",
+]

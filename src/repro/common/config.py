@@ -1,0 +1,92 @@
+"""Config base: frozen dataclasses with dict round-trip and CLI overrides.
+
+Every architecture / trainer / index config in the framework derives from
+``ConfigBase``.  Keeping configs as plain frozen dataclasses (instead of a
+dynamic dict) gives static typo-checking, hashability (usable as jit static
+args), and trivially serializable checkpoint manifests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import field
+from typing import Any, Type, TypeVar
+
+T = TypeVar("T", bound="ConfigBase")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigBase:
+    """Frozen dataclass with dict/json round-trip and `replace`."""
+
+    def replace(self: T, **kwargs: Any) -> T:
+        return dataclasses.replace(self, **kwargs)
+
+    def to_dict(self) -> dict:
+        def conv(v):
+            if isinstance(v, ConfigBase):
+                return v.to_dict()
+            if isinstance(v, tuple):
+                return [conv(x) for x in v]
+            return v
+
+        return {f.name: conv(getattr(self, f.name)) for f in dataclasses.fields(self)}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls: Type[T], d: dict) -> T:
+        kwargs = {}
+        for f in dataclasses.fields(cls):
+            if f.name not in d:
+                continue
+            v = d[f.name]
+            ft = f.type if isinstance(f.type, type) else None
+            if ft is not None and issubclass(ft, ConfigBase) and isinstance(v, dict):
+                v = ft.from_dict(v)
+            if isinstance(v, list):
+                v = tuple(v)
+            kwargs[f.name] = v
+        return cls(**kwargs)
+
+    def override(self: T, overrides: dict[str, Any]) -> T:
+        """Apply dotted-path CLI overrides, e.g. {"optimizer.lr": 1e-3}."""
+        out = self
+        for key, value in overrides.items():
+            parts = key.split(".")
+            out = _apply_override(out, parts, value)
+        return out
+
+
+def _apply_override(cfg: ConfigBase, parts: list[str], value: Any) -> ConfigBase:
+    name = parts[0]
+    if not hasattr(cfg, name):
+        raise KeyError(f"config {type(cfg).__name__} has no field {name!r}")
+    if len(parts) == 1:
+        cur = getattr(cfg, name)
+        if cur is not None and not isinstance(cur, type(value)) and not isinstance(cur, ConfigBase):
+            # cast strings coming from CLI to the field's runtime type
+            value = type(cur)(value)
+        return cfg.replace(**{name: value})
+    sub = getattr(cfg, name)
+    if not isinstance(sub, ConfigBase):
+        raise KeyError(f"field {name!r} is not a sub-config")
+    return cfg.replace(**{name: _apply_override(sub, parts[1:], value)})
+
+
+def parse_cli_overrides(args: list[str]) -> dict[str, Any]:
+    """Parse ``key=value`` strings, with json-ish literal coercion."""
+    out: dict[str, Any] = {}
+    for a in args:
+        if "=" not in a:
+            raise ValueError(f"override {a!r} must be key=value")
+        k, v = a.split("=", 1)
+        try:
+            out[k] = json.loads(v)
+        except json.JSONDecodeError:
+            out[k] = v
+    return out
+
+
+__all__ = ["ConfigBase", "field", "parse_cli_overrides"]

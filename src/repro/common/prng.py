@@ -1,0 +1,29 @@
+"""Deterministic PRNG key sequencing."""
+from __future__ import annotations
+
+import jax
+
+
+class PRNGSeq:
+    """An iterator of fresh PRNG keys split from one seed key.
+
+    Keeps model init code linear:  ``keys = PRNGSeq(0); w = init(next(keys))``.
+    """
+
+    def __init__(self, seed_or_key):
+        if isinstance(seed_or_key, int):
+            self._key = jax.random.PRNGKey(seed_or_key)
+        else:
+            self._key = seed_or_key
+
+    def __next__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def __iter__(self):
+        return self
+
+    def take(self, n: int):
+        keys = jax.random.split(self._key, n + 1)
+        self._key = keys[0]
+        return list(keys[1:])

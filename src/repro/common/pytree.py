@@ -1,0 +1,77 @@
+"""Small pytree helpers used across the framework (no flax/optax offline)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return tree_map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree)
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return tree_map(lambda x: x * s, tree)
+
+
+def tree_where(pred, a: Any, b: Any) -> Any:
+    return tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def named_leaves(tree: Any, prefix: str = "") -> list[tuple[str, Any]]:
+    """Flatten to (dotted_name, leaf) pairs — used by checkpointing."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((prefix + name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map with access to the dotted leaf name (for sharding-rule matching)."""
+
+    def wrap(path, leaf):
+        name = "/".join(_key_str(k) for k in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(wrap, tree)

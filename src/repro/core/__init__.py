@@ -1,0 +1,38 @@
+"""The paper's primary contribution: LEMUR — learned multi-vector retrieval.
+
+Two problem reductions (DESIGN.md §1):
+  1. multi-vector search -> supervised multi-output regression (model.py)
+  2. inference under that model -> single-vector MIPS in latent space
+     (indexer.py learns W rows = latent doc vectors; index.py serves).
+"""
+from repro.core.config import LemurConfig
+from repro.core.index import LemurIndex, build_index
+from repro.core.maxsim import (
+    maxsim_pair,
+    maxsim_scores,
+    recall_at,
+    rerank,
+    token_maxsim,
+    true_topk,
+)
+from repro.core.model import init_phi, init_psi, pool_queries, psi_apply, train_phi
+from repro.core.indexer import fit_output_layer_ols, make_training_tokens
+
+__all__ = [
+    "LemurConfig",
+    "LemurIndex",
+    "build_index",
+    "maxsim_pair",
+    "maxsim_scores",
+    "recall_at",
+    "rerank",
+    "token_maxsim",
+    "true_topk",
+    "init_psi",
+    "init_phi",
+    "pool_queries",
+    "psi_apply",
+    "train_phi",
+    "fit_output_layer_ols",
+    "make_training_tokens",
+]

@@ -1,0 +1,29 @@
+"""LEMUR configuration (paper App. A defaults)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.common.config import ConfigBase
+
+
+@dataclasses.dataclass(frozen=True)
+class LemurConfig(ConfigBase):
+    d: int = 128                 # token embedding dim (ColBERTv2: 128)
+    d_prime: int = 2048          # latent dim d' (ablated 1024/2048/4096, §6.2)
+    m_pretrain: int = 8192       # m': sampled docs as pretraining targets
+    n_train: int = 100_000       # n: token embeddings in the MLP training set
+    n_ols: int = 16_384          # n': tokens for the OLS solutions
+    lr: float = 3e-3
+    epochs: int = 100
+    batch_size: int = 512
+    grad_clip: float = 0.5
+    ridge: float = 1e-4          # OLS regularizer (numerical; paper uses plain OLS)
+    query_strategy: str = "corpus-query"  # corpus-query | corpus | query (§4.2)
+    k: int = 100                 # final top-k
+    k_prime: int = 1024          # candidates to rerank
+    anns: str = "ivf"            # ivf | exact  (HNSW/Glass -> IVF on TPU, DESIGN §3)
+    ivf_nlist: int = 0           # 0 => 16*sqrt(m) rounded down to pow2 (paper's rule)
+    ivf_nprobe: int = 32
+    sq8: bool = True             # scalar-quantize the latent corpus (Glass-style)
+    rerank_block: int = 1024     # docs per MaxSim rerank tile
+    score_dtype: str = "float32"

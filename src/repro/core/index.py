@@ -1,0 +1,107 @@
+"""LemurIndex: the Fig. 1 pipeline as one object.
+
+build:  training-token selection (§4.2) -> ψ pre-training against m' sampled
+        docs (§4.3) -> OLS output layer over the full corpus (eq. 7)
+        -> single-vector ANNS index over the rows of W.
+query:  Ψ(X) pooling -> latent MIPS for k' candidates -> exact MaxSim rerank
+        -> top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import bruteforce, ivf
+from repro.core import indexer, maxsim
+from repro.core.config import LemurConfig
+from repro.core.model import TargetStats, pool_queries, psi_apply, train_phi
+
+
+class LemurIndex(NamedTuple):
+    cfg: LemurConfig
+    psi: dict                 # feature-encoder params
+    stats: TargetStats        # target standardization (App. A)
+    W: jax.Array              # (m, d') latent doc vectors = OLS output layer
+    doc_tokens: jax.Array     # (m, Td, d) for exact rerank
+    doc_mask: jax.Array       # (m, Td)
+    ann: ivf.IVFIndex | None  # None => exact latent MIPS
+
+    @property
+    def m(self) -> int:
+        return self.W.shape[0]
+
+
+def build_index(key, corpus, cfg: LemurConfig, *, x_train: np.ndarray | None = None,
+                verbose: bool = False) -> LemurIndex:
+    """corpus: data.synthetic.MultiVectorCorpus (or any object with
+    doc_tokens/doc_mask numpy arrays)."""
+    t0 = time.time()
+    keys = jax.random.split(key, 4)
+    doc_tokens = jnp.asarray(corpus.doc_tokens)
+    doc_mask = jnp.asarray(corpus.doc_mask)
+    m = doc_tokens.shape[0]
+
+    # 1. training tokens (§4.2)
+    if x_train is None:
+        x_train = indexer.make_training_tokens(corpus, cfg, seed=0)
+    x_train = jnp.asarray(x_train)
+
+    # 2. ψ pre-training against m' sampled documents (§4.3)
+    m_pre = min(cfg.m_pretrain, m)
+    pre_idx = jax.random.choice(keys[0], m, (m_pre,), replace=False)
+    g_pre = maxsim.token_maxsim(x_train, doc_tokens[pre_idx], doc_mask[pre_idx])
+    phi, stats, losses = train_phi(keys[1], x_train, g_pre, cfg)
+    if verbose:
+        print(f"[build] psi pretrain done ({time.time()-t0:.1f}s, loss {losses[-1]:.4f})")
+
+    # 3. OLS output layer over the full corpus (eq. 7)
+    n_ols = min(cfg.n_ols, x_train.shape[0])
+    x_ols = x_train[jax.random.choice(keys[2], x_train.shape[0], (n_ols,), replace=False)]
+    W = indexer.fit_output_layer_ols(phi["psi"], x_ols, doc_tokens, doc_mask, cfg, stats)
+    if verbose:
+        print(f"[build] OLS W ({m} docs) done ({time.time()-t0:.1f}s)")
+
+    # 4. ANNS index over W
+    ann = None
+    if cfg.anns == "ivf":
+        ann = ivf.build_ivf(keys[3], W, cfg.ivf_nlist, sq8=cfg.sq8)
+    if verbose:
+        print(f"[build] index complete ({time.time()-t0:.1f}s)")
+    return LemurIndex(cfg, phi["psi"], stats, W, doc_tokens, doc_mask, ann)
+
+
+def query(index: LemurIndex, q_tokens, q_mask=None, *, k: int | None = None,
+          k_prime: int | None = None, nprobe: int | None = None,
+          use_ann: bool = True):
+    """q_tokens: (B, Tq, d) -> (scores (B, k), doc_ids (B, k))."""
+    cfg = index.cfg
+    k = k or cfg.k
+    k_prime = k_prime or cfg.k_prime
+    if q_mask is None:
+        q_mask = jnp.ones(q_tokens.shape[:2], bool)
+
+    psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
+    if use_ann and index.ann is not None:
+        _, cand = ivf.search_ivf(index.ann, psi_q, nprobe or cfg.ivf_nprobe, k_prime)
+        cand = jnp.maximum(cand, 0)  # -1 pads -> doc 0 (dup-safe: rerank dedups by score)
+    else:
+        _, cand = bruteforce.mips_topk(psi_q, index.W, k_prime)
+    return maxsim.rerank(q_tokens, q_mask, cand, index.doc_tokens, index.doc_mask, k)
+
+
+def candidates(index: LemurIndex, q_tokens, q_mask=None, *, k_prime: int,
+               nprobe: int | None = None, use_ann: bool = False):
+    """First-stage candidates only (for recall@k' ablations, Fig. 2 left)."""
+    if q_mask is None:
+        q_mask = jnp.ones(q_tokens.shape[:2], bool)
+    psi_q = pool_queries(index.psi, q_tokens, q_mask)
+    if use_ann and index.ann is not None:
+        _, cand = ivf.search_ivf(index.ann, psi_q, nprobe or index.cfg.ivf_nprobe, k_prime)
+        return cand
+    _, cand = bruteforce.mips_topk(psi_q, index.W, k_prime)
+    return cand

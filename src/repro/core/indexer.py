@@ -1,0 +1,93 @@
+"""Scalable LEMUR indexing (§4.3): frozen-ψ + per-document OLS.
+
+The Gram matrix (ΨᵀΨ + λI) is factorized ONCE; each document's latent vector
+w_j is then an independent solve against its target column
+g_j(x_i) = max_{c∈C_j}⟨c, x_i⟩ over the n' OLS training tokens.  Documents
+are therefore embarrassingly parallel — on a pod we shard the corpus over
+every device and each shard fits its own W rows (see core.distributed).
+This is also the *incremental indexing* path: adding documents never
+touches ψ or existing rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maxsim
+from repro.core.config import LemurConfig
+from repro.core.model import TargetStats, psi_apply
+from repro.data import synthetic
+
+
+def make_training_tokens(corpus, cfg: LemurConfig, seed: int = 0) -> np.ndarray:
+    """§4.2 training-set selection.  Returns (n, d) token embeddings."""
+    rng = np.random.default_rng(seed)
+    if cfg.query_strategy == "corpus-query":
+        n_docs = max(1, cfg.n_train // 8)
+        q = synthetic.queries_from_corpus_query(corpus, n_docs, q_tokens=8, seed=seed)
+        toks = q.reshape(-1, corpus.d)
+    elif cfg.query_strategy == "corpus":
+        flat = corpus.doc_tokens[corpus.doc_mask]
+        idx = rng.integers(0, flat.shape[0], size=cfg.n_train)
+        toks = flat[idx]
+    elif cfg.query_strategy == "query":
+        q = synthetic.queries_held_out(corpus, max(1, cfg.n_train // 8), q_tokens=8, seed=seed)
+        toks = q.reshape(-1, corpus.d)
+    else:
+        raise ValueError(cfg.query_strategy)
+    if toks.shape[0] > cfg.n_train:
+        toks = toks[rng.permutation(toks.shape[0])[: cfg.n_train]]
+    return np.ascontiguousarray(toks, dtype=np.float32)
+
+
+def gram_factor(psi_params, x_ols: jax.Array, ridge: float):
+    """Cholesky factor of (ΨᵀΨ + λ n' I) and the feature matrix Ψ (n', d')."""
+    feats = psi_apply(psi_params, x_ols)  # (n', d')
+    n = feats.shape[0]
+    gram = feats.T @ feats + ridge * n * jnp.eye(feats.shape[1], dtype=feats.dtype)
+    chol = jax.scipy.linalg.cho_factor(gram)
+    return chol, feats
+
+
+def fit_output_layer_ols(
+    psi_params,
+    x_ols: jax.Array,          # (n', d) OLS training tokens
+    doc_tokens: jax.Array,     # (m, Td, d)
+    doc_mask: jax.Array,       # (m, Td)
+    cfg: LemurConfig,
+    stats: TargetStats | None = None,
+    *,
+    doc_block: int = 2048,
+) -> jax.Array:
+    """Solve eq. (7) for every document.  Returns W (m, d') fp32.
+
+    Targets are standardized with the ψ-pretraining stats so W lives in the
+    same output scale the MLP was trained in (App. A)."""
+    chol, feats = gram_factor(psi_params, x_ols, cfg.ridge)
+    m = doc_tokens.shape[0]
+    ws = []
+    for lo in range(0, m, doc_block):
+        hi = min(lo + doc_block, m)
+        g = maxsim.token_maxsim(x_ols, doc_tokens[lo:hi], doc_mask[lo:hi])  # (n', mb)
+        if stats is not None:
+            g = (g - stats.mean) / stats.std
+        rhs = feats.T @ g                                  # (d', mb)
+        w = jax.scipy.linalg.cho_solve(chol, rhs)          # (d', mb)
+        ws.append(w.T)
+    return jnp.concatenate(ws, axis=0)
+
+
+def ols_solver_state(psi_params, x_ols: jax.Array, cfg: LemurConfig):
+    """Reusable solver state for incremental/distributed indexing."""
+    chol, feats = gram_factor(psi_params, x_ols, cfg.ridge)
+    return {"chol": chol, "feats": feats, "x_ols": x_ols}
+
+
+def fit_docs(solver_state, doc_tokens, doc_mask, stats: TargetStats | None = None):
+    """Fit W rows for one document block (used per-shard on the mesh)."""
+    g = maxsim.token_maxsim(solver_state["x_ols"], doc_tokens, doc_mask)
+    if stats is not None:
+        g = (g - stats.mean) / stats.std
+    rhs = solver_state["feats"].T @ g
+    return jax.scipy.linalg.cho_solve(solver_state["chol"], rhs).T

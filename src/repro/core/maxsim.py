@@ -1,0 +1,102 @@
+"""MaxSim similarity (eq. 1) — reference ops used across the framework.
+
+All functions are pure jnp and memory-bounded: the corpus axis is processed
+in blocks with ``lax.map`` so the (B, m, Tq, Td) score tensor never
+materializes beyond one block.  ``repro.kernels.maxsim`` provides the Pallas
+TPU kernel for the same contraction; these ops are its oracle and the
+portable fallback inside jitted system graphs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def maxsim_pair(q, q_mask, c, c_mask):
+    """MaxSim(X, C) for one pair.  q: (Tq, d); c: (Td, d)."""
+    s = q @ c.T  # (Tq, Td)
+    s = jnp.where(c_mask[None, :], s, NEG)
+    best = jnp.max(s, axis=-1)
+    best = jnp.where(q_mask, best, 0.0)
+    return jnp.sum(best)
+
+
+def _score_block(q, q_mask, docs, docs_mask):
+    """q: (B, Tq, d); docs: (Mb, Td, d) -> (B, Mb)."""
+    s = jnp.einsum("bqd,mtd->bmqt", q, docs, preferred_element_type=jnp.float32)
+    s = jnp.where(docs_mask[None, :, None, :], s, NEG)
+    best = jnp.max(s, axis=-1)  # (B, Mb, Tq)
+    best = jnp.where(q_mask[:, None, :], best, 0.0)
+    return jnp.sum(best, axis=-1)
+
+
+def maxsim_scores(q, q_mask, docs, docs_mask, *, block: int = 1024):
+    """MaxSim of each query against every doc.  q: (B, Tq, d);
+    docs: (m, Td, d) -> (B, m) fp32."""
+    m = docs.shape[0]
+    if m <= block:
+        return _score_block(q, q_mask, docs, docs_mask)
+    nb = -(-m // block)
+    pad = nb * block - m
+    docs_p = jnp.pad(docs, ((0, pad), (0, 0), (0, 0)))
+    mask_p = jnp.pad(docs_mask, ((0, pad), (0, 0)))
+    db = docs_p.reshape(nb, block, *docs.shape[1:])
+    mb = mask_p.reshape(nb, block, docs.shape[1])
+    out = jax.lax.map(lambda xs: _score_block(q, q_mask, xs[0], xs[1]), (db, mb))
+    return jnp.moveaxis(out, 0, 1).reshape(q.shape[0], nb * block)[:, :m]
+
+
+def token_maxsim(x, docs, docs_mask, *, block: int = 1024):
+    """g(x)_l = max_{c in C_l} <c, x>  (§3.1).  x: (n, d) -> (n, m) fp32.
+
+    This is both the OLS/MLP training target generator and the per-token
+    inner loop of reranking."""
+    m = docs.shape[0]
+
+    def blk(d, dm):
+        s = jnp.einsum("nd,mtd->nmt", x, d, preferred_element_type=jnp.float32)
+        s = jnp.where(dm[None, :, :], s, NEG)
+        return jnp.max(s, axis=-1)
+
+    if m <= block:
+        return blk(docs, docs_mask)
+    nb = -(-m // block)
+    pad = nb * block - m
+    docs_p = jnp.pad(docs, ((0, pad), (0, 0), (0, 0)))
+    mask_p = jnp.pad(docs_mask, ((0, pad), (0, 0)))
+    db = docs_p.reshape(nb, block, *docs.shape[1:])
+    mb = mask_p.reshape(nb, block, docs.shape[1])
+    out = jax.lax.map(lambda xs: blk(xs[0], xs[1]), (db, mb))
+    return jnp.moveaxis(out, 0, 1).reshape(x.shape[0], nb * block)[:, :m]
+
+
+def rerank(q, q_mask, cand_ids, docs, docs_mask, k: int):
+    """Exact MaxSim rerank of candidates (the second stage of Fig. 1).
+
+    q: (B, Tq, d); cand_ids: (B, k') -> (topk_scores (B, k), topk_ids (B, k)).
+    """
+    cd = jnp.take(docs, cand_ids, axis=0)       # (B, k', Td, d)
+    cm = jnp.take(docs_mask, cand_ids, axis=0)  # (B, k', Td)
+    s = jnp.einsum("bqd,bmtd->bmqt", q, cd, preferred_element_type=jnp.float32)
+    s = jnp.where(cm[:, :, None, :], s, NEG)
+    best = jnp.max(s, axis=-1)
+    best = jnp.where(q_mask[:, None, :], best, 0.0)
+    scores = jnp.sum(best, axis=-1)             # (B, k')
+    top, idx = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(cand_ids, idx, axis=1)
+
+
+def true_topk(q, q_mask, docs, docs_mask, k: int, *, block: int = 1024):
+    """Exact MaxSim k-nn (ground truth for recall eval)."""
+    scores = maxsim_scores(q, q_mask, docs, docs_mask, block=block)
+    return jax.lax.top_k(scores, k)
+
+
+def recall_at(retrieved, truth) -> jnp.ndarray:
+    """Recall (eq. 3): |retrieved ∩ truth| / |truth| per row."""
+    hits = (retrieved[:, :, None] == truth[:, None, :]).any(axis=1)
+    return hits.mean(axis=-1)

@@ -1,0 +1,115 @@
+"""LEMUR model (§3.1, §4.1): φ(x) = W·ψ(x),  ψ(x) = LN(GELU(W'x + b)).
+
+``train_phi`` is the paper's App. A trainer: Adam(3e-3), MSE on
+*standardized* targets, 100 epochs, batch 512, grad-clip 0.5.  The same
+routine pre-trains ψ against the m' sampled-document targets (§4.3) — the
+output layer learned here is discarded and re-fit by OLS over the full
+corpus in ``indexer.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.prng import PRNGSeq
+from repro.core.config import LemurConfig
+from repro.nn import layers
+from repro.optim import adam_init, adam_update
+
+
+def init_psi(key, d: int, d_prime: int):
+    k1, _ = jax.random.split(key)
+    return {
+        "dense": layers.init_dense(k1, d, d_prime, use_bias=True),
+        "ln": layers.init_layernorm(d_prime),
+    }
+
+
+def psi_apply(params, x):
+    """ψ: (..., d) -> (..., d')."""
+    h = layers.dense(params["dense"], x)
+    h = layers.gelu(h)
+    return layers.layernorm(params["ln"], h)
+
+
+def init_phi(key, d: int, d_prime: int, m_out: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "psi": init_psi(k1, d, d_prime),
+        "out": layers.variance_scaling(k2, (d_prime, m_out)),  # W^T (no bias, §3.1)
+    }
+
+
+def phi_apply(params, x):
+    return psi_apply(params["psi"], x) @ params["out"]
+
+
+def pool_queries(psi_params, q_tokens, q_mask=None):
+    """Ψ(X) = Σ_x ψ(x) (eq. 5).  q_tokens: (B, Tq, d) -> (B, d')."""
+    feats = psi_apply(psi_params, q_tokens)
+    if q_mask is not None:
+        feats = feats * q_mask[..., None]
+    return jnp.sum(feats, axis=-2)
+
+
+class TargetStats(NamedTuple):
+    mean: jax.Array
+    std: jax.Array
+
+
+def standardize_targets(g: jax.Array) -> tuple[jax.Array, TargetStats]:
+    """Global (scalar) standardization, per App. A."""
+    mean = jnp.mean(g)
+    std = jnp.maximum(jnp.std(g), 1e-6)
+    return (g - mean) / std, TargetStats(mean, std)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "grad_clip"))
+def _train_step(params, opt_state, xb, gb, lr, grad_clip):
+    def loss_fn(p):
+        pred = phi_apply(p, xb)
+        return jnp.mean(jnp.square(pred - gb))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt_state, metrics = adam_update(
+        grads, opt_state, params, lr=lr, grad_clip=grad_clip
+    )
+    return params, opt_state, loss
+
+
+def train_phi(
+    key,
+    x_train: jax.Array,   # (n, d) token embeddings (§4.2 training set)
+    g_train: jax.Array,   # (n, m_out) MaxSim targets (standardized inside)
+    cfg: LemurConfig,
+    *,
+    log_every: int = 0,
+):
+    """Returns (params, target_stats, losses)."""
+    n, d = x_train.shape
+    m_out = g_train.shape[1]
+    keys = PRNGSeq(key)
+    params = init_phi(next(keys), d, cfg.d_prime, m_out)
+    opt_state = adam_init(params)
+
+    g_std, stats = standardize_targets(g_train)
+    steps_per_epoch = max(1, n // cfg.batch_size)
+    losses = []
+    for epoch in range(cfg.epochs):
+        perm = jax.random.permutation(next(keys), n)
+        epoch_loss = 0.0
+        for s in range(steps_per_epoch):
+            idx = jax.lax.dynamic_slice_in_dim(perm, s * cfg.batch_size, cfg.batch_size)
+            xb = jnp.take(x_train, idx, axis=0)
+            gb = jnp.take(g_std, idx, axis=0)
+            params, opt_state, loss = _train_step(
+                params, opt_state, xb, gb, cfg.lr, cfg.grad_clip
+            )
+            epoch_loss += float(loss)
+        losses.append(epoch_loss / steps_per_epoch)
+        if log_every and (epoch + 1) % log_every == 0:
+            print(f"[train_phi] epoch {epoch + 1}/{cfg.epochs} loss {losses[-1]:.5f}")
+    return params, stats, losses

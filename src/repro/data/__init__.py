@@ -1,0 +1,3 @@
+from repro.data import loader, synthetic
+
+__all__ = ["loader", "synthetic"]

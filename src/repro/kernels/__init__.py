@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+maxsim    — token-level MaxSim (rerank + OLS target matrix; the paper's C++ loop)
+fused_psi — ψ(x) = LN(GELU(xW'+b)) fused single-pass encoder
+mips_sq8  — int8 scalar-quantized latent MIPS scan (Glass-style SQ)
+
+``ops`` holds the jit'd wrappers with CPU-interpret dispatch; ``ref`` the
+pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

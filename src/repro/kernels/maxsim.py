@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for token-level MaxSim (the paper's rerank/target hot loop).
+
+Computes g(x)_l = max_{c∈C_l}⟨c,x⟩ for a block of query tokens against a
+block of documents.  The (m, T, d) document store is viewed as an
+(m·T, d) matrix so the inner contraction is ONE MXU matmul per tile:
+
+    scores = x_tile (Bn, d) @ docs_tile^T (d, Bm·T)   ->  (Bn, Bm·T)
+    masked max over T                                  ->  (Bn, Bm)
+
+VMEM budget per tile (defaults Bn=256, Bm=64, T=32, d=128, fp32):
+  x 256·128·4 = 128 KiB, docs 64·32·128·4 = 1 MiB, scores 256·2048·4 = 2 MiB
+  — comfortably inside the ~16 MiB v5e VMEM, MXU-aligned (128 lanes).
+
+The same kernel serves both uses in the paper: the OLS/MLP *target matrix*
+(§3.1/§4.3) and exact *reranking* (ops.maxsim_scores sums the per-token
+maxima over the query's tokens).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _token_maxsim_kernel(x_ref, docs_ref, mask_ref, out_ref):
+    # x: (Bn, d); docs: (Bm, T, d); mask: (Bm, T) float (1/0); out: (Bn, Bm)
+    x = x_ref[...]
+    docs = docs_ref[...]
+    mask = mask_ref[...]
+    Bm, T, d = docs.shape
+    flat = docs.reshape(Bm * T, d)
+    s = jax.lax.dot_general(
+        x, flat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Bn, Bm*T)
+    s = s.reshape(x.shape[0], Bm, T)
+    s = jnp.where(mask[None] > 0, s, NEG)
+    out_ref[...] = jnp.max(s, axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def token_maxsim(
+    x,
+    doc_tokens,
+    doc_mask,
+    *,
+    block_n: int = 256,
+    block_m: int = 64,
+    interpret: bool = False,
+):
+    """x: (n, d); doc_tokens: (m, T, d); doc_mask: (m, T) -> (n, m) fp32.
+
+    n, m are padded to block multiples internally; d should be 128-aligned
+    for MXU efficiency (the wrapper pads if not).
+    """
+    n, d = x.shape
+    m, T, _ = doc_tokens.shape
+
+    dp = -(-d // 128) * 128
+    np_ = -(-n // block_n) * block_n
+    mp = -(-m // block_m) * block_m
+    x_p = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    docs_p = jnp.pad(doc_tokens, ((0, mp - m), (0, 0), (0, dp - d)))
+    mask_p = jnp.pad(doc_mask.astype(jnp.float32), ((0, mp - m), (0, 0)))
+
+    grid = (np_ // block_n, mp // block_m)
+    out = pl.pallas_call(
+        _token_maxsim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, T, dp), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_m, T), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=interpret,
+    )(x_p, docs_p, mask_p)
+    return out[:n, :m]

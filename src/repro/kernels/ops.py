@@ -1,0 +1,67 @@
+"""jit'd public wrappers over the Pallas kernels with platform dispatch.
+
+On TPU the Pallas path compiles natively; on this CPU container the kernels
+run in ``interpret=True`` mode (Python-interpreted kernel body — exact
+semantics, slow), so system-level code defaults to the pure-jnp reference
+unless ``use_kernel=True`` is forced (tests do force it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_psi as _fp
+from repro.kernels import maxsim as _mx
+from repro.kernels import mips_sq8 as _mq
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def token_maxsim(x, doc_tokens, doc_mask, *, use_kernel: bool | None = None,
+                 block_n: int = 256, block_m: int = 64):
+    """(n, d) x (m, T, d) -> (n, m) fp32 per-token MaxSim contributions."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.token_maxsim_ref(x, doc_tokens, doc_mask)
+    return _mx.token_maxsim(
+        x, doc_tokens, doc_mask, block_n=block_n, block_m=block_m,
+        interpret=not _on_tpu(),
+    )
+
+
+def maxsim_scores(q, q_mask, doc_tokens, doc_mask, *, use_kernel: bool | None = None):
+    """(B, Tq, d) -> (B, m): full MaxSim via the token kernel + masked sum."""
+    B, Tq, d = q.shape
+    g = token_maxsim(q.reshape(B * Tq, d), doc_tokens, doc_mask, use_kernel=use_kernel)
+    g = g.reshape(B, Tq, -1)
+    return jnp.sum(jnp.where(q_mask[:, :, None], g, 0.0), axis=1)
+
+
+def fused_psi(x, psi_params, *, use_kernel: bool | None = None, block_n: int = 256):
+    """Fused ψ(x) (see repro.core.model.psi_apply for the unfused version)."""
+    kernel = psi_params["dense"]["kernel"]
+    bias = psi_params["dense"]["bias"]
+    g = psi_params["ln"]["scale"]
+    b = psi_params["ln"]["bias"]
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.fused_psi_ref(x, kernel, bias, g, b)
+    return _fp.fused_psi(x, kernel, bias, g, b, block_n=block_n,
+                         interpret=not _on_tpu())
+
+
+def mips_sq8(q, codes, scales, *, use_kernel: bool | None = None,
+             block_q: int = 128, block_m: int = 1024):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.mips_sq8_ref(q, codes, scales)
+    return _mq.mips_sq8(q, codes, scales, block_q=block_q, block_m=block_m,
+                        interpret=not _on_tpu())

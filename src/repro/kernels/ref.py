@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` takes the same logical arguments as the corresponding
+``ops.*`` wrapper and is used by tests/benchmarks as ground truth."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def token_maxsim_ref(x, doc_tokens, doc_mask):
+    """g(x)_l = max_{c in C_l} <c, x>.   x: (n, d); docs: (m, T, d) -> (n, m)."""
+    s = jnp.einsum("nd,mtd->nmt", x, doc_tokens, preferred_element_type=jnp.float32)
+    s = jnp.where(doc_mask[None], s, NEG)
+    return jnp.max(s, axis=-1)
+
+
+def maxsim_scores_ref(q, q_mask, doc_tokens, doc_mask):
+    """MaxSim(X, C_j).  q: (B, Tq, d) -> (B, m)."""
+    s = jnp.einsum("bqd,mtd->bmqt", q, doc_tokens, preferred_element_type=jnp.float32)
+    s = jnp.where(doc_mask[None, :, None, :], s, NEG)
+    best = jnp.max(s, axis=-1)
+    best = jnp.where(q_mask[:, None, :], best, 0.0)
+    return jnp.sum(best, axis=-1)
+
+
+def fused_psi_ref(x, kernel, bias, ln_scale, ln_bias, eps: float = 1e-5):
+    """LN(GELU(x @ kernel + bias)).  x: (n, d) -> (n, d')."""
+    h = x @ kernel + bias
+    h = jax.nn.gelu(h, approximate=True)
+    hf = h.astype(jnp.float32)
+    mu = jnp.mean(hf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(hf - mu), axis=-1, keepdims=True)
+    y = (hf - mu) * jax.lax.rsqrt(var + eps) * ln_scale + ln_bias
+    return y.astype(x.dtype)
+
+
+def mips_sq8_ref(q, codes, scales):
+    """fp32 queries x int8 corpus with per-row scales.
+    q: (B, d); codes: (m, d) int8; scales: (m,) -> (B, m) fp32."""
+    return (q @ codes.astype(jnp.float32).T) * scales[None, :]

@@ -1,0 +1,444 @@
+"""Dry-run cell builders: one (architecture × input-shape) pair = one Cell.
+
+A Cell packages everything ``dryrun.py`` needs to ``jit(...).lower().compile()``
+WITHOUT allocating real data: the step function, abstract (ShapeDtypeStruct)
+arguments produced by ``jax.eval_shape`` over the real init/input builders,
+and in/out shardings resolved from the family's sharding rules.
+
+Families: lm (train/prefill/decode), gnn (full/sampled/batched), recsys
+(train/serve/retrieval), lemur (index/serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common.pytree import tree_map_with_name
+from repro.dist.sharding import (
+    GNN_RULES,
+    LM_RULES,
+    LM_RULES_FFSLICE,
+    RECSYS_RULES,
+    ShardingRules,
+)
+from repro.launch.mesh import batch_axes
+from repro.models import gnn as gnn_mod
+from repro.models import lm as lm_mod
+from repro.models import recsys as recsys_mod
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable            # positional-args step function
+    args: tuple             # pytrees of ShapeDtypeStruct
+    in_shardings: tuple
+    out_shardings: Any      # None => let GSPMD choose
+    donate_argnums: tuple = ()
+
+
+STACK_RE = __import__("re").compile(r"stack_\d+/pos_\d+/")
+
+
+def _resolve_spec(rules: ShardingRules, name: str, ndim: int):
+    """Rule lookup with scan-stack handling: leaves under stack_*/pos_*/ are
+    stacked on a leading scan axis — match the per-layer name and prepend
+    None for the scan dim."""
+    if STACK_RE.search(name):
+        base = STACK_RE.sub("", name)
+        spec = rules.spec(base, ndim - 1)
+        return P(None, *spec)
+    return rules.spec(name, ndim)
+
+
+def _shardings_from_rules(mesh, rules: ShardingRules, tree):
+    return tree_map_with_name(
+        lambda n, x: NamedSharding(mesh, _resolve_spec(rules, n, len(x.shape))), tree
+    )
+
+
+def _replicated(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _lm_rules(cfg: lm_mod.LMConfig) -> ShardingRules:
+    return LM_RULES_FFSLICE if cfg.moe_layout == "ffslice" and cfg.moe_n_experts else LM_RULES
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_abstract_state(cfg, use_adam8: bool):
+    def build():
+        params = lm_mod.init_lm(jax.random.PRNGKey(0), cfg)
+        if use_adam8:
+            from repro.optim.adam8bit import adam8_init
+
+            opt = adam8_init(params)
+        else:
+            from repro.optim import adam_init
+
+            opt = adam_init(params, moment_dtype=jnp.float32)
+        return params, opt
+
+    return jax.eval_shape(build)
+
+
+def lm_train_cell(arch, cfg: lm_mod.LMConfig, *, seq: int, global_batch: int,
+                  mesh, use_adam8: bool = False) -> Cell:
+    ba = batch_axes(mesh)
+    rules = _lm_rules(cfg)
+    params_s, opt_s = _lm_abstract_state(cfg, use_adam8)
+    tokens = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    if use_adam8:
+        from repro.optim.adam8bit import adam8_update
+
+        def loss_fn(params, tokens, labels):
+            hidden, aux = lm_mod.forward_train(params, tokens, cfg, mesh)
+            return lm_mod.lm_loss(params, hidden, labels, cfg) + cfg.aux_loss_coef * aux
+
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch["tokens"], batch["labels"])
+            params, opt, m = adam8_update(grads, opt, params)
+            return params, opt, {"loss": loss, **m}
+    else:
+        step = lm_mod.make_train_step(cfg, mesh)
+
+    psh = _shardings_from_rules(mesh, rules, params_s)
+    # optimizer moments inherit the param shardings (ZeRO); step counter repl.
+    osh = _opt_shardings(mesh, rules, opt_s)
+    bsh = {"tokens": NamedSharding(mesh, P(ba, None)),
+           "labels": NamedSharding(mesh, P(ba, None))}
+    return Cell(arch, f"train_{seq}", "train", step, (params_s, opt_s, batch),
+                (psh, osh, bsh), None, donate_argnums=(0, 1))
+
+
+def _opt_shardings(mesh, rules, opt_s):
+    """Moments follow their parameter's sharding; scalars replicated.
+
+    Works for both OptState (mu/nu mirror params) and Opt8State (Q8 leaves:
+    q mirrors the param; per-row scales take the param spec minus its last
+    axis)."""
+
+    def resolve(name, x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the state prefix ("mu/", "nu/") so rules match param names
+        for pre in ("mu/", "nu/"):
+            if name.startswith(pre):
+                name = name[len(pre):]
+        if name.endswith("/q"):
+            return NamedSharding(mesh, _resolve_spec(rules, name[:-2], x.ndim))
+        if name.endswith("/scale") and "ln" not in name and "norm" not in name:
+            spec = _resolve_spec(rules, name[: -len("/scale")], x.ndim + 1)
+            return NamedSharding(mesh, P(*spec[: x.ndim]))
+        return NamedSharding(mesh, _resolve_spec(rules, name, x.ndim))
+
+    return tree_map_with_name(resolve, opt_s)
+
+
+def _cache_shardings(cfg, mesh, caches_s, *, batch: int):
+    """KV caches: batch over (pod, data) when divisible, seq over model (plus
+    data when batch == 1 -> long-context flash-decode layout)."""
+    ba = batch_axes(mesh)
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in ba]))
+    if batch >= n_batch_shards and batch % n_batch_shards == 0:
+        bspec, sspec = ba, ("model",)
+    else:
+        bspec, sspec = None, ("data", "model") if "data" in mesh.axis_names else ("model",)
+
+    def one(x):
+        # leading dim = scan blocks; cache leaves are (nb, B, S, ...) rank 4/5
+        rest = (None,) * (len(x.shape) - 3)
+        return NamedSharding(mesh, P(None, bspec, sspec, *rest))
+
+    return jax.tree_util.tree_map(one, caches_s)
+
+
+def lm_prefill_cell(arch, cfg: lm_mod.LMConfig, *, seq: int, global_batch: int,
+                    mesh) -> Cell:
+    ba = batch_axes(mesh)
+    rules = _lm_rules(cfg)
+    params_s = jax.eval_shape(lambda: lm_mod.init_lm(jax.random.PRNGKey(0), cfg))
+    tokens = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+    cache_len = seq + 128
+
+    def step(params, tokens):
+        return lm_mod.prefill(params, tokens, cfg, cache_len, mesh)
+
+    psh = _shardings_from_rules(mesh, rules, params_s)
+    tsh = NamedSharding(mesh, P(ba, None))
+    caches_s = jax.eval_shape(lambda: lm_mod.init_cache(cfg, global_batch, cache_len))
+    csh = _cache_shardings(cfg, mesh, caches_s, batch=global_batch)
+    out_sh = (NamedSharding(mesh, P(ba, None)), csh)
+    return Cell(arch, f"prefill_{seq}", "prefill", step, (params_s, tokens),
+                (psh, tsh), out_sh)
+
+
+def lm_decode_cell(arch, cfg: lm_mod.LMConfig, *, seq: int, global_batch: int,
+                   mesh) -> Cell:
+    ba = batch_axes(mesh)
+    rules = _lm_rules(cfg)
+    params_s = jax.eval_shape(lambda: lm_mod.init_lm(jax.random.PRNGKey(0), cfg))
+    caches_s = jax.eval_shape(lambda: lm_mod.init_cache(cfg, global_batch, seq))
+    token = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+
+    def step(params, token, caches):
+        logits, new_caches = lm_mod.decode(params, token, caches, seq, cfg, mesh)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+    psh = _shardings_from_rules(mesh, rules, params_s)
+    csh = _cache_shardings(cfg, mesh, caches_s, batch=global_batch)
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in ba]))
+    tok_spec = P(ba, None) if global_batch % n_batch_shards == 0 and global_batch >= n_batch_shards else P()
+    tsh = NamedSharding(mesh, tok_spec)
+    out_sh = (NamedSharding(mesh, P(tok_spec[0]) if len(tok_spec) else P()), csh)
+    return Cell(arch, f"decode_{seq}", "decode", step, (params_s, token, caches_s),
+                (psh, tsh, csh), out_sh, donate_argnums=(2,))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def gnn_full_cell(arch, cfg: gnn_mod.GNNConfig, *, n_nodes: int, n_edges: int,
+                  mesh, n_graphs: int = 0) -> Cell:
+    axes = tuple(mesh.axis_names)
+    node_axes = batch_axes(mesh)
+    nd = int(np.prod(list(mesh.shape.values())))
+    nn_shards = int(np.prod([mesh.shape[a] for a in node_axes]))
+    n_edges = -(-n_edges // nd) * nd      # pad edges to the mesh
+    n_nodes = -(-n_nodes // nn_shards) * nn_shards  # pad nodes (mask in loss)
+    batch = {
+        "node_feat": jax.ShapeDtypeStruct((n_nodes, cfg.d_node_in), jnp.float32),
+        "edge_feat": jax.ShapeDtypeStruct((n_edges, cfg.d_edge_in), jnp.float32),
+        "senders": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        "receivers": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        "label_mask": jax.ShapeDtypeStruct((n_nodes,), jnp.float32),
+    }
+    if cfg.graph_readout:
+        batch["graph_ids"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+        batch["graph_labels"] = jax.ShapeDtypeStruct((n_graphs, cfg.d_out), jnp.float32)
+        del batch["label_mask"]
+    elif cfg.task == "classification":
+        batch["labels"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+    else:
+        batch["labels"] = jax.ShapeDtypeStruct((n_nodes, cfg.d_out), jnp.float32)
+
+    def build():
+        from repro.optim import adam_init
+
+        params = gnn_mod.init_gnn(jax.random.PRNGKey(0), cfg)
+        return params, adam_init(params)
+
+    params_s, opt_s = jax.eval_shape(build)
+    step = gnn_mod.make_train_step(cfg, mesh)
+    edge_sh = NamedSharding(mesh, P(axes))
+    node_sh = NamedSharding(mesh, P(node_axes))
+    repl = NamedSharding(mesh, P())
+    bsh = {k: node_sh for k in batch}
+    for k in ("edge_feat", "senders", "receivers"):
+        bsh[k] = edge_sh
+    if "graph_labels" in batch:
+        bsh["graph_labels"] = repl
+    return Cell(arch, f"full_{n_nodes}", "train", step,
+                (params_s, opt_s, batch),
+                (_replicated(mesh, params_s), _replicated(mesh, opt_s), bsh),
+                None, donate_argnums=(0, 1))
+
+
+def gnn_sampled_cell(arch, cfg: gnn_mod.GNNConfig, *, n_nodes: int, n_edges: int,
+                     batch_nodes: int, d_feat: int, mesh) -> Cell:
+    ba = batch_axes(mesh)
+    batch = {
+        "row_ptr": jax.ShapeDtypeStruct((n_nodes + 1,), jnp.int32),
+        "col_idx": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        "node_feat": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+        "seeds": jax.ShapeDtypeStruct((batch_nodes,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch_nodes,), jnp.int32),
+    }
+
+    def build():
+        from repro.optim import adam_init
+
+        params = gnn_mod.init_gnn(jax.random.PRNGKey(0), cfg)
+        return params, adam_init(params)
+
+    params_s, opt_s = jax.eval_shape(build)
+    base = gnn_mod.make_sampled_train_step(cfg)
+    step = lambda p, o, b: base(p, o, jax.random.PRNGKey(7), b)
+    repl = NamedSharding(mesh, P())
+    bsh = {k: repl for k in batch}
+    bsh["seeds"] = NamedSharding(mesh, P(ba))
+    bsh["labels"] = NamedSharding(mesh, P(ba))
+    return Cell(arch, "sampled", "train", step, (params_s, opt_s, batch),
+                (_replicated(mesh, params_s), _replicated(mesh, opt_s), bsh),
+                None, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_spec(cfg: recsys_mod.RecsysConfig, batch: int):
+    if cfg.model == "bst":
+        return {
+            "history": jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+            "target_item": jax.ShapeDtypeStruct((batch,), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        }
+    if cfg.model == "two_tower":
+        return {
+            "ids": jax.ShapeDtypeStruct((batch, cfg.n_fields), jnp.int32),
+            "item": jax.ShapeDtypeStruct((batch,), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        }
+    return {
+        "ids": jax.ShapeDtypeStruct((batch, cfg.n_fields), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+
+
+def recsys_cell(arch, cfg: recsys_mod.RecsysConfig, *, batch: int, mesh,
+                kind: str) -> Cell:
+    ba = batch_axes(mesh)
+    batch_spec = _recsys_batch_spec(cfg, batch)
+
+    def build():
+        from repro.optim import adam_init
+
+        params = recsys_mod.init_recsys(jax.random.PRNGKey(0), cfg)
+        return params, adam_init(params)
+
+    params_s, opt_s = jax.eval_shape(build)
+    psh = _shardings_from_rules(mesh, RECSYS_RULES, params_s)
+    osh = _opt_shardings(mesh, RECSYS_RULES, opt_s)
+    bsh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(ba) if x.ndim == 1 else P(ba, None)), batch_spec
+    )
+    if kind == "train":
+        step = recsys_mod.make_train_step(cfg, mesh)
+        return Cell(arch, f"train_{batch}", "train", step,
+                    (params_s, opt_s, batch_spec), (psh, osh, bsh), None,
+                    donate_argnums=(0, 1))
+    chunk = 32768 if batch > 65536 else 0
+    serve = recsys_mod.make_serve_step(cfg, mesh, chunk=chunk)
+    batch_spec.pop("labels", None)
+    bsh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(ba) if x.ndim == 1 else P(ba, None)), batch_spec
+    )
+    step = lambda p, b: serve(p, b)
+    return Cell(arch, f"serve_{batch}", "serve", step, (params_s, batch_spec),
+                (psh, bsh), NamedSharding(mesh, P(ba)))
+
+
+def recsys_retrieval_cell(arch, cfg: recsys_mod.RecsysConfig, *, n_candidates: int,
+                          mesh, k: int = 100) -> Cell:
+    axes = tuple(mesh.axis_names)
+    params_s = jax.eval_shape(lambda: recsys_mod.init_recsys(jax.random.PRNGKey(0), cfg))
+    psh = _shardings_from_rules(mesh, RECSYS_RULES, params_s)
+
+    nd = int(np.prod(list(mesh.shape.values())))
+    pad_to = np.lcm(nd, 65536) if cfg.model != "two_tower" else nd
+    n_candidates = -(-n_candidates // pad_to) * pad_to  # pad to mesh (and chunk)
+    if cfg.model == "two_tower":
+        batch_spec = {"ids": jax.ShapeDtypeStruct((1, cfg.n_fields), jnp.int32)}
+        cand = jax.ShapeDtypeStruct((n_candidates, cfg.out_dim), jnp.float32)
+        step = recsys_mod.make_retrieval_step(cfg, mesh, k=k)
+        bsh = {"ids": NamedSharding(mesh, P())}
+        csh = NamedSharding(mesh, P(axes, None))
+        return Cell(arch, "retrieval", "retrieval", step,
+                    (params_s, batch_spec, cand), (psh, bsh, csh),
+                    (NamedSharding(mesh, P()), NamedSharding(mesh, P())))
+
+    # CTR models: bulk-score one user against n_candidates items
+    serve = recsys_mod.make_serve_step(cfg, mesh, chunk=65536)
+    ba = batch_axes(mesh)
+    if cfg.model == "bst":
+        batch_spec = {
+            "history": jax.ShapeDtypeStruct((n_candidates, cfg.seq_len), jnp.int32),
+            "target_item": jax.ShapeDtypeStruct((n_candidates,), jnp.int32),
+        }
+    else:
+        batch_spec = {"ids": jax.ShapeDtypeStruct((n_candidates, cfg.n_fields), jnp.int32)}
+    bsh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(ba) if x.ndim == 1 else P(ba, None)), batch_spec
+    )
+
+    def step(params, batch):
+        scores = serve(params, batch)
+        return jax.lax.top_k(scores, k)
+
+    return Cell(arch, "retrieval", "retrieval", step, (params_s, batch_spec),
+                (psh, bsh), None)
+
+
+# ---------------------------------------------------------------------------
+# LEMUR cells (the paper's own serving/indexing over the production mesh)
+# ---------------------------------------------------------------------------
+
+def lemur_serve_cell(arch, cfg, *, m: int, doc_tokens: int, q_tokens: int,
+                     batch: int, mesh) -> Cell:
+    from repro.core import distributed as dist
+    from repro.core.model import init_psi
+
+    axes = tuple(mesh.axis_names)
+    nd = int(np.prod(list(mesh.shape.values())))
+    m = -(-m // nd) * nd  # pad corpus to the mesh
+    psi_s = jax.eval_shape(lambda: init_psi(jax.random.PRNGKey(0), cfg.d, cfg.d_prime))
+    sq8 = cfg.sq8
+    state_s = dist.ShardedRetrievalState(
+        psi=psi_s,
+        W=jax.ShapeDtypeStruct((m, cfg.d_prime), jnp.int8 if sq8 else jnp.bfloat16),
+        doc_tokens=jax.ShapeDtypeStruct((m, doc_tokens, cfg.d),
+                                        jnp.int8 if sq8 else jnp.bfloat16),
+        doc_mask=jax.ShapeDtypeStruct((m, doc_tokens), jnp.bool_),
+        W_scales=jax.ShapeDtypeStruct((m,), jnp.bfloat16) if sq8 else None,
+        doc_scales=jax.ShapeDtypeStruct((m, doc_tokens), jnp.bfloat16) if sq8 else None,
+    )
+    q = jax.ShapeDtypeStruct((batch, q_tokens, cfg.d), jnp.bfloat16)
+    qm = jax.ShapeDtypeStruct((batch, q_tokens), jnp.bool_)
+    serve = dist.make_serve_step(mesh, cfg)
+    corpus = NamedSharding(mesh, P(axes))
+    ssh = dist.ShardedRetrievalState(
+        psi=_replicated(mesh, psi_s), W=corpus, doc_tokens=corpus, doc_mask=corpus,
+        W_scales=corpus if sq8 else None, doc_scales=corpus if sq8 else None,
+    )
+    repl = NamedSharding(mesh, P())
+    return Cell(arch, "serve", "lemur_serve", serve, (state_s, q, qm),
+                (ssh, repl, repl), (repl, repl))
+
+
+def lemur_index_cell(arch, cfg, *, m: int, doc_tokens: int, mesh) -> Cell:
+    from repro.core import distributed as dist
+
+    axes = tuple(mesh.axis_names)
+    nd = int(np.prod(list(mesh.shape.values())))
+    m = -(-m // nd) * nd
+    dpr, npts = cfg.d_prime, cfg.n_ols
+    args = (
+        jax.ShapeDtypeStruct((dpr, dpr), jnp.float32),            # chol factor
+        jax.ShapeDtypeStruct((npts, dpr), jnp.float32),           # feats
+        jax.ShapeDtypeStruct((npts, cfg.d), jnp.float32),         # x_ols
+        jax.ShapeDtypeStruct((m, doc_tokens, cfg.d), jnp.bfloat16),
+        jax.ShapeDtypeStruct((m, doc_tokens), jnp.bool_),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    step = dist.make_index_step(mesh, cfg)
+    corpus = NamedSharding(mesh, P(axes))
+    repl = NamedSharding(mesh, P())
+    in_sh = (repl, repl, repl, corpus, corpus, repl, repl)
+    return Cell(arch, "index", "lemur_index", step, args, in_sh, corpus)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Axis semantics (DESIGN.md §4):
+  pod   — cross-pod data parallelism (DCN; gradient all-reduce / top-k merge)
+  data  — in-pod batch + ZeRO/fsdp sharding (ICI)
+  model — tensor/expert/sequence/corpus parallelism (ICI)
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Degenerate 1-chip mesh with the full axis set (CPU tests / examples)."""
+    n = len(jax.devices())
+    if n >= 4:
+        # spread over whatever local devices exist (e.g. XLA host-device tests)
+        model = 2
+        data = n // 2
+        return jax.make_mesh((data, model), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def n_devices(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))

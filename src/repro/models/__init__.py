@@ -1,0 +1,1 @@
+# Subpackages imported lazily (gnn/recsys may not exist during scaffolding).

@@ -1,0 +1,517 @@
+"""Decoder-only LM family covering all five assigned transformer archs.
+
+One config-driven implementation: GQA/MQA (qwen/granite/gemma/llama4) and
+MLA (deepseek-v3) attention; dense GeGLU/SwiGLU/GELU or MoE FFN (ep /
+ffslice expert-parallel layouts); interleaved layer patterns (llama4 dense↔
+MoE alternation + chunked-attention with full attention every 4th layer;
+deepseek's 3 dense prefix layers).
+
+Layers are grouped into repeating *blocks* and scanned (``lax.scan``) so the
+HLO is O(1) in depth — essential for compiling 61-layer models on the
+512-device dry-run mesh.  Caches, params and per-layer specs are stacked on
+the scan axis.
+
+Entry points (all jit-able, mesh-aware):
+  init_lm / forward_train / lm_loss / make_train_step
+  prefill / decode / make_prefill_step / make_decode_step
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ConfigBase
+from repro.common.prng import PRNGSeq
+from repro.nn import attention, layers, moe
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig(ConfigBase):
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 32000
+    activation: str = "silu"
+    gated: bool = True
+    mlp_bias: bool = False
+    qkv_bias: bool = False
+    norm: str = "rms"            # rms | ln
+    rope_base: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False    # gemma: multiply embeddings by sqrt(d)
+    # attention type
+    attn: str = "gqa"            # gqa | mla
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head: int = 0
+    # MoE
+    moe_n_experts: int = 0
+    moe_top_k: int = 1
+    moe_d_ff: int = 0
+    moe_shared: int = 0          # shared experts (deepseek: 1)
+    moe_layout: str = "ep"       # ep | ffslice (see nn.moe)
+    moe_period: int = 0          # 0 = dense model; 1 = every layer; 2 = alternate
+    prefix_dense_layers: int = 0 # deepseek: first 3 layers dense
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # llama4 chunked attention
+    chunk_attn: int = 0          # 0 = full; else local chunk size
+    full_attn_every: int = 0     # every Nth layer uses full attention
+    # execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    q_block: int = 512
+    kv_block: int = 512
+    loss_chunk: int = 512
+    remat: str = "full"          # none | full
+    scan_layers: bool = True
+    seq_shard: bool = True       # sequence-parallel activation sharding between
+                                 # layers (residual stream sharded T -> "model";
+                                 # keeps scan-boundary residuals O(T/|model|))
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    is_moe: bool
+    chunk: int  # 0 = full attention
+
+
+def layer_stacks(cfg: LMConfig) -> list[tuple[int, tuple[LayerSpec, ...]]]:
+    """Derive (n_blocks, block_pattern) stacks from the config."""
+    specs = []
+    for i in range(cfg.n_layers):
+        if cfg.moe_n_experts > 0 and cfg.moe_period > 0 and i >= cfg.prefix_dense_layers:
+            is_moe = ((i - cfg.prefix_dense_layers) % cfg.moe_period) == cfg.moe_period - 1
+        else:
+            is_moe = False
+        chunk = cfg.chunk_attn
+        if chunk and cfg.full_attn_every and (i + 1) % cfg.full_attn_every == 0:
+            chunk = 0
+        specs.append(LayerSpec(is_moe, chunk))
+
+    stacks: list[tuple[int, tuple[LayerSpec, ...]]] = []
+    i = 0
+    if cfg.prefix_dense_layers:
+        stacks.append((cfg.prefix_dense_layers, (specs[0],)))
+        i = cfg.prefix_dense_layers
+    rest = specs[i:]
+    if not rest:
+        return stacks
+    # find the shortest repeating pattern in the remaining layers
+    for plen in range(1, len(rest) + 1):
+        if len(rest) % plen:
+            continue
+        pat = rest[:plen]
+        if all(rest[j] == pat[j % plen] for j in range(len(rest))):
+            stacks.append((len(rest) // plen, tuple(pat)))
+            return stacks
+    stacks.append((1, tuple(rest)))
+    return stacks
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: LMConfig):
+    return (layers.init_rmsnorm(cfg.d_model, cfg.pdtype) if cfg.norm == "rms"
+            else layers.init_layernorm(cfg.d_model, cfg.pdtype))
+
+
+def _norm(cfg: LMConfig, p, x):
+    return layers.rmsnorm(p, x) if cfg.norm == "rms" else layers.layernorm(p, x)
+
+
+def _init_layer(key, cfg: LMConfig, spec: LayerSpec):
+    ks = PRNGSeq(key)
+    p: dict[str, Any] = {"ln1": _init_norm(cfg), "ln2": _init_norm(cfg)}
+    if cfg.attn == "mla":
+        p["attn"] = attention.init_mla(
+            next(ks), cfg.d_model, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+            cfg.qk_nope, cfg.qk_rope, cfg.v_head, cfg.pdtype,
+        )
+    else:
+        p["attn"] = attention.init_gqa(
+            next(ks), cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            cfg.qkv_bias, cfg.pdtype,
+        )
+    if spec.is_moe:
+        p["moe"] = moe.init_moe(
+            next(ks), cfg.moe_n_experts, cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+            gated=cfg.gated, n_shared=cfg.moe_shared, shared_d_ff=cfg.moe_d_ff or cfg.d_ff,
+            dtype=cfg.pdtype,
+        )
+    else:
+        p["mlp"] = layers.init_ffn(next(ks), cfg.d_model, cfg.d_ff, cfg.gated,
+                                   cfg.mlp_bias, cfg.pdtype)
+    return p
+
+
+def init_lm(key, cfg: LMConfig):
+    ks = PRNGSeq(key)
+    params: dict[str, Any] = {
+        "embed": layers.init_embedding(next(ks), cfg.vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": _init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.init_dense(next(ks), cfg.d_model, cfg.vocab, False, cfg.pdtype)
+    for si, (n_blocks, block) in enumerate(layer_stacks(cfg)):
+        keys = jnp.stack(ks.take(n_blocks))
+
+        def init_block(k):
+            sub = PRNGSeq(k)
+            return {
+                f"pos_{pi}": _init_layer(next(sub), cfg, spec)
+                for pi, spec in enumerate(block)
+            }
+
+        params[f"stack_{si}"] = jax.vmap(init_block)(keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _attn_train(cfg: LMConfig, p, x, positions, chunk, mesh=None):
+    if cfg.attn == "mla":
+        return attention.mla_train(
+            p, x, positions, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+            kv_lora=cfg.kv_lora, rope_base=cfg.rope_base, kv_block=cfg.kv_block,
+            q_block=cfg.q_block, mesh=mesh,
+        )
+    return attention.gqa_train(
+        p, x, positions, rope_base=cfg.rope_base, chunk=chunk or None,
+        q_block=cfg.q_block, kv_block=cfg.kv_block, mesh=mesh,
+    )
+
+
+def _layer_train(cfg: LMConfig, spec: LayerSpec, p, x, positions, mesh):
+    h = _norm(cfg, p["ln1"], x)
+    x = x + _attn_train(cfg, p["attn"], h, positions, spec.chunk, mesh)
+    h = _norm(cfg, p["ln2"], x)
+    if spec.is_moe:
+        if mesh is not None:
+            y, aux = moe.moe_apply(
+                p["moe"], h, layout=cfg.moe_layout, n_experts=cfg.moe_n_experts,
+                top_k=cfg.moe_top_k, mesh=mesh, capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation,
+            )
+        else:
+            y, aux = moe.moe_apply_dense(
+                p["moe"], h, n_experts=cfg.moe_n_experts, top_k=cfg.moe_top_k,
+                activation=cfg.activation,
+            )
+    else:
+        y, aux = layers.ffn(p["mlp"], h, cfg.activation), 0.0
+    return x + y, aux
+
+
+def _seq_constraint(cfg: LMConfig, x, mesh):
+    """Sequence-parallel residual-stream constraint (Korthikanti et al.)."""
+    if mesh is None or not cfg.seq_shard or "model" not in mesh.axis_names:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(batch_axes, "model", None))
+    )
+
+
+def forward_train(params, tokens, cfg: LMConfig, mesh=None):
+    """tokens: (B, T) -> (hidden (B, T, d), aux_loss)."""
+    B, T = tokens.shape
+    x = layers.embed(params["embed"], tokens).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (n_blocks, block) in enumerate(layer_stacks(cfg)):
+        stack = params[f"stack_{si}"]
+
+        def block_fn(x, bp):
+            aux_b = jnp.zeros((), jnp.float32)
+            for pi, spec in enumerate(block):
+                x, aux = _layer_train(cfg, spec, bp[f"pos_{pi}"], x, positions, mesh)
+                aux_b = aux_b + aux
+            x = _seq_constraint(cfg, x, mesh)
+            return x, aux_b
+
+        if cfg.remat == "full":
+            block_fn = jax.checkpoint(block_fn)
+        x, auxs = jax.lax.scan(lambda c, bp: block_fn(c, bp), x, stack)
+        aux_total = aux_total + jnp.sum(auxs)
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def lm_loss(params, hidden, labels, cfg: LMConfig):
+    """Chunked softmax cross-entropy (never materializes (B, T, V))."""
+    B, T, d = hidden.shape
+    chunk = min(cfg.loss_chunk, T)
+    nb = T // chunk if T % chunk == 0 else 1
+    chunk = T // nb
+
+    def readout(h):
+        if cfg.tie_embeddings:
+            return layers.embed_logits(params["embed"], h)
+        return layers.dense(params["head"], h)
+
+    def chunk_loss(carry, xs):
+        h, y = xs  # (B, chunk, d), (B, chunk)
+        logits = readout(h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    hs = jnp.moveaxis(hidden.reshape(B, nb, chunk, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, nb, chunk), 1, 0)
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (B * T)
+
+
+def make_train_step(cfg: LMConfig, mesh=None, *, optimizer=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    from repro.optim import adam_update
+
+    def loss_fn(params, tokens, labels):
+        hidden, aux = forward_train(params, tokens, cfg, mesh)
+        loss = lm_loss(params, hidden, labels, cfg)
+        return loss + cfg.aux_loss_coef * aux, (loss, aux)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        (tot, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, labels
+        )
+        params, opt_state, om = adam_update(
+            grads, opt_state, params, lr=1e-3, grad_clip=1.0
+        )
+        metrics = {"loss": loss, "aux_loss": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with stacked caches
+# ---------------------------------------------------------------------------
+
+def _attn_prefill(cfg, p, x, positions, cache_len, chunk, mesh=None):
+    if cfg.attn == "mla":
+        return attention.mla_prefill(
+            p, x, positions, cache_len, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+            kv_lora=cfg.kv_lora, rope_base=cfg.rope_base, kv_block=cfg.kv_block,
+            q_block=cfg.q_block, mesh=mesh,
+        )
+    return attention.gqa_prefill(
+        p, x, positions, cache_len, rope_base=cfg.rope_base, chunk=chunk or None,
+        q_block=cfg.q_block, kv_block=cfg.kv_block, mesh=mesh,
+    )
+
+
+def _attn_decode(cfg, p, x, cache, kv_len, chunk):
+    if cfg.attn == "mla":
+        return attention.mla_decode(
+            p, x, cache, kv_len, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+            kv_lora=cfg.kv_lora, rope_base=cfg.rope_base,
+        )
+    return attention.gqa_decode(p, x, cache, kv_len, rope_base=cfg.rope_base,
+                                chunk=chunk or None)
+
+
+def _layer_serve(cfg, spec, p, x, mesh, attn_fn):
+    h = _norm(cfg, p["ln1"], x)
+    a, cache = attn_fn(p["attn"], h)
+    x = x + a
+    h = _norm(cfg, p["ln2"], x)
+    if spec.is_moe:
+        if mesh is not None:
+            y, _ = moe.moe_apply(
+                p["moe"], h, layout=cfg.moe_layout, n_experts=cfg.moe_n_experts,
+                top_k=cfg.moe_top_k, mesh=mesh, capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation,
+            )
+        else:
+            y, _ = moe.moe_apply_dense(
+                p["moe"], h, n_experts=cfg.moe_n_experts, top_k=cfg.moe_top_k,
+                activation=cfg.activation,
+            )
+    else:
+        y = layers.ffn(p["mlp"], h, cfg.activation)
+    return x + y, cache
+
+
+def prefill(params, tokens, cfg: LMConfig, cache_len: int, mesh=None):
+    """Returns (last_token_logits, caches).  caches: list per stack of stacked
+    per-layer caches (leading dim n_blocks)."""
+    B, T = tokens.shape
+    x = layers.embed(params["embed"], tokens).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    caches = []
+    for si, (n_blocks, block) in enumerate(layer_stacks(cfg)):
+        stack = params[f"stack_{si}"]
+
+        def block_fn(x, bp):
+            cs = {}
+            for pi, spec in enumerate(block):
+                attn_fn = lambda p, h, _spec=spec: _attn_prefill(
+                    cfg, p, h, positions, cache_len, _spec.chunk, mesh
+                )
+                x, c = _layer_serve(cfg, spec, bp[f"pos_{pi}"], x, mesh, attn_fn)
+                cs[f"pos_{pi}"] = c
+            return x, cs
+
+        x, stack_caches = jax.lax.scan(block_fn, x, stack)
+        caches.append(stack_caches)
+    x = _norm(cfg, params["final_norm"], x)
+    last = x[:, -1:]
+    logits = (layers.embed_logits(params["embed"], last) if cfg.tie_embeddings
+              else layers.dense(params["head"], last))
+    return logits[:, 0], caches
+
+
+def decode(params, token, caches, kv_len, cfg: LMConfig, mesh=None):
+    """One decode step.  token: (B, 1) int32; kv_len includes the new token.
+    Returns (logits (B, vocab), new_caches)."""
+    x = layers.embed(params["embed"], token).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cfg.cdtype)
+
+    new_caches = []
+    for si, (n_blocks, block) in enumerate(layer_stacks(cfg)):
+        stack = params[f"stack_{si}"]
+
+        def block_fn(x, xs):
+            bp, bc = xs
+            ncs = {}
+            for pi, spec in enumerate(block):
+                attn_fn = lambda p, h, _spec=spec, _c=bc[f"pos_{pi}"]: _attn_decode(
+                    cfg, p, h, _c, kv_len, _spec.chunk
+                )
+                x, c = _layer_serve(cfg, spec, bp[f"pos_{pi}"], x, mesh, attn_fn)
+                ncs[f"pos_{pi}"] = c
+            return x, ncs
+
+        x, ncache = jax.lax.scan(block_fn, x, (stack, caches[si]))
+        new_caches.append(ncache)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = (layers.embed_logits(params["embed"], x) if cfg.tie_embeddings
+              else layers.dense(params["head"], x))
+    return logits[:, 0], new_caches
+
+
+def init_cache(cfg: LMConfig, batch: int, cache_len: int):
+    """Zero KV caches matching prefill()'s output structure (for decode-only
+    dry-run cells and serving restarts).  dtype follows compute_dtype."""
+    caches = []
+    for n_blocks, block in layer_stacks(cfg):
+        stack_cache = {}
+        for pi, spec in enumerate(block):
+            if cfg.attn == "mla":
+                c = (
+                    jnp.zeros((n_blocks, batch, cache_len, cfg.kv_lora), cfg.cdtype),
+                    jnp.zeros((n_blocks, batch, cache_len, cfg.qk_rope), cfg.cdtype),
+                )
+            else:
+                c = (
+                    jnp.zeros((n_blocks, batch, cache_len, cfg.n_kv_heads, cfg.head_dim), cfg.cdtype),
+                    jnp.zeros((n_blocks, batch, cache_len, cfg.n_kv_heads, cfg.head_dim), cfg.cdtype),
+                )
+            stack_cache[f"pos_{pi}"] = c
+        caches.append(stack_cache)
+    return caches
+
+
+def make_prefill_step(cfg: LMConfig, cache_len: int, mesh=None):
+    def step(params, tokens):
+        return prefill(params, tokens, cfg, cache_len, mesh)
+
+    return step
+
+
+def make_decode_step(cfg: LMConfig, mesh=None):
+    def step(params, token, caches, kv_len):
+        logits, new_caches = decode(params, token, caches, kv_len, cfg, mesh)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_caches
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# parameter / FLOP accounting (roofline §g)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: LMConfig) -> int:
+    import numpy as np
+
+    n = cfg.vocab * cfg.d_model  # embed
+    if not cfg.tie_embeddings:
+        n += cfg.vocab * cfg.d_model
+    for nb, block in layer_stacks(cfg):
+        per_block = 0
+        for spec in block:
+            if cfg.attn == "mla":
+                per_block += cfg.d_model * cfg.q_lora
+                per_block += cfg.q_lora * cfg.n_heads * (cfg.qk_nope + cfg.qk_rope)
+                per_block += cfg.d_model * (cfg.kv_lora + cfg.qk_rope)
+                per_block += cfg.kv_lora * cfg.n_heads * (cfg.qk_nope + cfg.v_head)
+                per_block += cfg.n_heads * cfg.v_head * cfg.d_model
+            else:
+                per_block += cfg.d_model * cfg.head_dim * (cfg.n_heads + 2 * cfg.n_kv_heads)
+                per_block += cfg.n_heads * cfg.head_dim * cfg.d_model
+            if spec.is_moe:
+                dff = cfg.moe_d_ff or cfg.d_ff
+                mats = 3 if cfg.gated else 2
+                per_block += cfg.moe_n_experts * mats * cfg.d_model * dff
+                per_block += cfg.d_model * cfg.moe_n_experts
+                if cfg.moe_shared:
+                    per_block += mats * cfg.d_model * dff * cfg.moe_shared
+            else:
+                mats = 3 if cfg.gated else 2
+                per_block += mats * cfg.d_model * cfg.d_ff
+        n += nb * per_block
+    return int(n)
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Active params per token (MoE: only routed top-k + shared)."""
+    if not cfg.moe_n_experts:
+        return param_count(cfg)
+    full = param_count(cfg)
+    dff = cfg.moe_d_ff or cfg.d_ff
+    mats = 3 if cfg.gated else 2
+    n_moe_layers = sum(
+        nb * sum(1 for s in block if s.is_moe) for nb, block in layer_stacks(cfg)
+    )
+    inactive = n_moe_layers * (cfg.moe_n_experts - cfg.moe_top_k) * mats * cfg.d_model * dff
+    return int(full - inactive)

@@ -1,0 +1,150 @@
+"""Functional NN layers (init/apply pairs over plain dict pytrees).
+
+No flax offline — this is the framework's module substrate.  Conventions:
+
+* ``init_*(key, ...) -> params`` returns a dict pytree of fp32 arrays.
+* ``apply`` functions are pure; compute dtype follows the input dtype
+  (cast params at the call site via the dtype policy in the model).
+* weight layout is always ``(d_in, d_out)`` so that logical sharding rules
+  can be written as (fsdp-axis, tensor-axis) uniformly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def variance_scaling(key, shape, scale: float = 1.0, mode: str = "fan_in", dtype=jnp.float32):
+    fan_in, fan_out = _fans(shape)
+    denom = {"fan_in": fan_in, "fan_out": fan_out, "fan_avg": (fan_in + fan_out) / 2}[mode]
+    std = np.sqrt(scale / max(denom, 1.0))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def _fans(shape):
+    if len(shape) < 1:
+        return 1.0, 1.0
+    if len(shape) == 1:
+        return float(shape[0]), float(shape[0])
+    rf = float(np.prod(shape[:-2])) if len(shape) > 2 else 1.0
+    return float(shape[-2]) * rf, float(shape[-1]) * rf
+
+
+def init_dense(key, d_in: int, d_out: int, use_bias: bool = False, dtype=jnp.float32):
+    p = {"kernel": variance_scaling(key, (d_in, d_out), dtype=dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"embedding": jax.random.normal(key, (vocab, d), jnp.float32).astype(dtype) * (d**-0.5)}
+
+
+def embed(params, ids):
+    return jnp.take(params["embedding"], ids, axis=0)
+
+
+def embed_logits(params, x):
+    """Tied-embedding readout: (..., d) @ (d, vocab)."""
+    return x @ params["embedding"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / gated FFN
+# ---------------------------------------------------------------------------
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "gelu": gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def init_ffn(key, d_model: int, d_ff: int, gated: bool, use_bias: bool = False, dtype=jnp.float32):
+    """Dense FFN.  ``gated=True`` gives GeGLU/SwiGLU layout (wi_0 gate, wi_1 up)."""
+    k0, k1, k2 = jax.random.split(key, 3)
+    p = {"wo": init_dense(k2, d_ff, d_model, use_bias, dtype)}
+    if gated:
+        p["wi_0"] = init_dense(k0, d_model, d_ff, use_bias, dtype)
+        p["wi_1"] = init_dense(k1, d_model, d_ff, use_bias, dtype)
+    else:
+        p["wi"] = init_dense(k0, d_model, d_ff, use_bias, dtype)
+    return p
+
+
+def ffn(params, x, activation: str = "gelu"):
+    act = ACTIVATIONS[activation]
+    if "wi_0" in params:
+        h = act(dense(params["wi_0"], x)) * dense(params["wi_1"], x)
+    else:
+        h = act(dense(params["wi"], x))
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# MLP (generic, used by recsys towers / gnn / lemur)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dims: tuple[int, ...], use_bias: bool = True, dtype=jnp.float32):
+    """dims = (d_in, h1, ..., d_out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer_{i}": init_dense(keys[i], dims[i], dims[i + 1], use_bias, dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(params, x, activation: str = "relu", final_activation: bool = False):
+    act = ACTIVATIONS[activation]
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"layer_{i}"], x)
+        if i < n - 1 or final_activation:
+            x = act(x)
+    return x

@@ -1,0 +1,15 @@
+from repro.optim.adam import OptState, adam_init, adam_update, adamw
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compress import ef_int8_allreduce, quantize_int8, dequantize_int8
+
+__all__ = [
+    "OptState",
+    "adam_init",
+    "adam_update",
+    "adamw",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "ef_int8_allreduce",
+    "quantize_int8",
+    "dequantize_int8",
+]

@@ -1,0 +1,87 @@
+"""Adam / AdamW on pytrees (no optax offline).
+
+Matches the paper's App. A trainer: Adam, lr 3e-3, grad-clip 0.5.  Optimizer
+state mirrors the parameter pytree so it inherits the parameters' logical
+sharding (ZeRO: the m/v moments are sharded exactly like the weights).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_global_norm, tree_map
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam_init(params: Any, moment_dtype=jnp.float32) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=tree_map(zeros, params),
+        nu=tree_map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adam_update(
+    grads: Any,
+    state: OptState,
+    params: Any,
+    *,
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 0.5,
+):
+    """Returns (new_params, new_state, metrics)."""
+    if grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    else:
+        gnorm = tree_global_norm(grads)
+
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+    flat = tree_map(upd, params, grads, state.mu, state.nu)
+    new_params = tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr_t}
+    return new_params, OptState(step, new_mu, new_nu), metrics
+
+
+def adamw(**kwargs):
+    """Convenience: partial of adam_update with weight decay defaulting to 0.1."""
+    kwargs.setdefault("weight_decay", 0.1)
+
+    def update(grads, state, params):
+        return adam_update(grads, state, params, **kwargs)
+
+    return update

@@ -1,0 +1,3 @@
+from repro.train.trainer import TrainerConfig, TrainLoop
+
+__all__ = ["TrainerConfig", "TrainLoop"]

@@ -1,0 +1,23 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device farm is ONLY for
+# launch/dryrun.py).  Some distributed tests spawn subprocesses with their
+# own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    from repro.data import synthetic
+
+    return synthetic.make_corpus(m=300, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=0)

@@ -1,0 +1,75 @@
+"""Synthetic data generators + sharded loader."""
+import numpy as np
+import pytest
+
+from repro.data import loader, synthetic
+
+
+def test_corpus_statistics():
+    c = synthetic.make_corpus(m=500, d=32, avg_tokens=20, max_tokens=32, seed=0)
+    assert c.doc_tokens.shape == (500, 32, 32)
+    counts = c.doc_mask.sum(1)
+    assert counts.min() >= 4 and counts.max() <= 32
+    assert abs(counts.mean() - 20) < 3
+    # unit-norm valid tokens, zero padding
+    norms = np.linalg.norm(c.doc_tokens, axis=-1)
+    assert np.allclose(norms[c.doc_mask], 1.0, atol=1e-5)
+    assert np.allclose(norms[~c.doc_mask], 0.0)
+
+
+def test_query_strategies_shapes(tiny_corpus):
+    for fn in (synthetic.queries_from_corpus_query, synthetic.queries_from_corpus,
+               synthetic.queries_held_out):
+        q = fn(tiny_corpus, 10, q_tokens=6)
+        assert q.shape == (10, 6, tiny_corpus.d)
+        assert np.isfinite(q).all()
+
+
+def test_corpus_query_tokens_near_source_docs(tiny_corpus):
+    """corpus-query queries must be recognizably derived from corpus docs."""
+    q = synthetic.queries_from_corpus_query(tiny_corpus, 5, q_tokens=4,
+                                            encoder_noise=0.0, seed=3)
+    flat = tiny_corpus.doc_tokens[tiny_corpus.doc_mask]
+    sims = q.reshape(-1, tiny_corpus.d) @ flat.T
+    assert (sims.max(axis=1) > 0.99).all()
+
+
+def test_mesh_graph_csr_consistent():
+    g = synthetic.make_mesh_graph(100, seed=0)
+    assert g.row_ptr[-1] == len(g.col_idx)
+    # receivers sorted (CSR by receiver)
+    assert (np.diff(g.receivers) >= 0).all()
+    deg = np.diff(g.row_ptr)
+    assert (deg >= 0).all() and deg.sum() == len(g.senders)
+
+
+def test_clicks_labels_and_vocab_bounds():
+    vs = np.array([50, 100, 10])
+    d = synthetic.make_clicks(200, 3, vs, hist_len=5, n_items=77)
+    assert d["ids"].shape == (200, 3)
+    for f in range(3):
+        assert d["ids"][:, f].max() < vs[f]
+    assert set(np.unique(d["labels"])) <= {0.0, 1.0}
+    assert d["history"].max() < 77
+
+
+def test_lm_token_batches():
+    it = synthetic.lm_token_batches(100, 4, 16, 3)
+    batches = list(it)
+    assert len(batches) == 3
+    toks, labels = batches[0]
+    assert toks.shape == (4, 16) and labels.shape == (4, 16)
+    assert (labels[:, :-1] == toks[:, 1:]).all()
+
+
+def test_sharded_loader_prefetch():
+    batches = [np.full((4,), i, np.float32) for i in range(5)]
+    out = list(loader.ShardedLoader(iter(batches), prefetch=2))
+    assert len(out) == 5
+    for i, b in enumerate(out):
+        assert float(b[0]) == i
+
+
+def test_local_batch_slicer():
+    g = np.arange(12)
+    assert (loader.local_batch_slicer(g, 1, 3) == np.array([4, 5, 6, 7])).all()

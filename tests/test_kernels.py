@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fused_psi import fused_psi
+from repro.kernels.maxsim import token_maxsim
+from repro.kernels.mips_sq8 import mips_sq8
+
+
+@pytest.mark.parametrize("n,m,T,d,bn,bm", [
+    (16, 16, 4, 16, 8, 8),
+    (33, 17, 7, 24, 16, 8),     # non-divisible everything (padding path)
+    (64, 96, 12, 128, 32, 16),  # d already MXU-aligned
+])
+def test_token_maxsim_shapes(n, m, T, d, bn, bm):
+    rng = np.random.default_rng(n * m)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((m, T, d)), jnp.float32)
+    mask = jnp.asarray(rng.random((m, T)) > 0.3)
+    mask = mask.at[:, 0].set(True)
+    out = token_maxsim(x, docs * mask[..., None], mask, block_n=bn, block_m=bm,
+                       interpret=True)
+    want = ref.token_maxsim_ref(x, docs * mask[..., None], mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_token_maxsim_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((24, 32)), dtype)
+    docs = jnp.asarray(rng.standard_normal((20, 5, 32)), dtype)
+    mask = jnp.ones((20, 5), bool)
+    out = token_maxsim(x, docs, mask, block_n=8, block_m=4, interpret=True)
+    want = ref.token_maxsim_ref(x.astype(jnp.float32), docs.astype(jnp.float32), mask)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,dp,bn", [
+    (16, 16, 32, 8),
+    (33, 24, 64, 16),
+    (64, 128, 256, 32),
+])
+def test_fused_psi_shapes(n, d, dp, bn):
+    rng = np.random.default_rng(n + dp)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((d, dp)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(dp) * 0.01, jnp.float32)
+    g = jnp.asarray(1 + 0.1 * rng.standard_normal(dp), jnp.float32)
+    beta = jnp.asarray(0.1 * rng.standard_normal(dp), jnp.float32)
+    out = fused_psi(x, k, b, g, beta, block_n=bn, interpret=True)
+    want = ref.fused_psi_ref(x, k, b, g, beta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_fused_psi_matches_model_psi():
+    """Kernel == repro.core.model.psi_apply (the system-level contract)."""
+    from repro.core.model import init_psi, psi_apply
+
+    rng = np.random.default_rng(0)
+    params = init_psi(jax.random.PRNGKey(0), 24, 64)
+    x = jnp.asarray(rng.standard_normal((40, 24)), jnp.float32)
+    out = fused_psi(
+        x, params["dense"]["kernel"], params["dense"]["bias"],
+        params["ln"]["scale"], params["ln"]["bias"], block_n=16, interpret=True,
+    )
+    want = psi_apply(params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,m,d,bq,bm", [
+    (8, 32, 16, 8, 16),
+    (17, 41, 24, 8, 16),
+    (32, 128, 64, 16, 64),
+])
+def test_mips_sq8_shapes(B, m, d, bq, bm):
+    rng = np.random.default_rng(B * m)
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    codes = jnp.asarray(rng.integers(-127, 128, (m, d)), jnp.int8)
+    scales = jnp.asarray(rng.random(m) + 0.1, jnp.float32)
+    out = mips_sq8(q, codes, scales, block_q=bq, block_m=bm, interpret=True)
+    want = ref.mips_sq8_ref(q, codes, scales)
+    denom = max(float(jnp.max(jnp.abs(want))), 1.0)
+    assert float(jnp.max(jnp.abs(out - want))) / denom < 1e-4
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    """On CPU the ops wrappers default to the reference implementation."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((6, 4, 16)), jnp.float32)
+    mask = jnp.ones((6, 4), bool)
+    out = ops.token_maxsim(x, docs, mask)
+    want = ref.token_maxsim_ref(x, docs, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+
+def test_ops_maxsim_scores_consistency():
+    from repro.core import maxsim
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((3, 5, 16)), jnp.float32)
+    qm = jnp.asarray(rng.random((3, 5)) > 0.3)
+    docs = jnp.asarray(rng.standard_normal((9, 4, 16)), jnp.float32)
+    dm = jnp.ones((9, 4), bool)
+    out = ops.maxsim_scores(q, qm, docs, dm, use_kernel=True)
+    want = maxsim.maxsim_scores(q, qm, docs, dm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)

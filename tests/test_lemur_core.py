@@ -1,0 +1,137 @@
+"""LEMUR model/indexer invariants: pooling linearity, OLS optimality, e2e recall."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LemurConfig, indexer, maxsim
+from repro.core.model import (
+    init_phi,
+    init_psi,
+    phi_apply,
+    pool_queries,
+    psi_apply,
+    standardize_targets,
+    train_phi,
+)
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_pooling_linearity():
+    """Ψ(X1 ∪ X2) = Ψ(X1) + Ψ(X2) (eq. 5 — the reduction's linchpin)."""
+    rng = np.random.default_rng(0)
+    psi = init_psi(jax.random.PRNGKey(0), 16, 32)
+    x1 = jnp.asarray(rng.standard_normal((2, 3, 16)), jnp.float32)
+    x2 = jnp.asarray(rng.standard_normal((2, 5, 16)), jnp.float32)
+    both = jnp.concatenate([x1, x2], axis=1)
+    p = pool_queries(psi, both)
+    np.testing.assert_allclose(
+        np.asarray(p), np.asarray(pool_queries(psi, x1) + pool_queries(psi, x2)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_phi_factorizes_through_psi():
+    """f(X) ≈ W Ψ(X): summing per-token outputs == pooled-then-projected (eq. 5)."""
+    rng = np.random.default_rng(1)
+    phi = init_phi(jax.random.PRNGKey(1), 16, 32, 50)
+    x = jnp.asarray(rng.standard_normal((7, 16)), jnp.float32)
+    per_token = phi_apply(phi, x).sum(axis=0)
+    pooled = pool_queries(phi["psi"], x[None]) @ phi["out"]
+    np.testing.assert_allclose(np.asarray(per_token), np.asarray(pooled[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ols_residual_orthogonality(seed):
+    """The OLS solution's residual is orthogonal to the features (exact-min
+    certificate for eq. 7, up to the ridge term)."""
+    rng = np.random.default_rng(seed)
+    n, dp = 64, 8
+    feats = jnp.asarray(rng.standard_normal((n, dp)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    ridge = 1e-6
+    gram = feats.T @ feats + ridge * n * jnp.eye(dp)
+    w = jnp.linalg.solve(gram, feats.T @ g)
+    resid = g - feats @ w
+    # Xᵀr = λ n w
+    np.testing.assert_allclose(
+        np.asarray(feats.T @ resid), np.asarray(ridge * n * w), rtol=1e-2, atol=1e-3
+    )
+
+
+def test_ols_beats_random_beta(tiny_corpus):
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=64, n_train=512, n_ols=256,
+                      epochs=2, ridge=1e-4)
+    rng = np.random.default_rng(0)
+    psi = init_psi(jax.random.PRNGKey(0), 16, 32)
+    x = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    docs = jnp.asarray(tiny_corpus.doc_tokens[:40])
+    mask = jnp.asarray(tiny_corpus.doc_mask[:40])
+    W = indexer.fit_output_layer_ols(psi, x, docs, mask, cfg)
+    feats = psi_apply(psi, x)
+    g = maxsim.token_maxsim(x, docs, mask)
+    mse_ols = float(jnp.mean(jnp.square(feats @ W.T - g)))
+    for seed in range(3):
+        W2 = W + 0.05 * jnp.asarray(np.random.default_rng(seed).standard_normal(W.shape),
+                                    jnp.float32)
+        mse2 = float(jnp.mean(jnp.square(feats @ W2.T - g)))
+        assert mse_ols <= mse2 + 1e-6
+
+
+def test_incremental_indexing_matches_batch(tiny_corpus):
+    """fit_docs on shards == fit_output_layer_ols on the whole corpus (the
+    embarrassingly-parallel indexing property, §4.3)."""
+    cfg = LemurConfig(d=16, d_prime=32, ridge=1e-4)
+    rng = np.random.default_rng(0)
+    psi = init_psi(jax.random.PRNGKey(0), 16, 32)
+    x = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    docs = jnp.asarray(tiny_corpus.doc_tokens[:30])
+    mask = jnp.asarray(tiny_corpus.doc_mask[:30])
+    W = indexer.fit_output_layer_ols(psi, x, docs, mask, cfg)
+    state = indexer.ols_solver_state(psi, x, cfg)
+    w_a = indexer.fit_docs(state, docs[:13], mask[:13])
+    w_b = indexer.fit_docs(state, docs[13:], mask[13:])
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([w_a, w_b])), np.asarray(W),
+                               rtol=5e-3, atol=1e-3)  # fp32 GEMM re-association across block splits
+
+
+def test_train_phi_reduces_loss(tiny_corpus):
+    cfg = LemurConfig(d=16, d_prime=64, epochs=6, batch_size=64, n_train=256)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    docs = jnp.asarray(tiny_corpus.doc_tokens[:32])
+    mask = jnp.asarray(tiny_corpus.doc_mask[:32])
+    g = maxsim.token_maxsim(x, docs, mask)
+    params, stats, losses = train_phi(jax.random.PRNGKey(0), x, g, cfg)
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_standardize_targets_roundtrip():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((50, 7)) * 3 + 2, jnp.float32)
+    gs, stats = standardize_targets(g)
+    assert abs(float(gs.mean())) < 1e-5
+    assert abs(float(gs.std()) - 1) < 1e-4
+    np.testing.assert_allclose(np.asarray(gs * stats.std + stats.mean), np.asarray(g),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_e2e_candidate_recall(tiny_corpus):
+    """Exact-latent candidates at k'=m recover ALL true neighbors (recall 1)."""
+    from repro.core.index import build_index, candidates
+
+    from repro.data import synthetic
+
+    cfg = LemurConfig(d=16, d_prime=64, m_pretrain=128, n_train=1024, n_ols=512,
+                      epochs=5, k=5, k_prime=tiny_corpus.m, anns="exact")
+    idx = build_index(jax.random.PRNGKey(0), tiny_corpus, cfg)
+    q = jnp.asarray(synthetic.queries_from_corpus_query(tiny_corpus, 8, q_tokens=4))
+    qm = jnp.ones(q.shape[:2], bool)
+    _, ti = maxsim.true_topk(q, qm, idx.doc_tokens, idx.doc_mask, 5)
+    cand = candidates(idx, q, qm, k_prime=tiny_corpus.m)
+    rec = float(maxsim.recall_at(cand, ti).mean())
+    assert rec == 1.0

@@ -1,0 +1,115 @@
+"""Property tests for the MaxSim core (hypothesis) + consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import maxsim
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@given(seed=st.integers(0, 2**31 - 1), tq=st.integers(1, 6), td=st.integers(1, 7),
+       m=st.integers(1, 9))
+def test_scores_match_pairwise(seed, tq, td, m):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 2, tq, 8)
+    qm = jnp.asarray(rng.random((2, tq)) > 0.2)
+    docs = _rand(rng, m, td, 8)
+    dm = jnp.asarray(rng.random((m, td)) > 0.2)
+    dm = dm.at[:, 0].set(True)  # no empty docs
+    s = maxsim.maxsim_scores(q, qm, docs, dm, block=4)
+    for b in range(2):
+        for j in range(m):
+            ref = maxsim.maxsim_pair(q[b], qm[b], docs[j], dm[j])
+            assert abs(float(s[b, j]) - float(ref)) < 1e-4
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_doc_token_permutation_invariance(seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 1, 4, 8)
+    qm = jnp.ones((1, 4), bool)
+    docs = _rand(rng, 3, 6, 8)
+    dm = jnp.ones((3, 6), bool)
+    perm = rng.permutation(6)
+    s1 = maxsim.maxsim_scores(q, qm, docs, dm)
+    s2 = maxsim.maxsim_scores(q, qm, docs[:, perm], dm[:, perm])
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_query_token_permutation_invariance(seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 1, 5, 8)
+    qm = jnp.ones((1, 5), bool)
+    docs = _rand(rng, 3, 6, 8)
+    dm = jnp.ones((3, 6), bool)
+    perm = rng.permutation(5)
+    s1 = maxsim.maxsim_scores(q, qm, docs, dm)
+    s2 = maxsim.maxsim_scores(q[:, perm], qm, docs, dm)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_duplicate_doc_token_is_noop(seed):
+    """max over tokens is idempotent under duplication."""
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 1, 4, 8)
+    qm = jnp.ones((1, 4), bool)
+    docs = _rand(rng, 2, 5, 8)
+    dm = jnp.ones((2, 5), bool)
+    dup = jnp.concatenate([docs, docs[:, :1]], axis=1)
+    dmm = jnp.ones((2, 6), bool)
+    s1 = maxsim.maxsim_scores(q, qm, docs, dm)
+    s2 = maxsim.maxsim_scores(q, qm, dup, dmm)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 5.0))
+def test_query_scale_equivariance(seed, scale):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 1, 3, 8)
+    qm = jnp.ones((1, 3), bool)
+    docs = _rand(rng, 4, 5, 8)
+    dm = jnp.ones((4, 5), bool)
+    s1 = maxsim.maxsim_scores(q, qm, docs, dm)
+    s2 = maxsim.maxsim_scores(q * scale, qm, docs, dm)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1) * scale, rtol=1e-4)
+
+
+def test_token_maxsim_matches_scores(rng):
+    q = _rand(rng, 2, 4, 8)
+    qm = jnp.ones((2, 4), bool)
+    docs = _rand(rng, 10, 6, 8)
+    dm = jnp.asarray(rng.random((10, 6)) > 0.3)
+    dm = dm.at[:, 0].set(True)
+    g = maxsim.token_maxsim(q.reshape(8, 8), docs, dm, block=3)
+    s = g.reshape(2, 4, 10).sum(axis=1)
+    ref = maxsim.maxsim_scores(q, qm, docs, dm)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref), rtol=1e-4)
+
+
+def test_rerank_full_equals_true_topk(rng):
+    q = _rand(rng, 3, 4, 8)
+    qm = jnp.ones((3, 4), bool)
+    docs = _rand(rng, 20, 6, 8)
+    dm = jnp.ones((20, 6), bool)
+    ts, ti = maxsim.true_topk(q, qm, docs, dm, 5)
+    all_cands = jnp.broadcast_to(jnp.arange(20)[None], (3, 20))
+    rs, ri = maxsim.rerank(q, qm, all_cands, docs, dm, 5)
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(ts), rtol=1e-5)
+    assert (np.asarray(ri) == np.asarray(ti)).all()
+
+
+def test_recall_at():
+    got = jnp.asarray([[1, 2, 3], [4, 5, 6]])
+    truth = jnp.asarray([[1, 9, 3], [6, 5, 4]])
+    r = maxsim.recall_at(got, truth)
+    np.testing.assert_allclose(np.asarray(r), [2 / 3, 1.0])
