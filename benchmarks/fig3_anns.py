@@ -1,23 +1,28 @@
-"""Fig. 3: ANNS (IVF) vs exact latent inference inside LEMUR.
+"""Fig. 3: first-stage backends vs exact latent inference inside LEMUR.
 
 Claim C3: the ANNS index wins below the very highest recall levels; exact
-scan catches up at recall ~1 (and on small corpora)."""
+scan catches up at recall ~1 (and on small corpora).  The IVF arm sweeps
+``nprobe`` (the recall/latency knob); with ``backends=[...]`` (wired to
+``benchmarks/run.py --backend``) every other registered backend is measured
+at its default operating point through the same unified ``query()``
+pipeline."""
 from __future__ import annotations
 
 import jax
 
 from benchmarks import common
+from repro.anns import registry
 from repro.core import recall_at
 from repro.core.index import query
 
 NPROBES = (4, 8, 16, 32, 64)
 
 
-def run():
+def run(backends=None):
     q, qm = common.queries()
     truth = common.ground_truth()
     idx = common.lemur_index(128)
-    out = {"exact": {}, "ivf": []}
+    out = {"exact": {}, "ivf": [], "backends": {}}
 
     def exact(qq, qqm):
         return query(idx, qq, qqm, k_prime=200, use_ann=False)
@@ -38,6 +43,17 @@ def run():
         out["ivf"].append({"nprobe": nprobe, "recall": rec, "qps": q.shape[0] / t})
         common.emit(f"fig3_ivf_nprobe{nprobe}", t / q.shape[0] * 1e6,
                     f"recall={rec:.3f}")
+
+    for name in (backends or []):
+        if name == "ivf":
+            continue  # swept above
+        bidx = common.lemur_index(128, backend=name)
+        fn = jax.jit(lambda a, b, _i=bidx: query(_i, a, b, k_prime=200))
+        t = common.timeit(fn, q, qm)
+        _, ids = fn(q, qm)
+        rec = float(recall_at(ids, truth).mean())
+        out["backends"][name] = {"recall": rec, "qps": q.shape[0] / t}
+        common.emit(f"fig3_{name}", t / q.shape[0] * 1e6, f"recall={rec:.3f}")
 
     common.save_json("fig3_anns", out)
     return out

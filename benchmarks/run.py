@@ -1,21 +1,50 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig2       # one
+  PYTHONPATH=src python -m benchmarks.run                 # all
+  PYTHONPATH=src python -m benchmarks.run fig2            # one
+  PYTHONPATH=src python -m benchmarks.run table2 --backend all
+  PYTHONPATH=src python -m benchmarks.run table2 --backend ivf,muvera
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
-results/bench_*.json consumed by EXPERIMENTS.md.
+results/bench_*.json consumed by EXPERIMENTS.md.  ``--backend`` selects
+which registered first-stage backends the backend-aware benches (fig3,
+table2) sweep — ``all`` expands to the full registry and emits one
+``results/bench_table2_<backend>.json`` per backend so the perf trajectory
+tracks backends separately.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels"]
 
 
-def main() -> None:
-    which = sys.argv[1:] or BENCHES
+def _resolve_backends(spec: str | None):
+    if not spec:
+        return None
+    from repro.anns import registry
+
+    if spec == "all":
+        return registry.list_backends()
+    names = [s for s in spec.split(",") if s]
+    for n in names:
+        registry.get_backend(n)  # fail fast on unknown names
+    return names
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("names", nargs="*", default=[],
+                   help=f"benchmarks to run (prefix match); default: {BENCHES}")
+    p.add_argument("--backend", default=None,
+                   help="first-stage backends for fig3/table2: a registry "
+                        "name, comma list, or 'all'")
+    args = p.parse_args(argv)
+    which = args.names or BENCHES
+    backends = _resolve_backends(args.backend)
+
     t0 = time.time()
     if any(w.startswith("fig2") for w in which):
         from benchmarks import fig2_dprime
@@ -24,11 +53,11 @@ def main() -> None:
     if any(w.startswith("fig3") for w in which):
         from benchmarks import fig3_anns
 
-        fig3_anns.run()
+        fig3_anns.run(backends=backends)
     if any(w.startswith("table2") for w in which):
         from benchmarks import table2_qps
 
-        table2_qps.run()
+        table2_qps.run(backends=backends)
     if any(w.startswith("appendix") for w in which):
         from benchmarks import appendix_d_training
 

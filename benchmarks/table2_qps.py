@@ -1,28 +1,39 @@
-"""Table 2 / Fig. 4: best QPS at ≥80% recall (k=10, CPU-scaled corpus) —
-LEMUR vs MUVERA(+same ANNS/rerank) vs PLAID-style token pruning vs exact
-MaxSim brute force.
+"""Table 2 / Fig. 4: best QPS at ≥80% recall (k=10, CPU-scaled corpus).
 
-Grid-searches each method's query hyperparameters and reports the fastest
-configuration that clears the recall bar (the paper's Pareto protocol)."""
+Every registered first-stage backend runs through the SAME unified
+pool → candidates → rerank pipeline (``core.index.query``) over the same
+trained LEMUR reduction; token-level baselines (muvera, dessert,
+token_pruning) simply ignore the latent side of the query batch.  Each
+backend gets a hyperparameter grid-search and we report its fastest
+configuration clearing the recall bar (the paper's Pareto protocol), plus
+the exact-MaxSim latency ceiling.
+
+``run(backends=[...])`` restricts the sweep (wired to
+``benchmarks/run.py --backend``); per-backend rows are also written to
+``results/bench_table2_<backend>.json`` so the perf trajectory tracks each
+backend separately."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common
-from repro.anns import (
-    MuveraConfig,
-    build_ivf,
-    build_token_pruning,
-    doc_fde,
-    query_fde,
-    search_ivf,
-    search_token_pruning,
-)
+from repro.anns import registry
 from repro.core import maxsim, recall_at
 from repro.core.index import query
 
 RECALL_BAR = 0.8
+
+# per-backend query-time grids; {} means the backend has no per-call knob
+# beyond k' (the shared rerank budget)
+SWEEPS = {
+    "ivf": [{"nprobe": n, "k_prime": kp} for n in (8, 16, 32, 64)
+            for kp in (50, 100, 200)],
+    "bruteforce": [{"k_prime": kp} for kp in (50, 100, 200)],
+    "muvera": [{"k_prime": kp} for kp in (50, 100, 200, 400)],
+    "dessert": [{"k_prime": kp} for kp in (50, 100, 200, 400)],
+    "token_pruning": [{"nprobe": n, "k_prime": kp} for n in (2, 4, 8)
+                      for kp in (100, 200, 400)],
+}
 
 
 def _best(rows):
@@ -32,67 +43,35 @@ def _best(rows):
     return max(ok, key=lambda r: r["qps"])
 
 
-def run():
-    c = common.corpus()
+def sweep_backend(name: str, q, qm, truth):
+    """Grid-search one backend's query hyperparameters through query()."""
+    idx = common.lemur_index(128, backend=name)
+    rows = []
+    for params in SWEEPS.get(name, [{"k_prime": kp} for kp in (50, 100, 200)]):
+        fn = jax.jit(lambda a, b, p=dict(params): query(idx, a, b, use_ann=True, **p))
+        t = common.timeit(fn, q, qm, iters=3)
+        _, ids = fn(q, qm)
+        rows.append(params | {"recall": float(recall_at(ids, truth).mean()),
+                              "qps": q.shape[0] / t})
+    return rows
+
+
+def run(backends=None):
     q, qm = common.queries()
     truth = common.ground_truth()
+    c = common.corpus()
+    import jax.numpy as jnp
+
     docs = jnp.asarray(c.doc_tokens)
     mask = jnp.asarray(c.doc_mask)
     out = {}
 
-    # --- LEMUR ---
-    idx = common.lemur_index(128)
-    rows = []
-    for nprobe in (8, 16, 32, 64):
-        for kp in (50, 100, 200):
-            fn = jax.jit(lambda a, b, n=nprobe, k=kp: query(idx, a, b, k_prime=k,
-                                                            use_ann=True, nprobe=n))
-            t = common.timeit(fn, q, qm, iters=3)
-            _, ids = fn(q, qm)
-            rows.append({"nprobe": nprobe, "k_prime": kp,
-                         "recall": float(recall_at(ids, truth).mean()),
-                         "qps": q.shape[0] / t})
-    out["lemur"] = _best(rows)
+    for name in backends or registry.list_backends():
+        rows = sweep_backend(name, q, qm, truth)
+        out[name] = _best(rows)
+        common.save_json(f"table2_{name}", {"rows": rows, "best": out[name]})
 
-    # --- MUVERA (FDE + same IVF + same rerank) ---
-    mcfg = MuveraConfig(r_reps=20, k_sim=5, final_dim=1280)
-    dfde = doc_fde(docs, mask, mcfg)
-    qfde = query_fde(q, qm, mcfg)
-    fde_ivf = build_ivf(jax.random.PRNGKey(1), dfde, sq8=True)
-    rows = []
-    for nprobe in (8, 16, 32, 64):
-        for kp in (50, 100, 200):
-            def fn(qq, qqm, n=nprobe, k=kp):
-                _, cand = search_ivf(fde_ivf, query_fde(qq, qqm, mcfg), n, k)
-                return maxsim.rerank(qq, qqm, jnp.maximum(cand, 0), docs, mask, common.K)
-
-            jfn = jax.jit(fn)
-            t = common.timeit(jfn, q, qm, iters=3)
-            _, ids = jfn(q, qm)
-            rows.append({"nprobe": nprobe, "k_prime": kp,
-                         "recall": float(recall_at(ids, truth).mean()),
-                         "qps": q.shape[0] / t})
-    out["muvera"] = _best(rows)
-
-    # --- PLAID-style token pruning ---
-    tp = build_token_pruning(jax.random.PRNGKey(2), docs, mask)
-    rows = []
-    for nprobe in (2, 4, 8):
-        for kp in (100, 200, 400):
-            def fn(qq, qqm, n=nprobe, k=kp):
-                _, cand = search_token_pruning(tp, qq, qqm, nprobe=n, k_prime=k,
-                                               m=common.M)
-                return maxsim.rerank(qq, qqm, jnp.maximum(cand, 0), docs, mask, common.K)
-
-            jfn = jax.jit(fn)
-            t = common.timeit(jfn, q, qm, iters=3)
-            _, ids = jfn(q, qm)
-            rows.append({"nprobe": nprobe, "k_prime": kp,
-                         "recall": float(recall_at(ids, truth).mean()),
-                         "qps": q.shape[0] / t})
-    out["token_pruning"] = _best(rows)
-
-    # --- exact MaxSim brute force (the latency ceiling) ---
+    # exact MaxSim brute force (the latency ceiling)
     fn = jax.jit(lambda a, b: maxsim.true_topk(a, b, docs, mask, common.K))
     t = common.timeit(fn, q, qm, iters=3)
     out["exact_maxsim"] = {"recall": 1.0, "qps": q.shape[0] / t}
@@ -102,10 +81,12 @@ def run():
                     f"recall={r['recall']:.3f},qps={r['qps']:.0f}")
     common.save_json("table2_qps", out)
 
-    lemur_qps = out["lemur"]["qps"]
-    best_base = max(out["muvera"]["qps"], out["token_pruning"]["qps"])
-    common.emit("table2_speedup_vs_best_baseline", 0.0,
-                f"x{lemur_qps / max(best_base, 1e-9):.1f}")
+    if "ivf" in out:
+        baselines = [out[n]["qps"] for n in ("muvera", "token_pruning", "dessert")
+                     if n in out]
+        if baselines:
+            common.emit("table2_speedup_vs_best_baseline", 0.0,
+                        f"x{out['ivf']['qps'] / max(max(baselines), 1e-9):.1f}")
     return out
 
 

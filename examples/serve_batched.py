@@ -1,8 +1,10 @@
 """Batched serving example: the serving driver with latency percentiles —
-LEMUR vs exact MaxSim on the same corpus.
+any registered first-stage backend vs exact MaxSim on the same corpus.
 
   PYTHONPATH=src python examples/serve_batched.py
+  PYTHONPATH=src python examples/serve_batched.py --backend muvera
 """
+import argparse
 import time
 
 import jax
@@ -13,9 +15,14 @@ from repro.core import LemurConfig, build_index, maxsim, recall_at
 from repro.core.index import query
 from repro.data import synthetic
 
+p = argparse.ArgumentParser()
+p.add_argument("--backend", default="ivf",
+               help="first-stage backend (repro.anns.registry name)")
+args = p.parse_args()
+
 corpus = synthetic.make_corpus(m=6000, d=32, avg_tokens=12, max_tokens=16, seed=0)
 cfg = LemurConfig(d=32, d_prime=128, m_pretrain=512, n_train=8192, n_ols=2048,
-                  epochs=15, k=10, k_prime=128, anns="ivf", ivf_nprobe=16)
+                  epochs=15, k=10, k_prime=128, anns=args.backend, ivf_nprobe=16)
 index = build_index(jax.random.PRNGKey(0), corpus, cfg, verbose=True)
 
 serve = jax.jit(lambda q, m: query(index, q, m))
@@ -35,6 +42,7 @@ for b in range(8):
 lat_lemur, lat_exact = lat_lemur[1:], lat_exact[1:]  # drop compile batch
 p50 = lambda xs: np.percentile(xs, 50) * 1e3
 p99 = lambda xs: np.percentile(xs, 99) * 1e3
-print(f"LEMUR : p50={p50(lat_lemur):.1f}ms p99={p99(lat_lemur):.1f}ms / 32-query batch")
+print(f"LEMUR[{index.backend}]: p50={p50(lat_lemur):.1f}ms "
+      f"p99={p99(lat_lemur):.1f}ms / 32-query batch")
 print(f"exact : p50={p50(lat_exact):.1f}ms p99={p99(lat_exact):.1f}ms")
 print(f"recall@10 = {np.mean(recs):.3f}  speedup x{np.mean(lat_exact)/np.mean(lat_lemur):.1f}")

@@ -1,26 +1,49 @@
+"""First-stage ANNS layer.
+
+Functional modules (``bruteforce``, ``ivf``, ``muvera``, ``dessert``,
+``token_pruning``) hold the algorithms; :mod:`repro.anns.base` defines the
+``Retriever`` protocol they are adapted to in :mod:`repro.anns.backends`;
+:mod:`repro.anns.registry` maps backend names to instances for
+``LemurConfig.anns`` / ``--backend`` selection.
+"""
+from repro.anns.base import CorpusView, QueryBatch, Retriever
 from repro.anns.bruteforce import mips_topk
-from repro.anns.ivf import IVFIndex, build_ivf, search_ivf
+from repro.anns.ivf import IVFIndex, build_ivf, extend_ivf, search_ivf
 from repro.anns.kmeans import kmeans
 from repro.anns.quantization import sq8_dequant, sq8_quant
-from repro.anns.dessert import DessertConfig, build_dessert, search_dessert
+from repro.anns.dessert import DessertConfig, build_dessert, extend_dessert, search_dessert
 from repro.anns.muvera import MuveraConfig, doc_fde, query_fde
-from repro.anns.token_pruning import TokenPruningIndex, build_token_pruning, search_token_pruning
+from repro.anns.token_pruning import (
+    TokenPruningIndex,
+    build_token_pruning,
+    extend_token_pruning,
+    search_token_pruning,
+)
+from repro.anns.registry import get_backend, list_backends
 
 __all__ = [
+    "Retriever",
+    "CorpusView",
+    "QueryBatch",
+    "get_backend",
+    "list_backends",
     "mips_topk",
     "IVFIndex",
     "build_ivf",
+    "extend_ivf",
     "search_ivf",
     "kmeans",
     "sq8_quant",
     "sq8_dequant",
     "DessertConfig",
     "build_dessert",
+    "extend_dessert",
     "search_dessert",
     "MuveraConfig",
     "doc_fde",
     "query_fde",
     "TokenPruningIndex",
     "build_token_pruning",
+    "extend_token_pruning",
     "search_token_pruning",
 ]

@@ -1,0 +1,211 @@
+"""Built-in Retriever implementations — the five first-stage backends.
+
+Each class adapts one functional ANNS module (`bruteforce`, `ivf`,
+`dessert`, `muvera`, `token_pruning`) to the :class:`repro.anns.base.Retriever`
+protocol and registers itself by name.  The functional modules stay usable
+directly (tests/benchmarks call them); these wrappers are what
+``core.index.LemurIndex`` dispatches through.
+
+Representation per backend:
+
+====================  ==========  =============================================
+name                  indexes     query side
+====================  ==========  =============================================
+``bruteforce``        latent W    pooled Ψ(X) — exact latent MIPS (Fig. 3)
+``ivf``               latent W    pooled Ψ(X) — TPU-native IVF (+SQ8 kernel)
+``muvera``            tokens      FDE of the query tokens (Jayaram et al.)
+``dessert``           tokens      LSH sketches of the query tokens (Engels)
+``token_pruning``     tokens      PLAID-style centroid interaction
+====================  ==========  =============================================
+
+``cfg`` is duck-typed: any object exposing the knobs below works (and
+``None`` selects every default), so backends never import the core layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.anns import dessert as _dessert
+from repro.anns import ivf as _ivf
+from repro.anns import muvera as _muvera
+from repro.anns import token_pruning as _tp
+from repro.anns.base import CorpusView, QueryBatch, pad_topk
+from repro.anns.bruteforce import mips_topk
+from repro.anns.registry import register
+
+
+def _cfg(cfg, name, default):
+    v = getattr(cfg, name, default) if cfg is not None else default
+    return default if v is None else v
+
+
+@register
+class BruteforceRetriever:
+    """Exact latent MIPS — the recall ceiling of the first stage."""
+
+    name = "bruteforce"
+    representation = "latent"
+
+    def build(self, key, corpus: CorpusView, cfg=None):
+        if corpus.latent is None:
+            raise ValueError("bruteforce backend needs latent vectors "
+                             "(CorpusView.latent is None)")
+        return {"W": jnp.asarray(corpus.latent)}
+
+    def search(self, state, query: QueryBatch, k: int, **_):
+        return mips_topk(query.latent, state["W"], k)
+
+    def add(self, state, corpus: CorpusView):
+        return {"W": jnp.concatenate([state["W"], jnp.asarray(corpus.latent)], 0)}
+
+    def defaults(self, cfg) -> dict:
+        return {}
+
+
+@register
+class IVFRetriever:
+    """IVF over the latent corpus (SQ8 scan via ``kernels.ops.mips_sq8``)."""
+
+    name = "ivf"
+    representation = "latent"
+
+    def build(self, key, corpus: CorpusView, cfg=None):
+        if corpus.latent is None:
+            raise ValueError("ivf backend needs latent vectors")
+        return _ivf.build_ivf(key, jnp.asarray(corpus.latent),
+                              int(_cfg(cfg, "ivf_nlist", 0)),
+                              sq8=bool(_cfg(cfg, "sq8", False)))
+
+    def search(self, state, query: QueryBatch, k: int, *, nprobe=None, **_):
+        nprobe = min(int(nprobe or min(32, state.nlist)), state.nlist)
+        return _ivf.search_ivf(state, query.latent, nprobe, k)
+
+    def add(self, state, corpus: CorpusView):
+        return _ivf.extend_ivf(state, jnp.asarray(corpus.latent))
+
+    def defaults(self, cfg) -> dict:
+        return {"nprobe": _cfg(cfg, "ivf_nprobe", None)}
+
+
+@register
+class MuveraRetriever:
+    """Fixed-dimensional encodings + exact MIPS over the FDEs."""
+
+    name = "muvera"
+    representation = "tokens"
+
+    def build(self, key, corpus: CorpusView, cfg=None):
+        mcfg = _muvera.MuveraConfig(
+            r_reps=int(_cfg(cfg, "muvera_r_reps", 20)),
+            k_sim=int(_cfg(cfg, "muvera_k_sim", 5)),
+            final_dim=int(_cfg(cfg, "muvera_final_dim", 1280)),
+        )
+        dfde = _muvera.doc_fde(corpus.doc_tokens, corpus.doc_mask, mcfg)
+        return MuveraState(dfde, mcfg)
+
+    def search(self, state, query: QueryBatch, k: int, **_):
+        qfde = _muvera.query_fde(query.tokens, query.mask, state.mcfg)
+        return mips_topk(qfde, state.dfde, k)
+
+    def add(self, state, corpus: CorpusView):
+        new = _muvera.doc_fde(corpus.doc_tokens, corpus.doc_mask, state.mcfg)
+        return MuveraState(jnp.concatenate([state.dfde, new], 0), state.mcfg)
+
+    def defaults(self, cfg) -> dict:
+        return {}
+
+
+@register
+class DessertRetriever:
+    """LSH set-sketch scoring (DESSERT) straight off the token matrices."""
+
+    name = "dessert"
+    representation = "tokens"
+
+    def build(self, key, corpus: CorpusView, cfg=None):
+        dcfg = _dessert.DessertConfig(
+            n_tables=int(_cfg(cfg, "dessert_tables", 32)),
+            n_bits=int(_cfg(cfg, "dessert_bits", 5)),
+        )
+        return _dessert.build_dessert(corpus.doc_tokens, corpus.doc_mask, dcfg)
+
+    def search(self, state, query: QueryBatch, k: int, **_):
+        m = state.occupancy.shape[0]
+        s, ids = _dessert.search_dessert(state, query.tokens, query.mask,
+                                         k_prime=min(k, m))
+        return pad_topk(s, ids, k)
+
+    def add(self, state, corpus: CorpusView):
+        return _dessert.extend_dessert(state, corpus.doc_tokens, corpus.doc_mask)
+
+    def defaults(self, cfg) -> dict:
+        return {}
+
+
+@register
+class TokenPruningRetriever:
+    """PLAID-style centroid-interaction pruning over corpus tokens."""
+
+    name = "token_pruning"
+    representation = "tokens"
+
+    def build(self, key, corpus: CorpusView, cfg=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        idx = _tp.build_token_pruning(key, corpus.doc_tokens, corpus.doc_mask,
+                                      nlist=int(_cfg(cfg, "tp_nlist", 0)))
+        return TokenPruningState(idx, corpus.m)
+
+    def search(self, state, query: QueryBatch, k: int, *, nprobe=None, **_):
+        nlist = state.index.centroids.shape[0]
+        nprobe = min(int(nprobe or 8), nlist)
+        s, ids = _tp.search_token_pruning(state.index, query.tokens, query.mask,
+                                          nprobe=nprobe,
+                                          k_prime=min(k, state.m), m=state.m)
+        return pad_topk(s, ids, k)
+
+    def add(self, state, corpus: CorpusView):
+        idx = _tp.extend_token_pruning(state.index, corpus.doc_tokens,
+                                       corpus.doc_mask, m_old=state.m)
+        return TokenPruningState(idx, state.m + corpus.m)
+
+    def defaults(self, cfg) -> dict:
+        return {"nprobe": _cfg(cfg, "tp_nprobe", None)}
+
+
+# --------------------------------------------------------------------------
+# Opaque state pytrees whose static parts (config, corpus size) must ride
+# as aux data so the state can cross jit boundaries without retracing.
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class MuveraState:
+    """(m, final_dim) doc FDEs + the (static) MuveraConfig that made them."""
+
+    def __init__(self, dfde, mcfg):
+        self.dfde = dfde
+        self.mcfg = mcfg
+
+    def tree_flatten(self):
+        return (self.dfde,), self.mcfg
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+@jax.tree_util.register_pytree_node_class
+class TokenPruningState:
+    """TokenPruningIndex + the (static) corpus size the scatter targets."""
+
+    def __init__(self, index, m: int):
+        self.index = index
+        self.m = int(m)
+
+    def tree_flatten(self):
+        return (self.index,), self.m
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)

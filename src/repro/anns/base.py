@@ -1,0 +1,109 @@
+"""First-stage retrieval protocol — LEMUR's index-agnostic reduction (§3.2).
+
+LEMUR's second reduction turns multi-vector inference into single-vector
+MIPS, "enabling the use of existing single-vector search indexes".  This
+module is that seam: every first-stage backend (exact scan, IVF, MUVERA
+FDEs, DESSERT LSH sketches, PLAID-style token pruning) implements one
+``Retriever`` interface, and ``core.index`` serves any of them through the
+same jit-able pool → candidates → rerank pipeline.
+
+The contract
+------------
+``build(key, corpus, cfg) -> state``
+    One-shot offline construction.  ``corpus`` is a :class:`CorpusView`
+    carrying both the latent doc vectors (LEMUR's OLS ``W`` rows, when
+    available) and the raw token matrices; each backend reads the
+    representation it indexes.  The returned ``state`` is an opaque jax
+    pytree — ``core.index.LemurIndex`` stores it without knowing its type.
+
+``search(state, query, k, **overrides) -> (scores, ids)``
+    Pure, jit-able candidate generation.  ``query`` is a
+    :class:`QueryBatch` (pooled ψ latent + raw tokens); returns ``(B, k)``
+    approximate scores and int32 doc ids, ``-1``-padded when a row yields
+    fewer than ``k`` valid candidates.  Downstream ``maxsim.rerank`` masks
+    ``-1`` ids to ``NEG`` so pads can never surface as results.
+    ``overrides`` are per-call knobs a backend may expose (e.g. ``nprobe``
+    for IVF / token pruning) — unknown keys must be ignored.
+
+``add(state, corpus) -> state``
+    Incremental growth: append documents without rebuilding from scratch
+    (mirrors ``indexer.ols_solver_state``'s per-shard ``fit_docs`` hook —
+    new W rows never touch ψ or existing rows, and the first-stage index
+    must keep up).  Ids of added docs continue the existing numbering.
+
+Backends register themselves by name in :mod:`repro.anns.registry`; the
+string key is what ``LemurConfig.anns`` / ``--backend`` select.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+
+
+class CorpusView(NamedTuple):
+    """Everything a backend may index.
+
+    latent:     (m, d') LEMUR latent doc vectors (OLS W rows), or None when
+                the caller has no learned reduction (token-level backends
+                never need it).
+    doc_tokens: (m, Td, d) raw token embeddings.
+    doc_mask:   (m, Td) validity mask.
+    """
+
+    latent: jax.Array | None
+    doc_tokens: jax.Array
+    doc_mask: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.doc_tokens.shape[0]
+
+
+class QueryBatch(NamedTuple):
+    """Both query representations, so any backend can serve the same call.
+
+    latent: (B, d') pooled Ψ(X) queries (None when the index has no ψ —
+            contract tests exercise token-level backends without one).
+    tokens: (B, Tq, d) raw query tokens.
+    mask:   (B, Tq) validity mask.
+    """
+
+    latent: jax.Array | None
+    tokens: jax.Array
+    mask: jax.Array
+
+
+@runtime_checkable
+class Retriever(Protocol):
+    """Pluggable first-stage candidate generator (see module docstring)."""
+
+    name: str
+    #: which CorpusView/QueryBatch field drives this backend
+    representation: str  # "latent" | "tokens"
+
+    def build(self, key, corpus: CorpusView, cfg) -> Any:
+        """Offline construction -> opaque pytree state."""
+        ...
+
+    def search(self, state, query: QueryBatch, k: int, **overrides):
+        """(scores (B, k), ids (B, k) int32, -1 padded).  Must be jit-able
+        with ``k`` (and any override) static."""
+        ...
+
+    def add(self, state, corpus: CorpusView) -> Any:
+        """Append documents; returned state serves ids [0, m_old + m_new)."""
+        ...
+
+
+def pad_topk(scores: jax.Array, ids: jax.Array, k: int):
+    """Pad a (B, kk<=k) top-k result out to k columns with (-inf, -1)."""
+    import jax.numpy as jnp
+
+    kk = scores.shape[1]
+    if kk >= k:
+        return scores[:, :k], ids[:, :k]
+    return (
+        jnp.pad(scores, ((0, 0), (0, k - kk)), constant_values=-jnp.inf),
+        jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1),
+    )

@@ -50,16 +50,28 @@ def _hash(tokens, hyper):
     return jnp.sum(bits * w, axis=-1).astype(jnp.int32)
 
 
+def _occupancy(doc_tokens, doc_mask, hyper):
+    """(m, T, d) docs -> (m, L, 2^C) bool bucket-occupancy bitmaps."""
+    ids = _hash(doc_tokens, hyper)                       # (m, L, T)
+    nb = 2 ** hyper.shape[1]
+    onehot = jax.nn.one_hot(ids, nb, dtype=jnp.bool_)    # (m, L, T, nb)
+    onehot = jnp.logical_and(onehot, doc_mask[:, None, :, None])
+    return jnp.any(onehot, axis=2)                       # (m, L, nb)
+
+
 def build_dessert(doc_tokens, doc_mask, cfg: DessertConfig) -> DessertIndex:
     m, T, d = doc_tokens.shape
     key = jax.random.PRNGKey(cfg.seed)
     hyper = jax.random.normal(key, (cfg.n_tables, cfg.n_bits, d))
-    ids = _hash(doc_tokens, hyper)                       # (m, L, T)
-    nb = 2**cfg.n_bits
-    onehot = jax.nn.one_hot(ids, nb, dtype=jnp.bool_)    # (m, L, T, nb)
-    onehot = jnp.logical_and(onehot, doc_mask[:, None, :, None])
-    occ = jnp.any(onehot, axis=2)                        # (m, L, nb)
-    return DessertIndex(occ, hyper)
+    return DessertIndex(_occupancy(doc_tokens, doc_mask, hyper), hyper)
+
+
+def extend_dessert(index: DessertIndex, doc_tokens, doc_mask) -> DessertIndex:
+    """Incremental add: hash the new docs with the FROZEN hyperplanes and
+    append their occupancy rows (ids continue the existing numbering)."""
+    occ_new = _occupancy(doc_tokens, doc_mask, index.hyper)
+    return DessertIndex(jnp.concatenate([index.occupancy, occ_new], axis=0),
+                        index.hyper)
 
 
 @functools.partial(jax.jit, static_argnames=("k_prime",))

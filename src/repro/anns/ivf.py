@@ -19,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.anns.kmeans import kmeans
-from repro.anns.quantization import sq8_quant
+from repro.anns.quantization import sq8_dequant, sq8_quant
+from repro.kernels import ops
 
 
 class IVFIndex(NamedTuple):
@@ -67,29 +68,70 @@ def build_ivf(key, vectors: jax.Array, nlist: int = 0, *, sq8: bool = False,
         idx = jax.random.choice(ktrain, m, (train_sample,), replace=False)
         sample = vectors[idx]
     centroids, _ = kmeans(ktrain, sample, nlist, iters=kmeans_iters)
-    # assign the full corpus
-    half = 0.5 * jnp.sum(jnp.square(centroids), axis=1)
-    assign = jnp.argmax(vectors @ centroids.T - half[None, :], axis=1)
+    assign = assign_clusters(vectors, centroids)  # full corpus
+    ids, vecs, scales, counts = _pack_lists(vectors, np.asarray(assign), nlist,
+                                            sq8=sq8)
+    return IVFIndex(centroids, ids, vecs, scales, counts, mean)
 
-    a = np.asarray(assign)
-    counts = np.bincount(a, minlength=nlist)
+
+def assign_clusters(vectors: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment (MIPS form with the -||c||²/2 correction)."""
+    half = 0.5 * jnp.sum(jnp.square(centroids), axis=1)
+    return jnp.argmax(vectors @ centroids.T - half[None, :], axis=1)
+
+
+def _pack_lists(vectors, assign: np.ndarray, nlist: int, *, sq8: bool):
+    """Pack vectors into fixed-capacity padded cluster lists (host-side)."""
+    counts = np.bincount(assign, minlength=nlist)
     cap = int(max(1, counts.max()))
     ids = np.full((nlist, cap), -1, np.int32)
-    order = np.argsort(a, kind="stable")
+    order = np.argsort(assign, kind="stable")
     pos = np.zeros(nlist, np.int64)
     for i in order:
-        c = a[i]
+        c = assign[i]
         ids[c, pos[c]] = i
         pos[c] += 1
     ids = jnp.asarray(ids)
     safe = jnp.maximum(ids, 0)
-    vecs = jnp.take(vectors, safe, axis=0)  # (nlist, cap, d)
+    vecs = jnp.take(jnp.asarray(vectors), safe, axis=0)  # (nlist, cap, d)
     vecs = vecs * (ids >= 0)[..., None]
     scales = None
     if sq8:
         vecs, scales = sq8_quant(vecs)
-    return IVFIndex(centroids, ids, vecs, scales, jnp.asarray(counts, jnp.int32),
-                    mean)
+    return ids, vecs, scales, jnp.asarray(counts, jnp.int32)
+
+
+def extend_ivf(index: IVFIndex, new_vectors: jax.Array) -> IVFIndex:
+    """Incremental add: assign new vectors to the FROZEN coarse quantizer and
+    re-pack the padded lists (host-side, like build).  New docs get ids
+    continuing the existing numbering; centroids/mean are not re-fit, so
+    recall degrades only as far as the data drifts from the original
+    clustering."""
+    nlist, d = index.centroids.shape
+    newv = jnp.asarray(new_vectors)
+    if index.mean is not None:
+        newv = newv - index.mean[None, :]
+    assign_new = np.asarray(assign_clusters(newv, index.centroids))
+
+    ids = np.asarray(index.ids)
+    valid = ids >= 0
+    m_old = int(valid.sum())
+    m_new = newv.shape[0]
+    sq8 = index.scales is not None
+    # reconstruct the (centered) stored vectors; SQ8 requant is exact because
+    # each row's max code is 127, so the recomputed scale equals the old one
+    full = sq8_dequant(index.vecs, index.scales) if sq8 else index.vecs
+    full = np.asarray(full)
+    all_vecs = np.zeros((m_old + m_new, d), np.float32)
+    all_assign = np.zeros(m_old + m_new, np.int64)
+    cluster_of = np.broadcast_to(np.arange(nlist)[:, None], ids.shape)
+    all_vecs[ids[valid]] = full[valid]
+    all_assign[ids[valid]] = cluster_of[valid]
+    all_vecs[m_old:] = np.asarray(newv)
+    all_assign[m_old:] = assign_new
+    ids2, vecs2, scales2, counts2 = _pack_lists(all_vecs, all_assign, nlist,
+                                                sq8=sq8)
+    return IVFIndex(index.centroids, ids2, vecs2, scales2, counts2, index.mean)
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k"))
@@ -100,11 +142,18 @@ def search_ivf(index: IVFIndex, q: jax.Array, nprobe: int, k: int):
     _, probe = jax.lax.top_k(cs, nprobe)           # (B, nprobe)
     ids = jnp.take(index.ids, probe, axis=0)       # (B, nprobe, cap)
     vecs = jnp.take(index.vecs, probe, axis=0)     # (B, nprobe, cap, d)
-    s = jnp.einsum("bd,bpcd->bpc", q, vecs.astype(q.dtype),
-                   preferred_element_type=jnp.float32)
     if index.scales is not None:
-        sc = jnp.take(index.scales, probe, axis=0)
-        s = s * sc
+        # SQ8 scan through the Pallas kernel path (dequant inside the kernel;
+        # pure-jnp reference off-TPU) — one (1, P·cap) MIPS per query row
+        sc = jnp.take(index.scales, probe, axis=0)             # (B, P, cap)
+        cap = vecs.shape[2]
+        s = jax.vmap(
+            lambda qi, ci, si: ops.mips_sq8(qi[None, :], ci, si)[0]
+        )(q, vecs.reshape(B, -1, d), sc.reshape(B, -1))        # (B, P*cap)
+        s = s.reshape(B, nprobe, cap)
+    else:
+        s = jnp.einsum("bd,bpcd->bpc", q, vecs.astype(q.dtype),
+                       preferred_element_type=jnp.float32)
     s = jnp.where(ids >= 0, s, -jnp.inf)
     flat_s = s.reshape(B, -1)
     flat_i = ids.reshape(B, -1)

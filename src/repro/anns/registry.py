@@ -1,0 +1,54 @@
+"""String-keyed backend registry (mirrors ``configs.registry`` for archs).
+
+``LemurConfig.anns`` / ``--backend`` select a first-stage retriever by name;
+``core.index`` resolves it here and never imports a concrete backend.
+
+    from repro.anns import registry
+    be = registry.get_backend("ivf")
+    state = be.build(key, corpus_view, cfg)
+    scores, ids = be.search(state, query_batch, k)
+
+Backends self-register at import time via the :func:`register` decorator;
+importing this module imports all built-in backend modules so the registry
+is always fully populated.  ``"exact"`` is kept as an alias for
+``"bruteforce"`` (the seed config spelling).
+"""
+from __future__ import annotations
+
+from repro.anns.base import Retriever
+
+_REGISTRY: dict[str, Retriever] = {}
+_ALIASES = {"exact": "bruteforce"}
+
+
+def register(backend: Retriever) -> Retriever:
+    """Class decorator: instantiate and register under ``cls.name``."""
+    inst = backend() if isinstance(backend, type) else backend
+    name = inst.name
+    if name in _REGISTRY:
+        raise ValueError(f"backend {name!r} already registered")
+    _REGISTRY[name] = inst
+    return backend
+
+
+def _ensure_builtin() -> None:
+    # late import: backend modules import base/registry-free helpers only,
+    # so this cannot cycle; it populates _REGISTRY as a side effect.
+    from repro.anns import backends as _  # noqa: F401
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name)
+
+
+def get_backend(name: str) -> Retriever:
+    _ensure_builtin()
+    name = canonical(name)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown anns backend {name!r}; known: {list_backends()}")
+    return _REGISTRY[name]
+
+
+def list_backends() -> list[str]:
+    _ensure_builtin()
+    return sorted(_REGISTRY)

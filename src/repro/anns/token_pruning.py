@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns.ivf import assign_clusters
 from repro.anns.kmeans import kmeans
 
 
@@ -51,8 +52,7 @@ def build_token_pruning(key, doc_tokens, doc_mask, *, nlist: int = 0,
         ridx = np.random.default_rng(0).choice(n, train_sample, replace=False)
         sample = flat[ridx]
     centroids, _ = kmeans(key, jnp.asarray(sample), nlist, iters=kmeans_iters)
-    half = 0.5 * jnp.sum(jnp.square(centroids), axis=1)
-    assign = np.asarray(jnp.argmax(jnp.asarray(flat) @ centroids.T - half[None, :], axis=1))
+    assign = np.asarray(assign_clusters(jnp.asarray(flat), centroids))
 
     counts = np.bincount(assign, minlength=nlist)
     cap = int(max(1, np.quantile(counts, cap_quantile) if cap_quantile < 1.0 else counts.max()))
@@ -65,6 +65,34 @@ def build_token_pruning(key, doc_tokens, doc_mask, *, nlist: int = 0,
             doc_lists[c, pos[c]] = tok_doc[i]
             pos[c] += 1
     return TokenPruningIndex(centroids, jnp.asarray(doc_lists), jnp.asarray(counts, jnp.int32))
+
+
+def extend_token_pruning(index: TokenPruningIndex, doc_tokens, doc_mask,
+                         m_old: int) -> TokenPruningIndex:
+    """Incremental add: assign the new docs' tokens to the FROZEN centroids
+    and append (cluster -> doc id) entries, growing list capacity as needed.
+    New docs are numbered from ``m_old``."""
+    m_new, T, d = doc_tokens.shape
+    flat = np.asarray(doc_tokens[doc_mask])
+    tok_doc = m_old + np.broadcast_to(np.arange(m_new)[:, None], (m_new, T))[
+        np.asarray(doc_mask)]
+    assign = np.asarray(assign_clusters(jnp.asarray(flat), index.centroids))
+
+    nlist = index.centroids.shape[0]
+    old = np.asarray(index.doc_lists)
+    fill = (old >= 0).sum(axis=1)  # stored entries (counts may be cap-trimmed)
+    new_counts = np.bincount(assign, minlength=nlist)
+    cap = int(max(old.shape[1], (fill + new_counts).max()))
+    out = np.full((nlist, cap), -1, np.int32)
+    out[:, : old.shape[1]] = old
+    pos = fill.astype(np.int64)
+    for i in np.argsort(assign, kind="stable"):
+        c = assign[i]
+        out[c, pos[c]] = tok_doc[i]
+        pos[c] += 1
+    counts = np.asarray(index.counts) + new_counts
+    return TokenPruningIndex(index.centroids, jnp.asarray(out),
+                             jnp.asarray(counts, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k_prime", "m"))

@@ -21,9 +21,29 @@ class LemurConfig(ConfigBase):
     query_strategy: str = "corpus-query"  # corpus-query | corpus | query (§4.2)
     k: int = 100                 # final top-k
     k_prime: int = 1024          # candidates to rerank
-    anns: str = "ivf"            # ivf | exact  (HNSW/Glass -> IVF on TPU, DESIGN §3)
+    anns: str = "ivf"            # first-stage backend name (anns/registry.py):
+                                 # bruteforce|ivf|muvera|dessert|token_pruning
+                                 # ("exact" = legacy alias for bruteforce)
     ivf_nlist: int = 0           # 0 => 16*sqrt(m) rounded down to pow2 (paper's rule)
     ivf_nprobe: int = 32
     sq8: bool = True             # scalar-quantize the latent corpus (Glass-style)
+    # baseline-backend knobs (used only when `anns` selects that backend)
+    dessert_tables: int = 32     # DESSERT L
+    dessert_bits: int = 5        # DESSERT C -> 2^C buckets
+    muvera_r_reps: int = 20      # MUVERA R
+    muvera_k_sim: int = 5        # MUVERA k_sim
+    muvera_final_dim: int = 1280
+    tp_nlist: int = 0            # token pruning: 0 => PLAID 16*sqrt(n) rule
+    tp_nprobe: int = 8
     rerank_block: int = 1024     # docs per MaxSim rerank tile
     score_dtype: str = "float32"
+
+    def __post_init__(self):
+        from repro.anns import registry  # late: keeps config import-light
+
+        known = set(registry.list_backends()) | {"exact"}
+        if self.anns not in known:
+            raise ValueError(
+                f"anns={self.anns!r} is not a registered backend; "
+                f"known: {sorted(known)}"
+            )

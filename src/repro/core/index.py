@@ -2,24 +2,33 @@
 
 build:  training-token selection (§4.2) -> ψ pre-training against m' sampled
         docs (§4.3) -> OLS output layer over the full corpus (eq. 7)
-        -> single-vector ANNS index over the rows of W.
-query:  Ψ(X) pooling -> latent MIPS for k' candidates -> exact MaxSim rerank
-        -> top-k.
+        -> first-stage index via the pluggable backend registry.
+query:  Ψ(X) pooling -> first-stage candidates (any registered backend)
+        -> exact MaxSim rerank -> top-k.
+
+The first stage is index-agnostic (§3.2's "existing single-vector search
+indexes"): ``cfg.anns`` names a backend in :mod:`repro.anns.registry`
+(bruteforce | ivf | muvera | dessert | token_pruning) and ``LemurIndex``
+holds its state as an opaque pytree.  Dispatch happens at trace time — the
+backend name is a static Python string — so ``jax.jit(query)`` compiles
+once per backend and the whole pool -> candidates -> rerank path stays one
+XLA graph.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns import bruteforce, ivf
+from repro.anns import registry
+from repro.anns.base import CorpusView, QueryBatch
+from repro.anns.bruteforce import mips_topk
 from repro.core import indexer, maxsim
 from repro.core.config import LemurConfig
-from repro.core.model import TargetStats, pool_queries, psi_apply, train_phi
+from repro.core.model import TargetStats, pool_queries, train_phi
 
 
 class LemurIndex(NamedTuple):
@@ -29,7 +38,8 @@ class LemurIndex(NamedTuple):
     W: jax.Array              # (m, d') latent doc vectors = OLS output layer
     doc_tokens: jax.Array     # (m, Td, d) for exact rerank
     doc_mask: jax.Array       # (m, Td)
-    ann: ivf.IVFIndex | None  # None => exact latent MIPS
+    backend: str              # registered first-stage backend name
+    ann: Any                  # opaque backend state (jax pytree)
 
     @property
     def m(self) -> int:
@@ -66,31 +76,87 @@ def build_index(key, corpus, cfg: LemurConfig, *, x_train: np.ndarray | None = N
     if verbose:
         print(f"[build] OLS W ({m} docs) done ({time.time()-t0:.1f}s)")
 
-    # 4. ANNS index over W
-    ann = None
-    if cfg.anns == "ivf":
-        ann = ivf.build_ivf(keys[3], W, cfg.ivf_nlist, sq8=cfg.sq8)
+    # 4. first-stage index via the backend registry
+    backend = registry.canonical(cfg.anns)
+    be = registry.get_backend(backend)
+    ann = be.build(keys[3], CorpusView(W, doc_tokens, doc_mask), cfg)
     if verbose:
-        print(f"[build] index complete ({time.time()-t0:.1f}s)")
-    return LemurIndex(cfg, phi["psi"], stats, W, doc_tokens, doc_mask, ann)
+        print(f"[build] {backend} index complete ({time.time()-t0:.1f}s)")
+    return LemurIndex(cfg, phi["psi"], stats, W, doc_tokens, doc_mask, backend, ann)
+
+
+def attach_backend(index: LemurIndex, backend: str, key=None,
+                   cfg: LemurConfig | None = None) -> LemurIndex:
+    """Re-point an existing index at a different first-stage backend without
+    re-training ψ/W (backends index W and/or the raw token matrices, both of
+    which the index already holds).  Used by benchmarks to sweep backends
+    over one trained reduction."""
+    cfg = cfg or index.cfg
+    backend = registry.canonical(backend)
+    be = registry.get_backend(backend)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    view = CorpusView(index.W, index.doc_tokens, index.doc_mask)
+    return index._replace(cfg=cfg.replace(anns=backend), backend=backend,
+                          ann=be.build(key, view, cfg))
+
+
+def add_docs(index: LemurIndex, doc_tokens, doc_mask, solver_state=None) -> LemurIndex:
+    """Incremental growth: fit new W rows with the frozen-ψ OLS solver
+    (``indexer.ols_solver_state``) and push them into the first-stage backend
+    via its ``add`` hook — ψ and existing rows are never touched (§4.3)."""
+    doc_tokens = jnp.asarray(doc_tokens)
+    doc_mask = jnp.asarray(doc_mask)
+    if solver_state is None:
+        # rebuild a solver from stored corpus tokens ("corpus" strategy);
+        # pass the build-time solver_state for bit-exact W scales
+        flat = np.asarray(index.doc_tokens)[np.asarray(index.doc_mask)]
+        pick = np.random.default_rng(0).integers(
+            0, flat.shape[0], size=min(index.cfg.n_ols, flat.shape[0]))
+        solver_state = indexer.ols_solver_state(
+            index.psi, jnp.asarray(flat[pick]), index.cfg)
+    w_new = indexer.fit_docs(solver_state, doc_tokens, doc_mask, index.stats)
+    be = registry.get_backend(index.backend)
+    ann = be.add(index.ann, CorpusView(w_new, doc_tokens, doc_mask))
+    return index._replace(
+        W=jnp.concatenate([index.W, w_new], axis=0),
+        doc_tokens=jnp.concatenate([index.doc_tokens, doc_tokens], axis=0),
+        doc_mask=jnp.concatenate([index.doc_mask, doc_mask], axis=0),
+        ann=ann,
+    )
+
+
+def _first_stage(index: LemurIndex, q_tokens, q_mask, k_prime: int,
+                 nprobe: int | None, use_ann: bool):
+    """Pool queries and run the selected backend (or the exact latent scan)."""
+    psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
+    if not use_ann:
+        _, cand = mips_topk(psi_q, index.W, k_prime)
+        return cand
+    be = registry.get_backend(index.backend)
+    over = be.defaults(index.cfg)
+    if nprobe is not None:
+        over["nprobe"] = nprobe
+    over = {k: v for k, v in over.items() if v is not None}
+    _, cand = be.search(index.ann, QueryBatch(psi_q, q_tokens, q_mask),
+                        k_prime, **over)
+    return cand
 
 
 def query(index: LemurIndex, q_tokens, q_mask=None, *, k: int | None = None,
           k_prime: int | None = None, nprobe: int | None = None,
           use_ann: bool = True):
-    """q_tokens: (B, Tq, d) -> (scores (B, k), doc_ids (B, k))."""
+    """q_tokens: (B, Tq, d) -> (scores (B, k), doc_ids (B, k)).
+
+    ``use_ann=False`` forces the exact latent scan regardless of backend
+    (the Fig. 3 "exact inference" arm).  ``-1``-padded first-stage rows are
+    masked inside ``maxsim.rerank`` — pads can never surface as results."""
     cfg = index.cfg
     k = k or cfg.k
     k_prime = k_prime or cfg.k_prime
     if q_mask is None:
         q_mask = jnp.ones(q_tokens.shape[:2], bool)
-
-    psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
-    if use_ann and index.ann is not None:
-        _, cand = ivf.search_ivf(index.ann, psi_q, nprobe or cfg.ivf_nprobe, k_prime)
-        cand = jnp.maximum(cand, 0)  # -1 pads -> doc 0 (dup-safe: rerank dedups by score)
-    else:
-        _, cand = bruteforce.mips_topk(psi_q, index.W, k_prime)
+    cand = _first_stage(index, q_tokens, q_mask, k_prime, nprobe, use_ann)
     return maxsim.rerank(q_tokens, q_mask, cand, index.doc_tokens, index.doc_mask, k)
 
 
@@ -99,9 +165,4 @@ def candidates(index: LemurIndex, q_tokens, q_mask=None, *, k_prime: int,
     """First-stage candidates only (for recall@k' ablations, Fig. 2 left)."""
     if q_mask is None:
         q_mask = jnp.ones(q_tokens.shape[:2], bool)
-    psi_q = pool_queries(index.psi, q_tokens, q_mask)
-    if use_ann and index.ann is not None:
-        _, cand = ivf.search_ivf(index.ann, psi_q, nprobe or index.cfg.ivf_nprobe, k_prime)
-        return cand
-    _, cand = bruteforce.mips_topk(psi_q, index.W, k_prime)
-    return cand
+    return _first_stage(index, q_tokens, q_mask, k_prime, nprobe, use_ann)

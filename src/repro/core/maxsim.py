@@ -78,14 +78,22 @@ def rerank(q, q_mask, cand_ids, docs, docs_mask, k: int):
     """Exact MaxSim rerank of candidates (the second stage of Fig. 1).
 
     q: (B, Tq, d); cand_ids: (B, k') -> (topk_scores (B, k), topk_ids (B, k)).
+
+    ``-1``-padded candidate rows (first-stage backends pad short results)
+    score ``NEG`` so a pad can only surface — still carrying id ``-1`` — when
+    a row has fewer than ``k`` real candidates.  Clamping pads to doc 0
+    instead would duplicate doc 0 and inflate recall.
     """
-    cd = jnp.take(docs, cand_ids, axis=0)       # (B, k', Td, d)
-    cm = jnp.take(docs_mask, cand_ids, axis=0)  # (B, k', Td)
+    valid = cand_ids >= 0                       # (B, k')
+    safe = jnp.maximum(cand_ids, 0)
+    cd = jnp.take(docs, safe, axis=0)           # (B, k', Td, d)
+    cm = jnp.take(docs_mask, safe, axis=0)      # (B, k', Td)
     s = jnp.einsum("bqd,bmtd->bmqt", q, cd, preferred_element_type=jnp.float32)
     s = jnp.where(cm[:, :, None, :], s, NEG)
     best = jnp.max(s, axis=-1)
     best = jnp.where(q_mask[:, None, :], best, 0.0)
     scores = jnp.sum(best, axis=-1)             # (B, k')
+    scores = jnp.where(valid, scores, NEG)
     top, idx = jax.lax.top_k(scores, k)
     return top, jnp.take_along_axis(cand_ids, idx, axis=1)
 

@@ -1,12 +1,55 @@
 """Serving launcher: build a LEMUR index over a synthetic corpus and serve
-batched retrieval requests, reporting QPS + recall.
+batched retrieval requests, reporting QPS + recall for any registered
+first-stage backend.
 
   PYTHONPATH=src python -m repro.launch.serve --m 8000 --batch 64
+  PYTHONPATH=src python -m repro.launch.serve --backend muvera --m 4000
+  PYTHONPATH=src python -m repro.launch.serve --backend all --m 4000
+
+``--backend`` takes any name from ``repro.anns.registry`` (or ``all`` to
+sweep every backend over the SAME trained reduction).  The jitted query fn
+must compile exactly once per backend — the launcher counts traces and
+reports it.
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def serve_backend(idx, backend, batches, args, *, key=None):
+    """Attach `backend` to a built index and serve; returns metrics dict.
+    ``batches`` is a list of (q, qm, truth) — ground truth is precomputed
+    once in main() since the query stream is identical across backends."""
+    import jax
+
+    from repro.core import recall_at
+    from repro.core.index import attach_backend, query
+
+    bidx = attach_backend(idx, backend, key=key)
+    traces = [0]
+
+    def _query(q, qm):
+        traces[0] += 1
+        return query(bidx, q, qm)
+
+    serve = jax.jit(_query)
+    total_q, total_t, recs = 0, 0.0, []
+    for b, (q, qm, truth) in enumerate(batches):
+        t0 = time.time()
+        s, ids = serve(q, qm)
+        jax.block_until_ready(ids)
+        dt = time.time() - t0
+        if b > 0:  # skip compile batch
+            total_q += args.batch
+            total_t += dt
+        recs.append(float(recall_at(ids, truth).mean()))
+    qps = total_q / max(total_t, 1e-9)
+    rec = sum(recs) / len(recs)
+    print(f"[serve] backend={backend:13s} QPS={qps:.0f}  "
+          f"recall@{args.k}={rec:.3f}  jit_traces={traces[0]}")
+    return {"backend": backend, "qps": qps, f"recall@{args.k}": rec,
+            "jit_traces": traces[0]}
 
 
 def main(argv=None):
@@ -17,42 +60,41 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=64)
     p.add_argument("--n-batches", type=int, default=5)
     p.add_argument("--k", type=int, default=10)
+    p.add_argument("--backend", default="ivf",
+                   help="registered anns backend name, or 'all'")
     args = p.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
 
-    from repro.core import LemurConfig, build_index, maxsim, recall_at
-    from repro.core.index import query
+    from repro.anns import registry
+    from repro.core import LemurConfig, build_index, maxsim
     from repro.data import synthetic
+
+    names = registry.list_backends() if args.backend == "all" else [args.backend]
+    for n in names:
+        registry.get_backend(n)  # fail fast on typos, before the build
 
     corpus = synthetic.make_corpus(m=args.m, d=args.d, avg_tokens=16, max_tokens=24,
                                    seed=0)
     cfg = LemurConfig(d=args.d, d_prime=args.d_prime, m_pretrain=1024, n_train=16384,
                       n_ols=4096, epochs=25, k=args.k, k_prime=256,
-                      anns="ivf", ivf_nprobe=32, sq8=True)
+                      anns=names[0], ivf_nprobe=32, sq8=True)
     t0 = time.time()
     idx = build_index(jax.random.PRNGKey(0), corpus, cfg, verbose=True)
     print(f"[serve] index built in {time.time()-t0:.1f}s "
           f"({args.m/(time.time()-t0):.0f} docs/s)")
 
-    serve = jax.jit(lambda q, qm: query(idx, q, qm))
-    total_q, total_t, recs = 0, 0.0, []
+    batches = []
     for b in range(args.n_batches):
         q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, args.batch, 8,
                                                             seed=100 + b))
         qm = jnp.ones(q.shape[:2], bool)
-        t0 = time.time()
-        s, ids = serve(q, qm)
-        jax.block_until_ready(ids)
-        dt = time.time() - t0
-        if b > 0:  # skip compile batch
-            total_q += args.batch
-            total_t += dt
         _, truth = maxsim.true_topk(q, qm, idx.doc_tokens, idx.doc_mask, args.k)
-        recs.append(float(recall_at(ids, truth).mean()))
-    print(f"[serve] QPS={total_q/max(total_t,1e-9):.0f}  "
-          f"recall@{args.k}={sum(recs)/len(recs):.3f}")
+        batches.append((q, qm, truth))
+
+    for name in names:
+        serve_backend(idx, name, batches, args, key=jax.random.PRNGKey(1))
 
 
 if __name__ == "__main__":

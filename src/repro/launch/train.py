@@ -24,6 +24,9 @@ def main(argv=None):
     p.add_argument("--checkpoint-every", type=int, default=50)
     p.add_argument("--full", action="store_true",
                    help="use the FULL config (pod hardware) instead of SMOKE")
+    p.add_argument("--backend", default=None,
+                   help="lemur only: first-stage anns backend "
+                        "(repro.anns.registry name)")
     args = p.parse_args(argv)
 
     import jax
@@ -43,6 +46,8 @@ def main(argv=None):
         from repro.core.index import query
 
         cfg = mod.CONFIG if args.full else mod.SMOKE
+        if args.backend:
+            cfg = cfg.replace(anns=args.backend)
         corpus = synthetic.make_corpus(m=4000, d=cfg.d, avg_tokens=12, max_tokens=16,
                                        seed=0)
         idx = build_index(jax.random.PRNGKey(0), corpus, cfg, verbose=True)
@@ -50,7 +55,8 @@ def main(argv=None):
         qm = jnp.ones(q.shape[:2], bool)
         _, truth = maxsim.true_topk(q, qm, idx.doc_tokens, idx.doc_mask, cfg.k)
         _, ids = query(idx, q, qm)
-        print(f"[lemur] recall@{cfg.k} = {float(recall_at(ids, truth).mean()):.3f}")
+        print(f"[lemur] backend={idx.backend} "
+              f"recall@{cfg.k} = {float(recall_at(ids, truth).mean()):.3f}")
         return
 
     cfg = mod.CONFIG if args.full else mod.SMOKE
