@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from benchmarks import common
 from repro.core import recall_at
-from repro.core.index import candidates
+from repro.retriever import SearchParams
 
 
 def run():
@@ -13,8 +13,8 @@ def run():
     truth = common.ground_truth()
     out = {}
     for strategy in ("corpus-query", "corpus", "query"):
-        idx = common.lemur_index(128, query_strategy=strategy)
-        cand = candidates(idx, q, qm, k_prime=200)
+        r = common.lemur_retriever(128, query_strategy=strategy)
+        cand = r.candidates(q, qm, SearchParams(k_prime=200, use_ann=False))
         rec = float(recall_at(cand, truth).mean())
         out[strategy] = rec
         common.emit(f"appendix_d_{strategy}", 0.0, f"recall200={rec:.3f}")

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LemurConfig, build_index, maxsim
+from repro.core import LemurConfig, maxsim
 from repro.data import synthetic
 
 RESULTS = pathlib.Path("results")
@@ -51,19 +51,32 @@ def ground_truth():
     return truth
 
 
+def lemur_retriever(d_prime: int, query_strategy: str = "corpus-query",
+                    backend: str = "ivf"):
+    """A FRESH facade over the cached build — callers may mutate (add docs)
+    without corrupting the shared cache entry."""
+    from repro.retriever import LemurRetriever
+
+    return LemurRetriever(_cached_retriever(d_prime, query_strategy,
+                                            backend).index)
+
+
 @functools.lru_cache(maxsize=8)
-def lemur_index(d_prime: int, query_strategy: str = "corpus-query",
-                backend: str = "ivf"):
+def _cached_retriever(d_prime: int, query_strategy: str = "corpus-query",
+                      backend: str = "ivf"):
     """Deterministic build; disk-cached (psi params + W) so repeated benchmark
     runs skip the training/OLS stage and only re-measure query latency.  The
     cached reduction is shared across backends — only the (cheap) first-stage
-    state is rebuilt per ``backend``."""
+    state is rebuilt per ``backend`` (``LemurRetriever.with_backend``)."""
     import numpy as np
 
-    from repro.core.index import LemurIndex, attach_backend
+    from repro.anns.params import IVFBackendConfig
+    from repro.core.index import LemurIndex
     from repro.core.model import TargetStats
+    from repro.retriever import LemurRetriever
 
-    cfg = LemurConfig(d=D, d_prime=d_prime, anns=backend, ivf_nprobe=32, sq8=True,
+    cfg = LemurConfig(d=D, d_prime=d_prime, anns=backend,
+                      ivf=IVFBackendConfig(nprobe=32, sq8=True),
                       k_prime=512, query_strategy=query_strategy, **_BENCH_CFG)
     cache = RESULTS / f"bench_index_m{M}_d{d_prime}_{query_strategy}_e{cfg.epochs}.npz"
     c = corpus()
@@ -74,14 +87,22 @@ def lemur_index(d_prime: int, query_strategy: str = "corpus-query",
         idx = LemurIndex(cfg, psi, TargetStats(jnp.asarray(z["mean"]), jnp.asarray(z["std"])),
                          jnp.asarray(z["W"]), jnp.asarray(c.doc_tokens),
                          jnp.asarray(c.doc_mask), "bruteforce", None)
-        return attach_backend(idx, backend, key=jax.random.PRNGKey(3), cfg=cfg)
-    idx = build_index(jax.random.PRNGKey(0), c, cfg)
+        return LemurRetriever(idx).with_backend(backend, key=jax.random.PRNGKey(3),
+                                                cfg=cfg)
+    r = LemurRetriever.build(c, cfg, key=jax.random.PRNGKey(0))
+    idx = r.index
     np.savez(cache, k=np.asarray(idx.psi["dense"]["kernel"]),
              b=np.asarray(idx.psi["dense"]["bias"]),
              g=np.asarray(idx.psi["ln"]["scale"]), beta=np.asarray(idx.psi["ln"]["bias"]),
              mean=np.asarray(idx.stats.mean), std=np.asarray(idx.stats.std),
              W=np.asarray(idx.W))
-    return idx
+    return r
+
+
+def lemur_index(d_prime: int, query_strategy: str = "corpus-query",
+                backend: str = "ivf"):
+    """v0 shim: the bare LemurIndex behind :func:`lemur_retriever`."""
+    return lemur_retriever(d_prime, query_strategy, backend).index
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:

@@ -10,13 +10,12 @@ to the FDE dimension match the paper's setup.)
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from repro.anns import MuveraConfig, doc_fde, mips_topk, query_fde
 from repro.core import recall_at
-from repro.core.index import candidates, query
+from repro.retriever import SearchParams
 
 D_PRIMES = (64, 128, 256)
 FDE_DIM = 1280  # 10x the middle d' — mirrors "10240 vs 1024" in the paper
@@ -30,10 +29,10 @@ def run():
 
     # --- left: candidate recall vs k' ---
     for dp in D_PRIMES:
-        idx = common.lemur_index(dp)
+        r = common.lemur_retriever(dp)
         rs = []
         for kp in KPRIMES:
-            cand = candidates(idx, q, qm, k_prime=kp)
+            cand = r.candidates(q, qm, SearchParams(k_prime=kp, use_ann=False))
             rs.append(float(recall_at(cand, truth).mean()))
         out["recall_curves"][f"lemur_d{dp}"] = rs
         common.emit(f"fig2_recall_lemur_d{dp}_k{KPRIMES[-1]}", 0.0, f"recall={rs[-1]:.3f}")
@@ -51,13 +50,11 @@ def run():
 
     # --- right: end-to-end latency vs recall per d' ---
     for dp in D_PRIMES:
-        idx = common.lemur_index(dp)
-
-        def go(qq, qqm):
-            return query(idx, qq, qqm, k_prime=200, use_ann=True)
-
-        t = common.timeit(jax.jit(go), q, qm)
-        _, ids = go(q, qm)
+        r = common.lemur_retriever(dp)
+        params = SearchParams(k_prime=200)
+        t = common.timeit(lambda qq, qqm, _r=r, p=params: _r.search(qq, qqm, p),
+                          q, qm)
+        _, ids = r.search(q, qm, params)
         rec = float(recall_at(ids, truth).mean())
         qps = q.shape[0] / t
         out["e2e"][f"d{dp}"] = {"recall": rec, "qps": qps}

@@ -2,18 +2,15 @@
 
 Claim C3: the ANNS index wins below the very highest recall levels; exact
 scan catches up at recall ~1 (and on small corpora).  The IVF arm sweeps
-``nprobe`` (the recall/latency knob); with ``backends=[...]`` (wired to
-``benchmarks/run.py --backend``) every other registered backend is measured
-at its default operating point through the same unified ``query()``
-pipeline."""
+``nprobe`` (the recall/latency knob) as typed ``SearchParams``; with
+``backends=[...]`` (wired to ``benchmarks/run.py --backend``) every other
+registered backend is measured at its default operating point through the
+same unified ``LemurRetriever.search`` pipeline."""
 from __future__ import annotations
 
-import jax
-
 from benchmarks import common
-from repro.anns import registry
 from repro.core import recall_at
-from repro.core.index import query
+from repro.retriever import IVFSearchParams, SearchParams
 
 NPROBES = (4, 8, 16, 32, 64)
 
@@ -21,24 +18,20 @@ NPROBES = (4, 8, 16, 32, 64)
 def run(backends=None):
     q, qm = common.queries()
     truth = common.ground_truth()
-    idx = common.lemur_index(128)
+    r = common.lemur_retriever(128)
     out = {"exact": {}, "ivf": [], "backends": {}}
 
-    def exact(qq, qqm):
-        return query(idx, qq, qqm, k_prime=200, use_ann=False)
-
-    t = common.timeit(jax.jit(exact), q, qm)
-    _, ids = exact(q, qm)
+    exact_params = SearchParams(k_prime=200, use_ann=False)
+    t = common.timeit(lambda a, b: r.search(a, b, exact_params), q, qm)
+    _, ids = r.search(q, qm, exact_params)
     rec = float(recall_at(ids, truth).mean())
     out["exact"] = {"recall": rec, "qps": q.shape[0] / t}
     common.emit("fig3_exact", t / q.shape[0] * 1e6, f"recall={rec:.3f}")
 
     for nprobe in NPROBES:
-        def ann(qq, qqm, n=nprobe):
-            return query(idx, qq, qqm, k_prime=200, use_ann=True, nprobe=n)
-
-        t = common.timeit(jax.jit(ann), q, qm)
-        _, ids = ann(q, qm)
+        params = SearchParams(k_prime=200, backend=IVFSearchParams(nprobe=nprobe))
+        t = common.timeit(lambda a, b, p=params: r.search(a, b, p), q, qm)
+        _, ids = r.search(q, qm, params)
         rec = float(recall_at(ids, truth).mean())
         out["ivf"].append({"nprobe": nprobe, "recall": rec, "qps": q.shape[0] / t})
         common.emit(f"fig3_ivf_nprobe{nprobe}", t / q.shape[0] * 1e6,
@@ -47,10 +40,10 @@ def run(backends=None):
     for name in (backends or []):
         if name == "ivf":
             continue  # swept above
-        bidx = common.lemur_index(128, backend=name)
-        fn = jax.jit(lambda a, b, _i=bidx: query(_i, a, b, k_prime=200))
-        t = common.timeit(fn, q, qm)
-        _, ids = fn(q, qm)
+        br = common.lemur_retriever(128, backend=name)
+        params = SearchParams(k_prime=200)
+        t = common.timeit(lambda a, b, _r=br, p=params: _r.search(a, b, p), q, qm)
+        _, ids = br.search(q, qm, params)
         rec = float(recall_at(ids, truth).mean())
         out["backends"][name] = {"recall": rec, "qps": q.shape[0] / t}
         common.emit(f"fig3_{name}", t / q.shape[0] * 1e6, f"recall={rec:.3f}")

@@ -1,12 +1,14 @@
 """Table 2 / Fig. 4: best QPS at ≥80% recall (k=10, CPU-scaled corpus).
 
 Every registered first-stage backend runs through the SAME unified
-pool → candidates → rerank pipeline (``core.index.query``) over the same
-trained LEMUR reduction; token-level baselines (muvera, dessert,
+pool → candidates → rerank pipeline (``LemurRetriever.search``) over the
+same trained LEMUR reduction; token-level baselines (muvera, dessert,
 token_pruning) simply ignore the latent side of the query batch.  Each
-backend gets a hyperparameter grid-search and we report its fastest
-configuration clearing the recall bar (the paper's Pareto protocol), plus
-the exact-MaxSim latency ceiling.
+backend gets a hyperparameter grid-search — a list of typed
+``SearchParams`` — and we report its fastest configuration clearing the
+recall bar (the paper's Pareto protocol), plus the exact-MaxSim latency
+ceiling.  The facade compiles one query fn per SearchParams, so ``timeit``
+measures steady-state latency by construction.
 
 ``run(backends=[...])`` restricts the sweep (wired to
 ``benchmarks/run.py --backend``); per-backend rows are also written to
@@ -14,26 +16,38 @@ the exact-MaxSim latency ceiling.
 backend separately."""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from benchmarks import common
 from repro.anns import registry
 from repro.core import maxsim, recall_at
-from repro.core.index import query
+from repro.retriever import IVFSearchParams, SearchParams, TokenPruningSearchParams
 
 RECALL_BAR = 0.8
 
-# per-backend query-time grids; {} means the backend has no per-call knob
-# beyond k' (the shared rerank budget)
+# per-backend query-time grids: typed SearchParams; backends without
+# per-call knobs beyond k' (the shared rerank budget) sweep k' only
 SWEEPS = {
-    "ivf": [{"nprobe": n, "k_prime": kp} for n in (8, 16, 32, 64)
-            for kp in (50, 100, 200)],
-    "bruteforce": [{"k_prime": kp} for kp in (50, 100, 200)],
-    "muvera": [{"k_prime": kp} for kp in (50, 100, 200, 400)],
-    "dessert": [{"k_prime": kp} for kp in (50, 100, 200, 400)],
-    "token_pruning": [{"nprobe": n, "k_prime": kp} for n in (2, 4, 8)
-                      for kp in (100, 200, 400)],
+    "ivf": [SearchParams(k_prime=kp, backend=IVFSearchParams(nprobe=n))
+            for n in (8, 16, 32, 64) for kp in (50, 100, 200)],
+    "bruteforce": [SearchParams(k_prime=kp) for kp in (50, 100, 200)],
+    "muvera": [SearchParams(k_prime=kp) for kp in (50, 100, 200, 400)],
+    "dessert": [SearchParams(k_prime=kp) for kp in (50, 100, 200, 400)],
+    "token_pruning": [SearchParams(k_prime=kp,
+                                   backend=TokenPruningSearchParams(nprobe=n))
+                      for n in (2, 4, 8) for kp in (100, 200, 400)],
 }
+
+
+def _row_params(params: SearchParams) -> dict:
+    """JSON-able row label for one grid point."""
+    row = {"k_prime": params.k_prime}
+    if params.backend is not None:
+        row |= {k: v for k, v in dataclasses.asdict(params.backend).items()
+                if v is not None}
+    return row
 
 
 def _best(rows):
@@ -44,15 +58,16 @@ def _best(rows):
 
 
 def sweep_backend(name: str, q, qm, truth):
-    """Grid-search one backend's query hyperparameters through query()."""
-    idx = common.lemur_index(128, backend=name)
+    """Grid-search one backend's SearchParams through the facade."""
+    r = common.lemur_retriever(128, backend=name)
     rows = []
-    for params in SWEEPS.get(name, [{"k_prime": kp} for kp in (50, 100, 200)]):
-        fn = jax.jit(lambda a, b, p=dict(params): query(idx, a, b, use_ann=True, **p))
-        t = common.timeit(fn, q, qm, iters=3)
-        _, ids = fn(q, qm)
-        rows.append(params | {"recall": float(recall_at(ids, truth).mean()),
-                              "qps": q.shape[0] / t})
+    for params in SWEEPS.get(name, [SearchParams(k_prime=kp)
+                                    for kp in (50, 100, 200)]):
+        t = common.timeit(lambda a, b, p=params: r.search(a, b, p), q, qm, iters=3)
+        _, ids = r.search(q, qm, params)
+        rows.append(_row_params(params)
+                    | {"recall": float(recall_at(ids, truth).mean()),
+                       "qps": q.shape[0] / t})
     return rows
 
 

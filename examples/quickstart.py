@@ -1,31 +1,56 @@
-"""Quickstart: build a LEMUR index on a synthetic multi-vector corpus and
-retrieve with the full Fig. 1 pipeline — ψ pooling -> latent ANN -> exact
-MaxSim rerank.
+"""Quickstart: build a LEMUR retriever on a synthetic multi-vector corpus
+and retrieve with the full Fig. 1 pipeline — ψ pooling -> latent ANN ->
+exact MaxSim rerank — through the stable Retriever API v1 facade, then
+round-trip it through save/load.
 
   PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py --m 800 --epochs 8   # CI smoke
 """
+import argparse
+import tempfile
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import LemurConfig, build_index, maxsim, recall_at
-from repro.core.index import query
+from repro.core import LemurConfig, maxsim, recall_at
 from repro.data import synthetic
+from repro.retriever import IVFBackendConfig, LemurRetriever, SearchParams
+
+p = argparse.ArgumentParser()
+p.add_argument("--m", type=int, default=3000, help="corpus size")
+p.add_argument("--epochs", type=int, default=30, help="psi pretrain epochs")
+args = p.parse_args()
 
 # 1. a corpus of multi-vector documents (sets of unit-norm token embeddings)
-corpus = synthetic.make_corpus(m=3000, d=32, avg_tokens=12, max_tokens=16, seed=0)
+corpus = synthetic.make_corpus(m=args.m, d=32, avg_tokens=12, max_tokens=16, seed=0)
 
-# 2. LEMUR: learn ψ against m' sampled docs, fit W rows by OLS, index W
+# 2. LEMUR: learn ψ against m' sampled docs, fit W rows by OLS, index W.
+#    Backend knobs live in per-backend config namespaces (cfg.ivf, ...).
 cfg = LemurConfig(d=32, d_prime=192, m_pretrain=768, n_train=12288, n_ols=3072,
-                  epochs=30, k=10, k_prime=256, anns="ivf", ivf_nprobe=48)
-index = build_index(jax.random.PRNGKey(0), corpus, cfg, verbose=True)
+                  epochs=args.epochs, k=10, k_prime=256, anns="ivf",
+                  ivf=IVFBackendConfig(nprobe=48))
+retriever = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0), verbose=True)
 
-# 3. query (corpus-query strategy mirrors the paper's default)
+# 3. query (corpus-query strategy mirrors the paper's default); every
+#    query-time knob is a typed, jit-static SearchParams
 q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 32, q_tokens=8, seed=1))
 q_mask = jnp.ones(q.shape[:2], bool)
-scores, doc_ids = query(index, q, q_mask)
+params = SearchParams(k=10)
+scores, doc_ids = retriever.search(q, q_mask, params)
 
 # 4. evaluate against exact MaxSim ground truth
-_, truth = maxsim.true_topk(q, q_mask, index.doc_tokens, index.doc_mask, cfg.k)
+idx = retriever.index
+_, truth = maxsim.true_topk(q, q_mask, idx.doc_tokens, idx.doc_mask, cfg.k)
 print(f"recall@{cfg.k}: {float(recall_at(doc_ids, truth).mean()):.3f}")
 print("top-3 docs for query 0:", doc_ids[0, :3].tolist(),
       "scores:", [round(float(s), 3) for s in scores[0, :3]])
+
+# 5. persistence: save/load reproduces the search ids bit-identically
+with tempfile.TemporaryDirectory() as d:
+    retriever.save(d)
+    reloaded = LemurRetriever.load(d)
+    _, ids2 = reloaded.search(q, q_mask, params)
+    assert (np.asarray(ids2) == np.asarray(doc_ids)).all()
+    print(f"save/load round-trip OK ({reloaded!r}, "
+          f"jit traces after reload: {reloaded.trace_count(params)})")

@@ -1,5 +1,6 @@
 """Batched serving example: the serving driver with latency percentiles —
-any registered first-stage backend vs exact MaxSim on the same corpus.
+any registered first-stage backend vs exact MaxSim on the same corpus,
+through the LemurRetriever facade (one compiled query fn per SearchParams).
 
   PYTHONPATH=src python examples/serve_batched.py
   PYTHONPATH=src python examples/serve_batched.py --backend muvera
@@ -11,9 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LemurConfig, build_index, maxsim, recall_at
-from repro.core.index import query
+from repro.core import LemurConfig, maxsim, recall_at
 from repro.data import synthetic
+from repro.retriever import IVFBackendConfig, LemurRetriever, SearchParams
 
 p = argparse.ArgumentParser()
 p.add_argument("--backend", default="ivf",
@@ -22,27 +23,32 @@ args = p.parse_args()
 
 corpus = synthetic.make_corpus(m=6000, d=32, avg_tokens=12, max_tokens=16, seed=0)
 cfg = LemurConfig(d=32, d_prime=128, m_pretrain=512, n_train=8192, n_ols=2048,
-                  epochs=15, k=10, k_prime=128, anns=args.backend, ivf_nprobe=16)
-index = build_index(jax.random.PRNGKey(0), corpus, cfg, verbose=True)
+                  epochs=15, k=10, k_prime=128, anns=args.backend,
+                  ivf=IVFBackendConfig(nprobe=16))
+retriever = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0), verbose=True)
 
-serve = jax.jit(lambda q, m: query(index, q, m))
-exact = jax.jit(lambda q, m: maxsim.true_topk(q, m, index.doc_tokens,
-                                              index.doc_mask, cfg.k))
+idx = retriever.index
+params = SearchParams()  # cfg defaults: k=10, k'=128, backend namespace knobs
+exact = jax.jit(lambda q, m: maxsim.true_topk(q, m, idx.doc_tokens,
+                                              idx.doc_mask, cfg.k))
 
 lat_lemur, lat_exact, recs = [], [], []
 for b in range(8):
     q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 32, 8, seed=200 + b))
     qm = jnp.ones(q.shape[:2], bool)
-    t0 = time.perf_counter(); s, ids = serve(q, qm); jax.block_until_ready(ids)
+    t0 = time.perf_counter()
+    s, ids = retriever.search(q, qm, params)
+    jax.block_until_ready(ids)
     lat_lemur.append(time.perf_counter() - t0)
     t0 = time.perf_counter(); _, truth = exact(q, qm); jax.block_until_ready(truth)
     lat_exact.append(time.perf_counter() - t0)
     recs.append(float(recall_at(ids, truth).mean()))
 
-lat_lemur, lat_exact = lat_lemur[1:], lat_exact[1:]  # drop compile batch
+lat_lemur, lat_exact, recs = lat_lemur[1:], lat_exact[1:], recs[1:]  # drop compile batch
 p50 = lambda xs: np.percentile(xs, 50) * 1e3
 p99 = lambda xs: np.percentile(xs, 99) * 1e3
-print(f"LEMUR[{index.backend}]: p50={p50(lat_lemur):.1f}ms "
-      f"p99={p99(lat_lemur):.1f}ms / 32-query batch")
+print(f"LEMUR[{retriever.backend}]: p50={p50(lat_lemur):.1f}ms "
+      f"p99={p99(lat_lemur):.1f}ms / 32-query batch "
+      f"(jit traces: {retriever.trace_count(params)})")
 print(f"exact : p50={p50(lat_exact):.1f}ms p99={p99(lat_exact):.1f}ms")
 print(f"recall@10 = {np.mean(recs):.3f}  speedup x{np.mean(lat_exact)/np.mean(lat_lemur):.1f}")

@@ -4,7 +4,7 @@ Each class adapts one functional ANNS module (`bruteforce`, `ivf`,
 `dessert`, `muvera`, `token_pruning`) to the :class:`repro.anns.base.Retriever`
 protocol and registers itself by name.  The functional modules stay usable
 directly (tests/benchmarks call them); these wrappers are what
-``core.index.LemurIndex`` dispatches through.
+``repro.retriever.LemurRetriever`` dispatches through.
 
 Representation per backend:
 
@@ -18,8 +18,12 @@ name                  indexes     query side
 ``token_pruning``     tokens      PLAID-style centroid interaction
 ====================  ==========  =============================================
 
-``cfg`` is duck-typed: any object exposing the knobs below works (and
-``None`` selects every default), so backends never import the core layer.
+``build`` takes the backend's own config namespace (its ``config_cls``, a
+field of ``LemurConfig``: ``cfg.ivf``, ``cfg.muvera``, …); ``None`` selects
+every default.  ``search`` takes the backend's ``params_cls`` — the typed
+replacement for the v0 ``**overrides`` — and ``pack_state``/``unpack_state``
+give ``LemurRetriever.save()/load()`` a bit-exact persistence seam without
+the facade learning any state type.
 """
 from __future__ import annotations
 
@@ -32,12 +36,17 @@ from repro.anns import muvera as _muvera
 from repro.anns import token_pruning as _tp
 from repro.anns.base import CorpusView, QueryBatch, pad_topk
 from repro.anns.bruteforce import mips_topk
+from repro.anns.params import (
+    BruteforceBackendConfig,
+    DessertBackendConfig,
+    IVFBackendConfig,
+    IVFSearchParams,
+    MuveraBackendConfig,
+    NoSearchParams,
+    TokenPruningBackendConfig,
+    TokenPruningSearchParams,
+)
 from repro.anns.registry import register
-
-
-def _cfg(cfg, name, default):
-    v = getattr(cfg, name, default) if cfg is not None else default
-    return default if v is None else v
 
 
 @register
@@ -46,6 +55,8 @@ class BruteforceRetriever:
 
     name = "bruteforce"
     representation = "latent"
+    config_cls = BruteforceBackendConfig
+    params_cls = NoSearchParams
 
     def build(self, key, corpus: CorpusView, cfg=None):
         if corpus.latent is None:
@@ -53,14 +64,20 @@ class BruteforceRetriever:
                              "(CorpusView.latent is None)")
         return {"W": jnp.asarray(corpus.latent)}
 
-    def search(self, state, query: QueryBatch, k: int, **_):
+    def search(self, state, query: QueryBatch, k: int, params=None):
         return mips_topk(query.latent, state["W"], k)
 
     def add(self, state, corpus: CorpusView):
         return {"W": jnp.concatenate([state["W"], jnp.asarray(corpus.latent)], 0)}
 
-    def defaults(self, cfg) -> dict:
-        return {}
+    def default_params(self, cfg) -> NoSearchParams:
+        return NoSearchParams()
+
+    def pack_state(self, state):
+        return {"W": state["W"]}, {}
+
+    def unpack_state(self, arrays, meta):
+        return {"W": arrays["W"]}
 
 
 @register
@@ -69,23 +86,41 @@ class IVFRetriever:
 
     name = "ivf"
     representation = "latent"
+    config_cls = IVFBackendConfig
+    params_cls = IVFSearchParams
 
-    def build(self, key, corpus: CorpusView, cfg=None):
+    def build(self, key, corpus: CorpusView, cfg: IVFBackendConfig | None = None):
         if corpus.latent is None:
             raise ValueError("ivf backend needs latent vectors")
+        cfg = cfg or IVFBackendConfig()
         return _ivf.build_ivf(key, jnp.asarray(corpus.latent),
-                              int(_cfg(cfg, "ivf_nlist", 0)),
-                              sq8=bool(_cfg(cfg, "sq8", False)))
+                              int(cfg.nlist), sq8=bool(cfg.sq8))
 
-    def search(self, state, query: QueryBatch, k: int, *, nprobe=None, **_):
+    def search(self, state, query: QueryBatch, k: int,
+               params: IVFSearchParams | None = None):
+        nprobe = params.nprobe if params is not None else None
         nprobe = min(int(nprobe or min(32, state.nlist)), state.nlist)
         return _ivf.search_ivf(state, query.latent, nprobe, k)
 
     def add(self, state, corpus: CorpusView):
         return _ivf.extend_ivf(state, jnp.asarray(corpus.latent))
 
-    def defaults(self, cfg) -> dict:
-        return {"nprobe": _cfg(cfg, "ivf_nprobe", None)}
+    def default_params(self, cfg) -> IVFSearchParams:
+        return IVFSearchParams(nprobe=cfg.nprobe if cfg is not None else None)
+
+    def pack_state(self, state: _ivf.IVFIndex):
+        arrays = {"centroids": state.centroids, "ids": state.ids,
+                  "vecs": state.vecs, "counts": state.counts}
+        if state.scales is not None:
+            arrays["scales"] = state.scales
+        if state.mean is not None:
+            arrays["mean"] = state.mean
+        return arrays, {}
+
+    def unpack_state(self, arrays, meta):
+        return _ivf.IVFIndex(centroids=arrays["centroids"], ids=arrays["ids"],
+                             vecs=arrays["vecs"], scales=arrays.get("scales"),
+                             counts=arrays["counts"], mean=arrays.get("mean"))
 
 
 @register
@@ -94,17 +129,17 @@ class MuveraRetriever:
 
     name = "muvera"
     representation = "tokens"
+    config_cls = MuveraBackendConfig
+    params_cls = NoSearchParams
 
-    def build(self, key, corpus: CorpusView, cfg=None):
-        mcfg = _muvera.MuveraConfig(
-            r_reps=int(_cfg(cfg, "muvera_r_reps", 20)),
-            k_sim=int(_cfg(cfg, "muvera_k_sim", 5)),
-            final_dim=int(_cfg(cfg, "muvera_final_dim", 1280)),
-        )
+    def build(self, key, corpus: CorpusView, cfg: MuveraBackendConfig | None = None):
+        cfg = cfg or MuveraBackendConfig()
+        mcfg = _muvera.MuveraConfig(r_reps=int(cfg.r_reps), k_sim=int(cfg.k_sim),
+                                    final_dim=int(cfg.final_dim))
         dfde = _muvera.doc_fde(corpus.doc_tokens, corpus.doc_mask, mcfg)
         return MuveraState(dfde, mcfg)
 
-    def search(self, state, query: QueryBatch, k: int, **_):
+    def search(self, state, query: QueryBatch, k: int, params=None):
         qfde = _muvera.query_fde(query.tokens, query.mask, state.mcfg)
         return mips_topk(qfde, state.dfde, k)
 
@@ -112,8 +147,15 @@ class MuveraRetriever:
         new = _muvera.doc_fde(corpus.doc_tokens, corpus.doc_mask, state.mcfg)
         return MuveraState(jnp.concatenate([state.dfde, new], 0), state.mcfg)
 
-    def defaults(self, cfg) -> dict:
-        return {}
+    def default_params(self, cfg) -> NoSearchParams:
+        return NoSearchParams()
+
+    def pack_state(self, state: "MuveraState"):
+        return {"dfde": state.dfde}, {"mcfg": state.mcfg.to_dict()}
+
+    def unpack_state(self, arrays, meta):
+        return MuveraState(arrays["dfde"],
+                           _muvera.MuveraConfig.from_dict(meta["mcfg"]))
 
 
 @register
@@ -122,15 +164,16 @@ class DessertRetriever:
 
     name = "dessert"
     representation = "tokens"
+    config_cls = DessertBackendConfig
+    params_cls = NoSearchParams
 
-    def build(self, key, corpus: CorpusView, cfg=None):
-        dcfg = _dessert.DessertConfig(
-            n_tables=int(_cfg(cfg, "dessert_tables", 32)),
-            n_bits=int(_cfg(cfg, "dessert_bits", 5)),
-        )
+    def build(self, key, corpus: CorpusView, cfg: DessertBackendConfig | None = None):
+        cfg = cfg or DessertBackendConfig()
+        dcfg = _dessert.DessertConfig(n_tables=int(cfg.tables),
+                                      n_bits=int(cfg.bits))
         return _dessert.build_dessert(corpus.doc_tokens, corpus.doc_mask, dcfg)
 
-    def search(self, state, query: QueryBatch, k: int, **_):
+    def search(self, state, query: QueryBatch, k: int, params=None):
         m = state.occupancy.shape[0]
         s, ids = _dessert.search_dessert(state, query.tokens, query.mask,
                                          k_prime=min(k, m))
@@ -139,8 +182,15 @@ class DessertRetriever:
     def add(self, state, corpus: CorpusView):
         return _dessert.extend_dessert(state, corpus.doc_tokens, corpus.doc_mask)
 
-    def defaults(self, cfg) -> dict:
-        return {}
+    def default_params(self, cfg) -> NoSearchParams:
+        return NoSearchParams()
+
+    def pack_state(self, state: _dessert.DessertIndex):
+        return {"occupancy": state.occupancy, "hyper": state.hyper}, {}
+
+    def unpack_state(self, arrays, meta):
+        return _dessert.DessertIndex(occupancy=arrays["occupancy"],
+                                     hyper=arrays["hyper"])
 
 
 @register
@@ -149,15 +199,21 @@ class TokenPruningRetriever:
 
     name = "token_pruning"
     representation = "tokens"
+    config_cls = TokenPruningBackendConfig
+    params_cls = TokenPruningSearchParams
 
-    def build(self, key, corpus: CorpusView, cfg=None):
+    def build(self, key, corpus: CorpusView,
+              cfg: TokenPruningBackendConfig | None = None):
         if key is None:
             key = jax.random.PRNGKey(0)
+        cfg = cfg or TokenPruningBackendConfig()
         idx = _tp.build_token_pruning(key, corpus.doc_tokens, corpus.doc_mask,
-                                      nlist=int(_cfg(cfg, "tp_nlist", 0)))
+                                      nlist=int(cfg.nlist))
         return TokenPruningState(idx, corpus.m)
 
-    def search(self, state, query: QueryBatch, k: int, *, nprobe=None, **_):
+    def search(self, state, query: QueryBatch, k: int,
+               params: TokenPruningSearchParams | None = None):
+        nprobe = params.nprobe if params is not None else None
         nlist = state.index.centroids.shape[0]
         nprobe = min(int(nprobe or 8), nlist)
         s, ids = _tp.search_token_pruning(state.index, query.tokens, query.mask,
@@ -170,8 +226,21 @@ class TokenPruningRetriever:
                                        corpus.doc_mask, m_old=state.m)
         return TokenPruningState(idx, state.m + corpus.m)
 
-    def defaults(self, cfg) -> dict:
-        return {"nprobe": _cfg(cfg, "tp_nprobe", None)}
+    def default_params(self, cfg) -> TokenPruningSearchParams:
+        return TokenPruningSearchParams(
+            nprobe=cfg.nprobe if cfg is not None else None)
+
+    def pack_state(self, state: "TokenPruningState"):
+        arrays = {"centroids": state.index.centroids,
+                  "doc_lists": state.index.doc_lists,
+                  "counts": state.index.counts}
+        return arrays, {"m": int(state.m)}
+
+    def unpack_state(self, arrays, meta):
+        idx = _tp.TokenPruningIndex(centroids=arrays["centroids"],
+                                    doc_lists=arrays["doc_lists"],
+                                    counts=arrays["counts"])
+        return TokenPruningState(idx, int(meta["m"]))
 
 
 # --------------------------------------------------------------------------

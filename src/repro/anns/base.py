@@ -16,14 +16,16 @@ The contract
     representation it indexes.  The returned ``state`` is an opaque jax
     pytree — ``core.index.LemurIndex`` stores it without knowing its type.
 
-``search(state, query, k, **overrides) -> (scores, ids)``
+``search(state, query, k, params=None) -> (scores, ids)``
     Pure, jit-able candidate generation.  ``query`` is a
     :class:`QueryBatch` (pooled ψ latent + raw tokens); returns ``(B, k)``
     approximate scores and int32 doc ids, ``-1``-padded when a row yields
     fewer than ``k`` valid candidates.  Downstream ``maxsim.rerank`` masks
     ``-1`` ids to ``NEG`` so pads can never surface as results.
-    ``overrides`` are per-call knobs a backend may expose (e.g. ``nprobe``
-    for IVF / token pruning) — unknown keys must be ignored.
+    ``params`` is an instance of the backend's declared ``params_cls``
+    (:mod:`repro.anns.params`) — the typed replacement for the v0
+    ``**overrides`` kwargs; ``None`` selects every default.  ``k`` and
+    ``params`` are jit-static.
 
 ``add(state, corpus) -> state``
     Incremental growth: append documents without rebuilding from scratch
@@ -31,14 +33,24 @@ The contract
     new W rows never touch ψ or existing rows, and the first-stage index
     must keep up).  Ids of added docs continue the existing numbering.
 
-Backends register themselves by name in :mod:`repro.anns.registry`; the
-string key is what ``LemurConfig.anns`` / ``--backend`` select.
+``pack_state(state) / unpack_state(arrays, meta)``
+    Persistence seam for ``LemurRetriever.save()/load()``: the backend
+    flattens its opaque state to a flat ``{name: array}`` dict plus a
+    JSON-able meta dict, and reconstructs it bit-identically.  The facade
+    never learns the state's type.
+
+Backends register themselves by name in :mod:`repro.anns.registry`,
+together with their build-time config namespace (``config_cls``) and
+query-time params type (``params_cls``); the string key is what
+``LemurConfig.anns`` / ``--backend`` select.
 """
 from __future__ import annotations
 
 from typing import Any, NamedTuple, Protocol, runtime_checkable
 
 import jax
+
+from repro.anns.params import BackendConfig, BackendSearchParams
 
 
 class CorpusView(NamedTuple):
@@ -81,18 +93,36 @@ class Retriever(Protocol):
     name: str
     #: which CorpusView/QueryBatch field drives this backend
     representation: str  # "latent" | "tokens"
+    #: build-time config namespace (a field of LemurConfig) and query-time
+    #: params type — registered alongside the backend in anns/registry.py
+    config_cls: type[BackendConfig]
+    params_cls: type[BackendSearchParams]
 
     def build(self, key, corpus: CorpusView, cfg) -> Any:
-        """Offline construction -> opaque pytree state."""
+        """Offline construction -> opaque pytree state.  ``cfg`` is an
+        instance of ``config_cls`` (or None for every default)."""
         ...
 
-    def search(self, state, query: QueryBatch, k: int, **overrides):
+    def search(self, state, query: QueryBatch, k: int,
+               params: BackendSearchParams | None = None):
         """(scores (B, k), ids (B, k) int32, -1 padded).  Must be jit-able
-        with ``k`` (and any override) static."""
+        with ``k`` and ``params`` static."""
         ...
 
     def add(self, state, corpus: CorpusView) -> Any:
         """Append documents; returned state serves ids [0, m_old + m_new)."""
+        ...
+
+    def default_params(self, cfg) -> BackendSearchParams:
+        """Fully-resolved query params for a ``config_cls`` instance."""
+        ...
+
+    def pack_state(self, state) -> tuple[dict[str, Any], dict]:
+        """state -> (flat {name: array} dict, JSON-able meta)."""
+        ...
+
+    def unpack_state(self, arrays: dict[str, Any], meta: dict) -> Any:
+        """Inverse of :meth:`pack_state` (bit-identical)."""
         ...
 
 

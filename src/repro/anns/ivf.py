@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns.base import pad_topk
 from repro.anns.kmeans import kmeans
 from repro.anns.quantization import sq8_dequant, sq8_quant
 from repro.kernels import ops
@@ -160,7 +161,4 @@ def search_ivf(index: IVFIndex, q: jax.Array, nprobe: int, k: int):
     kk = min(k, flat_s.shape[1])
     top, pos = jax.lax.top_k(flat_s, kk)
     out_ids = jnp.take_along_axis(flat_i, pos, axis=1)
-    if kk < k:
-        top = jnp.pad(top, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
-        out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)), constant_values=-1)
-    return top, out_ids
+    return pad_topk(top, out_ids, k)

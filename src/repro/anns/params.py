@@ -1,0 +1,103 @@
+"""Per-backend configuration namespaces and typed search parameters.
+
+Retriever API v1 splits every backend's knobs into two frozen dataclasses:
+
+* a **build-time config** (``*BackendConfig``) — what the index looks like
+  (nlist, sq8, sketch sizes …).  ``LemurConfig`` holds one instance per
+  backend as a nested namespace (``cfg.ivf.nprobe`` instead of the old flat
+  ``cfg.ivf_nprobe``), and the registry maps backend name -> config class so
+  ``cfg.backend_config("ivf")`` and ``--set ivf.nprobe=64`` resolve
+  generically.
+
+* **query-time params** (``*SearchParams``) — per-call knobs that used to
+  travel as untyped ``**overrides`` through ``anns/base.py``.  They ride
+  inside :class:`repro.retriever.SearchParams` as its typed ``backend``
+  field and are passed jit-static, so one compiled query fn exists per
+  (backend, params, batch-shape).
+
+This module stays import-light (dataclasses only, no jax) because
+``core.config`` imports it at module scope.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.common.config import ConfigBase
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig(ConfigBase):
+    """Marker base for per-backend build-time config namespaces."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSearchParams(ConfigBase):
+    """Marker base for per-backend query-time knobs (jit-static)."""
+
+
+# --------------------------------------------------------------------------
+# build-time namespaces (defaults == the old flat LemurConfig knobs)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BruteforceBackendConfig(BackendConfig):
+    """Exact latent MIPS has no build-time knobs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFBackendConfig(BackendConfig):
+    nlist: int = 0           # 0 => 4*sqrt(m) rounded down to pow2 (paper's rule)
+    nprobe: int = 32         # default query-time probe count
+    sq8: bool = True         # scalar-quantize the latent corpus (Glass-style)
+
+
+@dataclasses.dataclass(frozen=True)
+class MuveraBackendConfig(BackendConfig):
+    r_reps: int = 20         # MUVERA R
+    k_sim: int = 5           # MUVERA k_sim
+    final_dim: int = 1280
+
+
+@dataclasses.dataclass(frozen=True)
+class DessertBackendConfig(BackendConfig):
+    tables: int = 32         # DESSERT L
+    bits: int = 5            # DESSERT C -> 2^C buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPruningBackendConfig(BackendConfig):
+    nlist: int = 0           # 0 => PLAID 16*sqrt(n) rule
+    nprobe: int = 8
+
+
+# --------------------------------------------------------------------------
+# query-time knobs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NoSearchParams(BackendSearchParams):
+    """Backends whose only query-time knob is the shared k' budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFSearchParams(BackendSearchParams):
+    nprobe: int | None = None    # None => cfg.ivf.nprobe
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPruningSearchParams(BackendSearchParams):
+    nprobe: int | None = None    # None => cfg.token_pruning.nprobe
+
+
+__all__ = [
+    "BackendConfig",
+    "BackendSearchParams",
+    "BruteforceBackendConfig",
+    "IVFBackendConfig",
+    "MuveraBackendConfig",
+    "DessertBackendConfig",
+    "TokenPruningBackendConfig",
+    "NoSearchParams",
+    "IVFSearchParams",
+    "TokenPruningSearchParams",
+]

@@ -1,33 +1,44 @@
 """String-keyed backend registry (mirrors ``configs.registry`` for archs).
 
 ``LemurConfig.anns`` / ``--backend`` select a first-stage retriever by name;
-``core.index`` resolves it here and never imports a concrete backend.
+``core.index`` / ``repro.retriever`` resolve it here and never import a
+concrete backend.
 
     from repro.anns import registry
     be = registry.get_backend("ivf")
-    state = be.build(key, corpus_view, cfg)
-    scores, ids = be.search(state, query_batch, k)
+    state = be.build(key, corpus_view, registry.get_config_cls("ivf")())
+    scores, ids = be.search(state, query_batch, k, be.default_params(None))
 
-Backends self-register at import time via the :func:`register` decorator;
-importing this module imports all built-in backend modules so the registry
-is always fully populated.  ``"exact"`` is kept as an alias for
-``"bruteforce"`` (the seed config spelling).
+Each backend registers three things under its name: the Retriever instance,
+its build-time config namespace (``config_cls`` — the type of the matching
+``LemurConfig`` field, e.g. ``cfg.ivf``), and its query-time params type
+(``params_cls`` — what rides in ``SearchParams.backend``).  Backends
+self-register at import time via the :func:`register` decorator; importing
+this module imports all built-in backend modules so the registry is always
+fully populated.  ``"exact"`` is kept as an alias for ``"bruteforce"`` (the
+seed config spelling).
 """
 from __future__ import annotations
 
 from repro.anns.base import Retriever
+from repro.anns.params import BackendConfig, BackendSearchParams, NoSearchParams
 
 _REGISTRY: dict[str, Retriever] = {}
+_CONFIGS: dict[str, type[BackendConfig]] = {}
+_PARAMS: dict[str, type[BackendSearchParams]] = {}
 _ALIASES = {"exact": "bruteforce"}
 
 
 def register(backend: Retriever) -> Retriever:
-    """Class decorator: instantiate and register under ``cls.name``."""
+    """Class decorator: instantiate and register under ``cls.name``,
+    together with the backend's config namespace and search-params types."""
     inst = backend() if isinstance(backend, type) else backend
     name = inst.name
     if name in _REGISTRY:
         raise ValueError(f"backend {name!r} already registered")
     _REGISTRY[name] = inst
+    _CONFIGS[name] = getattr(inst, "config_cls", BackendConfig)
+    _PARAMS[name] = getattr(inst, "params_cls", NoSearchParams)
     return backend
 
 
@@ -47,6 +58,18 @@ def get_backend(name: str) -> Retriever:
     if name not in _REGISTRY:
         raise KeyError(f"unknown anns backend {name!r}; known: {list_backends()}")
     return _REGISTRY[name]
+
+
+def get_config_cls(name: str) -> type[BackendConfig]:
+    """Build-time config namespace class for a backend name."""
+    get_backend(name)  # populate + validate
+    return _CONFIGS[canonical(name)]
+
+
+def get_params_cls(name: str) -> type[BackendSearchParams]:
+    """Query-time params type for a backend name."""
+    get_backend(name)
+    return _PARAMS[canonical(name)]
 
 
 def list_backends() -> list[str]:

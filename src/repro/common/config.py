@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import typing
 from dataclasses import field
 from typing import Any, Type, TypeVar
 
@@ -38,12 +39,22 @@ class ConfigBase:
     @classmethod
     def from_dict(cls: Type[T], d: dict) -> T:
         kwargs = {}
+        hints = None
         for f in dataclasses.fields(cls):
             if f.name not in d:
                 continue
             v = d[f.name]
-            ft = f.type if isinstance(f.type, type) else None
-            if ft is not None and issubclass(ft, ConfigBase) and isinstance(v, dict):
+            ft = f.type
+            if not isinstance(ft, type):
+                # `from __future__ import annotations` stringifies f.type;
+                # resolve lazily so nested sub-configs still round-trip
+                if hints is None:
+                    try:
+                        hints = typing.get_type_hints(cls)
+                    except Exception:  # unresolvable forward refs: best effort
+                        hints = {}
+                ft = hints.get(f.name)
+            if isinstance(ft, type) and issubclass(ft, ConfigBase) and isinstance(v, dict):
                 v = ft.from_dict(v)
             if isinstance(v, list):
                 v = tuple(v)

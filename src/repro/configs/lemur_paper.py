@@ -4,6 +4,7 @@ n'=16384, Adam(3e-3) 100 epochs, IVF+SQ8 ANNS, k=100, k'=1024.
 Extra (beyond the 40 assigned cells): LEMUR serving / indexing dry-run cells
 over the production mesh — the corpus dimensioned like MS MARCO (Table 1:
 8.84M docs, ~67.5 tokens/doc, d=128 ColBERTv2)."""
+from repro.anns.params import IVFBackendConfig
 from repro.core.config import LemurConfig
 
 CONFIG = LemurConfig(
@@ -19,8 +20,7 @@ CONFIG = LemurConfig(
     k=100,
     k_prime=1024,
     anns="ivf",
-    ivf_nprobe=32,
-    sq8=True,
+    ivf=IVFBackendConfig(nprobe=32, sq8=True),
 )
 
 FAMILY = "lemur"

@@ -1,9 +1,47 @@
-"""LEMUR configuration (paper App. A defaults)."""
+"""LEMUR configuration (paper App. A defaults).
+
+Retriever API v1 splits the config into a build-time core (the reduction:
+d', training sizes, OLS) plus one **per-backend namespace** per registered
+first-stage backend (``cfg.ivf``, ``cfg.muvera``, ``cfg.dessert``,
+``cfg.token_pruning``, ``cfg.bruteforce`` — the ``config_cls`` types
+registered alongside each backend in :mod:`repro.anns.registry`):
+
+    cfg = LemurConfig(anns="ivf", ivf=IVFBackendConfig(nprobe=64, sq8=True))
+    cfg.backend_config()          # -> the active backend's namespace
+    cfg.override({"ivf.nprobe": 16})   # dotted CLI overrides reach inside
+
+The v0 flat knobs (``ivf_nprobe``, ``sq8``, ``dessert_tables``, …) keep
+working as **deprecated aliases**: constructor kwargs and ``replace()`` keys
+are folded into the matching namespace, and attribute reads forward to it —
+both emit a ``DeprecationWarning`` naming the replacement.
+"""
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
+from repro.anns.params import (
+    BruteforceBackendConfig,
+    DessertBackendConfig,
+    IVFBackendConfig,
+    MuveraBackendConfig,
+    TokenPruningBackendConfig,
+)
 from repro.common.config import ConfigBase
+
+# v0 flat knob -> (namespace field, field inside it)
+_LEGACY_KNOBS = {
+    "ivf_nlist": ("ivf", "nlist"),
+    "ivf_nprobe": ("ivf", "nprobe"),
+    "sq8": ("ivf", "sq8"),
+    "dessert_tables": ("dessert", "tables"),
+    "dessert_bits": ("dessert", "bits"),
+    "muvera_r_reps": ("muvera", "r_reps"),
+    "muvera_k_sim": ("muvera", "k_sim"),
+    "muvera_final_dim": ("muvera", "final_dim"),
+    "tp_nlist": ("token_pruning", "nlist"),
+    "tp_nprobe": ("token_pruning", "nprobe"),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,17 +62,12 @@ class LemurConfig(ConfigBase):
     anns: str = "ivf"            # first-stage backend name (anns/registry.py):
                                  # bruteforce|ivf|muvera|dessert|token_pruning
                                  # ("exact" = legacy alias for bruteforce)
-    ivf_nlist: int = 0           # 0 => 16*sqrt(m) rounded down to pow2 (paper's rule)
-    ivf_nprobe: int = 32
-    sq8: bool = True             # scalar-quantize the latent corpus (Glass-style)
-    # baseline-backend knobs (used only when `anns` selects that backend)
-    dessert_tables: int = 32     # DESSERT L
-    dessert_bits: int = 5        # DESSERT C -> 2^C buckets
-    muvera_r_reps: int = 20      # MUVERA R
-    muvera_k_sim: int = 5        # MUVERA k_sim
-    muvera_final_dim: int = 1280
-    tp_nlist: int = 0            # token pruning: 0 => PLAID 16*sqrt(n) rule
-    tp_nprobe: int = 8
+    # per-backend namespaces (used only when `anns` selects that backend)
+    bruteforce: BruteforceBackendConfig = BruteforceBackendConfig()
+    ivf: IVFBackendConfig = IVFBackendConfig()
+    muvera: MuveraBackendConfig = MuveraBackendConfig()
+    dessert: DessertBackendConfig = DessertBackendConfig()
+    token_pruning: TokenPruningBackendConfig = TokenPruningBackendConfig()
     rerank_block: int = 1024     # docs per MaxSim rerank tile
     score_dtype: str = "float32"
 
@@ -47,3 +80,57 @@ class LemurConfig(ConfigBase):
                 f"anns={self.anns!r} is not a registered backend; "
                 f"known: {sorted(known)}"
             )
+
+    def backend_config(self, name: str | None = None):
+        """The config namespace for ``name`` (default: the active backend)."""
+        from repro.anns import registry
+
+        return getattr(self, registry.canonical(name or self.anns))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LemurConfig":
+        # v0 dicts/JSON carry the flat knobs as top-level keys; fold them
+        # through the same deprecation path as constructor kwargs instead of
+        # silently dropping them (ConfigBase.from_dict skips unknown keys)
+        d = dict(d)
+        legacy = {k: d.pop(k) for k in list(d) if k in _LEGACY_KNOBS}
+        cfg = super().from_dict(d)
+        return cfg.replace(**legacy) if legacy else cfg
+
+    def __getattr__(self, name: str):
+        # read-compat for the v0 flat knobs: cfg.ivf_nprobe -> cfg.ivf.nprobe
+        if name in _LEGACY_KNOBS:
+            sub, field = _LEGACY_KNOBS[name]
+            warnings.warn(
+                f"LemurConfig.{name} is deprecated; read cfg.{sub}.{field}",
+                DeprecationWarning, stacklevel=2)
+            return getattr(getattr(self, sub), field)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+
+def _fold_legacy_kwargs(kwargs: dict) -> dict:
+    """Fold v0 flat knobs into their namespace (deprecation path)."""
+    legacy = {k: kwargs.pop(k) for k in list(kwargs) if k in _LEGACY_KNOBS}
+    if not legacy:
+        return kwargs
+    warnings.warn(
+        "flat LemurConfig knobs are deprecated: "
+        + ", ".join(f"{k} -> {_LEGACY_KNOBS[k][0]}.{_LEGACY_KNOBS[k][1]}"
+                    for k in legacy),
+        DeprecationWarning, stacklevel=3)
+    for k, v in legacy.items():
+        sub, field = _LEGACY_KNOBS[k]
+        base = kwargs.get(sub, LemurConfig.__dataclass_fields__[sub].default)
+        kwargs[sub] = base.replace(**{field: v})
+    return kwargs
+
+
+_dataclass_init = LemurConfig.__init__
+
+
+def _compat_init(self, *args, **kwargs):
+    _dataclass_init(self, *args, **_fold_legacy_kwargs(kwargs))
+
+
+LemurConfig.__init__ = _compat_init

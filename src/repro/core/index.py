@@ -1,34 +1,29 @@
-"""LemurIndex: the Fig. 1 pipeline as one object.
+"""LemurIndex: the Fig. 1 pipeline state + v0 free-function shims.
 
-build:  training-token selection (§4.2) -> ψ pre-training against m' sampled
-        docs (§4.3) -> OLS output layer over the full corpus (eq. 7)
-        -> first-stage index via the pluggable backend registry.
-query:  Ψ(X) pooling -> first-stage candidates (any registered backend)
-        -> exact MaxSim rerank -> top-k.
+:class:`LemurIndex` is the immutable pytree holding a built LEMUR index
+(cfg, ψ, target stats, OLS W rows, doc tokens, backend name + opaque
+backend state).  The lifecycle around it — build, search, incremental add,
+backend swap, save/load — lives in :class:`repro.retriever.LemurRetriever`
+(Retriever API v1); the free functions below (``build_index`` /
+``attach_backend`` / ``add_docs`` / ``query`` / ``candidates``) are thin
+back-compat shims over that facade and keep the v0 call sites working.
 
-The first stage is index-agnostic (§3.2's "existing single-vector search
-indexes"): ``cfg.anns`` names a backend in :mod:`repro.anns.registry`
-(bruteforce | ivf | muvera | dessert | token_pruning) and ``LemurIndex``
-holds its state as an opaque pytree.  Dispatch happens at trace time — the
-backend name is a static Python string — so ``jax.jit(query)`` compiles
-once per backend and the whole pool -> candidates -> rerank path stays one
-XLA graph.
+New code should prefer::
+
+    from repro.retriever import LemurRetriever, SearchParams
+    r = LemurRetriever.build(corpus, cfg)
+    scores, ids = r.search(q_tokens, q_mask, SearchParams(k=10))
 """
 from __future__ import annotations
 
-import time
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns import registry
-from repro.anns.base import CorpusView, QueryBatch
-from repro.anns.bruteforce import mips_topk
-from repro.core import indexer, maxsim
 from repro.core.config import LemurConfig
-from repro.core.model import TargetStats, pool_queries, train_phi
+from repro.core.model import TargetStats
 
 
 class LemurIndex(NamedTuple):
@@ -46,101 +41,51 @@ class LemurIndex(NamedTuple):
         return self.W.shape[0]
 
 
+def _legacy_params(index: LemurIndex, *, k=None, k_prime=None, nprobe=None,
+                   use_ann=True):
+    """Map the v0 loose kwargs onto a resolved SearchParams."""
+    from repro.anns import registry
+    from repro.retriever.params import SearchParams
+
+    backend = None
+    if nprobe is not None and use_ann:
+        cls = registry.get_params_cls(index.backend)
+        if "nprobe" in cls.__dataclass_fields__:
+            backend = cls(nprobe=int(nprobe))
+    return SearchParams(k=k, k_prime=k_prime, use_ann=use_ann,
+                        backend=backend).resolve(index.cfg, index.backend)
+
+
 def build_index(key, corpus, cfg: LemurConfig, *, x_train: np.ndarray | None = None,
                 verbose: bool = False) -> LemurIndex:
-    """corpus: data.synthetic.MultiVectorCorpus (or any object with
-    doc_tokens/doc_mask numpy arrays)."""
-    t0 = time.time()
-    keys = jax.random.split(key, 4)
-    doc_tokens = jnp.asarray(corpus.doc_tokens)
-    doc_mask = jnp.asarray(corpus.doc_mask)
-    m = doc_tokens.shape[0]
+    """v0 shim: ``LemurRetriever.build(...).index``."""
+    from repro.retriever import LemurRetriever
 
-    # 1. training tokens (§4.2)
-    if x_train is None:
-        x_train = indexer.make_training_tokens(corpus, cfg, seed=0)
-    x_train = jnp.asarray(x_train)
-
-    # 2. ψ pre-training against m' sampled documents (§4.3)
-    m_pre = min(cfg.m_pretrain, m)
-    pre_idx = jax.random.choice(keys[0], m, (m_pre,), replace=False)
-    g_pre = maxsim.token_maxsim(x_train, doc_tokens[pre_idx], doc_mask[pre_idx])
-    phi, stats, losses = train_phi(keys[1], x_train, g_pre, cfg)
-    if verbose:
-        print(f"[build] psi pretrain done ({time.time()-t0:.1f}s, loss {losses[-1]:.4f})")
-
-    # 3. OLS output layer over the full corpus (eq. 7)
-    n_ols = min(cfg.n_ols, x_train.shape[0])
-    x_ols = x_train[jax.random.choice(keys[2], x_train.shape[0], (n_ols,), replace=False)]
-    W = indexer.fit_output_layer_ols(phi["psi"], x_ols, doc_tokens, doc_mask, cfg, stats)
-    if verbose:
-        print(f"[build] OLS W ({m} docs) done ({time.time()-t0:.1f}s)")
-
-    # 4. first-stage index via the backend registry
-    backend = registry.canonical(cfg.anns)
-    be = registry.get_backend(backend)
-    ann = be.build(keys[3], CorpusView(W, doc_tokens, doc_mask), cfg)
-    if verbose:
-        print(f"[build] {backend} index complete ({time.time()-t0:.1f}s)")
-    return LemurIndex(cfg, phi["psi"], stats, W, doc_tokens, doc_mask, backend, ann)
+    return LemurRetriever.build(corpus, cfg, key=key, x_train=x_train,
+                                verbose=verbose).index
 
 
 def attach_backend(index: LemurIndex, backend: str, key=None,
                    cfg: LemurConfig | None = None) -> LemurIndex:
-    """Re-point an existing index at a different first-stage backend without
-    re-training ψ/W (backends index W and/or the raw token matrices, both of
-    which the index already holds).  Used by benchmarks to sweep backends
-    over one trained reduction."""
-    cfg = cfg or index.cfg
-    backend = registry.canonical(backend)
-    be = registry.get_backend(backend)
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    view = CorpusView(index.W, index.doc_tokens, index.doc_mask)
-    return index._replace(cfg=cfg.replace(anns=backend), backend=backend,
-                          ann=be.build(key, view, cfg))
+    """v0 shim: ``LemurRetriever(index).with_backend(...).index`` — re-point
+    an existing index at a different first-stage backend without re-training
+    ψ/W."""
+    from repro.retriever import LemurRetriever
+
+    return LemurRetriever(index).with_backend(backend, key=key, cfg=cfg).index
 
 
-def add_docs(index: LemurIndex, doc_tokens, doc_mask, solver_state=None) -> LemurIndex:
-    """Incremental growth: fit new W rows with the frozen-ψ OLS solver
-    (``indexer.ols_solver_state``) and push them into the first-stage backend
-    via its ``add`` hook — ψ and existing rows are never touched (§4.3)."""
-    doc_tokens = jnp.asarray(doc_tokens)
-    doc_mask = jnp.asarray(doc_mask)
-    if solver_state is None:
-        # rebuild a solver from stored corpus tokens ("corpus" strategy);
-        # pass the build-time solver_state for bit-exact W scales
-        flat = np.asarray(index.doc_tokens)[np.asarray(index.doc_mask)]
-        pick = np.random.default_rng(0).integers(
-            0, flat.shape[0], size=min(index.cfg.n_ols, flat.shape[0]))
-        solver_state = indexer.ols_solver_state(
-            index.psi, jnp.asarray(flat[pick]), index.cfg)
-    w_new = indexer.fit_docs(solver_state, doc_tokens, doc_mask, index.stats)
-    be = registry.get_backend(index.backend)
-    ann = be.add(index.ann, CorpusView(w_new, doc_tokens, doc_mask))
-    return index._replace(
-        W=jnp.concatenate([index.W, w_new], axis=0),
-        doc_tokens=jnp.concatenate([index.doc_tokens, doc_tokens], axis=0),
-        doc_mask=jnp.concatenate([index.doc_mask, doc_mask], axis=0),
-        ann=ann,
-    )
+def add_docs(index: LemurIndex, doc_tokens, doc_mask, solver_state=None, *,
+             seed: int = 0) -> LemurIndex:
+    """v0 shim: ``LemurRetriever(index).add(...).index`` — incremental
+    growth with the frozen-ψ OLS solver.  Pass the build-time
+    ``solver_state`` for bit-exact W scales; otherwise the corpus-sampling
+    fallback solver is seeded by the explicit ``seed`` (v0 hid a
+    ``default_rng(0)`` here)."""
+    from repro.retriever import LemurRetriever
 
-
-def _first_stage(index: LemurIndex, q_tokens, q_mask, k_prime: int,
-                 nprobe: int | None, use_ann: bool):
-    """Pool queries and run the selected backend (or the exact latent scan)."""
-    psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
-    if not use_ann:
-        _, cand = mips_topk(psi_q, index.W, k_prime)
-        return cand
-    be = registry.get_backend(index.backend)
-    over = be.defaults(index.cfg)
-    if nprobe is not None:
-        over["nprobe"] = nprobe
-    over = {k: v for k, v in over.items() if v is not None}
-    _, cand = be.search(index.ann, QueryBatch(psi_q, q_tokens, q_mask),
-                        k_prime, **over)
-    return cand
+    r = LemurRetriever(index, solver_state=solver_state)
+    return r.add(doc_tokens, doc_mask, seed=seed).index
 
 
 def query(index: LemurIndex, q_tokens, q_mask=None, *, k: int | None = None,
@@ -148,21 +93,26 @@ def query(index: LemurIndex, q_tokens, q_mask=None, *, k: int | None = None,
           use_ann: bool = True):
     """q_tokens: (B, Tq, d) -> (scores (B, k), doc_ids (B, k)).
 
-    ``use_ann=False`` forces the exact latent scan regardless of backend
-    (the Fig. 3 "exact inference" arm).  ``-1``-padded first-stage rows are
-    masked inside ``maxsim.rerank`` — pads can never surface as results."""
-    cfg = index.cfg
-    k = k or cfg.k
-    k_prime = k_prime or cfg.k_prime
+    v0 shim over the pure Retriever-API pipeline (jit-able: the kwargs
+    become a static, resolved ``SearchParams``).  ``use_ann=False`` forces
+    the exact latent scan regardless of backend (the Fig. 3 "exact
+    inference" arm)."""
+    from repro.retriever.facade import search_pipeline
+
+    params = _legacy_params(index, k=k, k_prime=k_prime, nprobe=nprobe,
+                            use_ann=use_ann)
     if q_mask is None:
         q_mask = jnp.ones(q_tokens.shape[:2], bool)
-    cand = _first_stage(index, q_tokens, q_mask, k_prime, nprobe, use_ann)
-    return maxsim.rerank(q_tokens, q_mask, cand, index.doc_tokens, index.doc_mask, k)
+    return search_pipeline(index, q_tokens, q_mask, params)
 
 
 def candidates(index: LemurIndex, q_tokens, q_mask=None, *, k_prime: int,
                nprobe: int | None = None, use_ann: bool = False):
     """First-stage candidates only (for recall@k' ablations, Fig. 2 left)."""
+    from repro.retriever.facade import first_stage
+
+    params = _legacy_params(index, k_prime=k_prime, nprobe=nprobe,
+                            use_ann=use_ann)
     if q_mask is None:
         q_mask = jnp.ones(q_tokens.shape[:2], bool)
-    return _first_stage(index, q_tokens, q_mask, k_prime, nprobe, use_ann)
+    return first_stage(index, q_tokens, q_mask, params)

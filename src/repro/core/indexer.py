@@ -59,12 +59,19 @@ def fit_output_layer_ols(
     stats: TargetStats | None = None,
     *,
     doc_block: int = 2048,
+    solver_state: dict | None = None,
 ) -> jax.Array:
     """Solve eq. (7) for every document.  Returns W (m, d') fp32.
 
     Targets are standardized with the ψ-pretraining stats so W lives in the
-    same output scale the MLP was trained in (App. A)."""
-    chol, feats = gram_factor(psi_params, x_ols, cfg.ridge)
+    same output scale the MLP was trained in (App. A).  Pass a prebuilt
+    ``solver_state`` (:func:`ols_solver_state`) to skip re-factorizing the
+    Gram matrix — the retriever facade does this so build() and add() share
+    one solver."""
+    if solver_state is not None:
+        chol, feats = solver_state["chol"], solver_state["feats"]
+    else:
+        chol, feats = gram_factor(psi_params, x_ols, cfg.ridge)
     m = doc_tokens.shape[0]
     ws = []
     for lo in range(0, m, doc_block):

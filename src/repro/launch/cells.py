@@ -398,7 +398,7 @@ def lemur_serve_cell(arch, cfg, *, m: int, doc_tokens: int, q_tokens: int,
     nd = int(np.prod(list(mesh.shape.values())))
     m = -(-m // nd) * nd  # pad corpus to the mesh
     psi_s = jax.eval_shape(lambda: init_psi(jax.random.PRNGKey(0), cfg.d, cfg.d_prime))
-    sq8 = cfg.sq8
+    sq8 = cfg.ivf.sq8
     state_s = dist.ShardedRetrievalState(
         psi=psi_s,
         W=jax.ShapeDtypeStruct((m, cfg.d_prime), jnp.int8 if sq8 else jnp.bfloat16),

@@ -42,20 +42,22 @@ def main(argv=None):
                        checkpoint_dir=args.checkpoint_dir, log_every=10)
 
     if mod.FAMILY == "lemur":
-        from repro.core import LemurConfig, build_index, maxsim, recall_at
-        from repro.core.index import query
+        from repro.core import maxsim, recall_at
+        from repro.retriever import LemurRetriever, SearchParams
 
         cfg = mod.CONFIG if args.full else mod.SMOKE
         if args.backend:
             cfg = cfg.replace(anns=args.backend)
         corpus = synthetic.make_corpus(m=4000, d=cfg.d, avg_tokens=12, max_tokens=16,
                                        seed=0)
-        idx = build_index(jax.random.PRNGKey(0), corpus, cfg, verbose=True)
+        r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0),
+                                 verbose=True)
         q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 64, 8, seed=7))
         qm = jnp.ones(q.shape[:2], bool)
-        _, truth = maxsim.true_topk(q, qm, idx.doc_tokens, idx.doc_mask, cfg.k)
-        _, ids = query(idx, q, qm)
-        print(f"[lemur] backend={idx.backend} "
+        _, truth = maxsim.true_topk(q, qm, r.index.doc_tokens, r.index.doc_mask,
+                                    cfg.k)
+        _, ids = r.search(q, qm, SearchParams())
+        print(f"[lemur] backend={r.backend} "
               f"recall@{cfg.k} = {float(recall_at(ids, truth).mean()):.3f}")
         return
 

@@ -1,0 +1,34 @@
+"""Retriever API v1 — the stable serving surface of the reproduction.
+
+:class:`LemurRetriever` owns the index lifecycle (build / search / add /
+with_backend / save / load); :class:`SearchParams` is the typed, hashable,
+jit-static query-time knob object.  Per-backend build knobs live in the
+``LemurConfig`` namespaces (``cfg.ivf``, ``cfg.muvera``, …) defined in
+:mod:`repro.anns.params` and registered next to each backend in
+:mod:`repro.anns.registry`.
+"""
+from repro.anns.params import (
+    BruteforceBackendConfig,
+    DessertBackendConfig,
+    IVFBackendConfig,
+    IVFSearchParams,
+    MuveraBackendConfig,
+    NoSearchParams,
+    TokenPruningBackendConfig,
+    TokenPruningSearchParams,
+)
+from repro.retriever.facade import LemurRetriever
+from repro.retriever.params import SearchParams
+
+__all__ = [
+    "LemurRetriever",
+    "SearchParams",
+    "IVFSearchParams",
+    "NoSearchParams",
+    "TokenPruningSearchParams",
+    "BruteforceBackendConfig",
+    "IVFBackendConfig",
+    "MuveraBackendConfig",
+    "DessertBackendConfig",
+    "TokenPruningBackendConfig",
+]

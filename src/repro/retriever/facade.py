@@ -1,0 +1,371 @@
+"""LemurRetriever: the stable Retriever API v1 facade.
+
+One object owns the full lifecycle of a LEMUR index (Fig. 1):
+
+    r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    scores, ids = r.search(q_tokens, q_mask, SearchParams(k=10))
+    r.add(new_doc_tokens, new_doc_mask)          # incremental growth (§4.3)
+    r2 = r.with_backend("muvera")                # same reduction, new stage
+    r.save("my_index/"); r = LemurRetriever.load("my_index/")
+
+Design points:
+
+* **Build-time vs query-time split.**  ``LemurConfig`` (with its per-backend
+  namespaces) is fixed at ``build()``; every query-time knob travels in a
+  frozen :class:`SearchParams`.  ``search()`` resolves the params against
+  the config once, then caches exactly one ``jax.jit``-compiled query fn
+  per (backend, resolved params) — jit itself specializes per batch shape,
+  so compilation count is one per (backend, params, batch-shape), observable
+  via :meth:`trace_count`.
+
+* **Deterministic growth.**  ``build()`` retains the OLS solver state
+  (Gram factor + the n' training tokens), so ``add()`` fits new W rows with
+  the exact build-time solver.  When the solver is gone (e.g. a legacy
+  index wrapped directly), the corpus-sampling fallback takes an explicit
+  ``seed`` instead of the v0 hidden ``default_rng(0)``.
+
+* **Persistence.**  ``save()``/``load()`` use ``checkpoint/manager.py``'s
+  atomic manifest+shards format: cfg, ψ, W, doc tokens, the backend name
+  and its opaque packed state (plus the OLS tokens, so ``add()`` stays
+  deterministic after a reload).  Round-trip reproduces search ids
+  bit-identically.
+
+The v0 free functions (``core.index.build_index`` / ``attach_backend`` /
+``add_docs`` / ``query`` / ``candidates``) are thin shims over this module.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import registry
+from repro.anns.base import CorpusView, QueryBatch
+from repro.anns.bruteforce import mips_topk
+from repro.checkpoint import manager as ckpt
+from repro.core import indexer, maxsim
+from repro.core.config import LemurConfig
+from repro.core.index import LemurIndex
+from repro.core.model import TargetStats, pool_queries, train_phi
+from repro.retriever.params import SearchParams
+
+FORMAT = "lemur-retriever-v1"
+
+
+# --------------------------------------------------------------------------
+# pure query pipeline (jit-able; params must be fully resolved)
+# --------------------------------------------------------------------------
+
+def first_stage(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
+    """Pool queries and run the selected backend (or the exact latent scan)."""
+    psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
+    if not params.use_ann:
+        _, cand = mips_topk(psi_q, index.W, params.k_prime)
+        return cand
+    be = registry.get_backend(index.backend)
+    _, cand = be.search(index.ann, QueryBatch(psi_q, q_tokens, q_mask),
+                        params.k_prime, params.backend)
+    return cand
+
+
+def search_pipeline(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
+    """pool -> first-stage candidates -> exact MaxSim rerank -> top-k.
+
+    ``-1``-padded first-stage rows are masked inside ``maxsim.rerank`` —
+    pads can never surface as results."""
+    cand = first_stage(index, q_tokens, q_mask, params)
+    return maxsim.rerank(q_tokens, q_mask, cand,
+                         index.doc_tokens, index.doc_mask, params.k)
+
+
+# --------------------------------------------------------------------------
+# the facade
+# --------------------------------------------------------------------------
+
+class LemurRetriever:
+    """Stable facade over a :class:`LemurIndex` (see module docstring).
+
+    Construct via :meth:`build` / :meth:`load`, or wrap an existing
+    ``LemurIndex`` directly (``LemurRetriever(index)``)."""
+
+    def __init__(self, index: LemurIndex, *, solver_state: dict | None = None,
+                 x_ols: jax.Array | None = None):
+        self._index = index
+        self._solver = solver_state
+        self._x_ols = x_ols if x_ols is not None else (
+            solver_state["x_ols"] if solver_state else None)
+        self._compiled: dict[tuple, Any] = {}
+        self._trace_counts: dict[tuple, int] = {}
+        self._resolve_memo: dict[SearchParams | None, SearchParams] = {}
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def index(self) -> LemurIndex:
+        return self._index
+
+    @property
+    def cfg(self) -> LemurConfig:
+        return self._index.cfg
+
+    @property
+    def backend(self) -> str:
+        return self._index.backend
+
+    @property
+    def m(self) -> int:
+        return self._index.m
+
+    def __repr__(self) -> str:
+        return (f"LemurRetriever(m={self.m}, d_prime={self.cfg.d_prime}, "
+                f"backend={self.backend!r})")
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @classmethod
+    def build(cls, corpus, cfg: LemurConfig | None = None, *, key=None,
+              x_train: np.ndarray | None = None,
+              verbose: bool = False) -> "LemurRetriever":
+        """Full offline build: training-token selection (§4.2) -> ψ
+        pre-training against m' sampled docs (§4.3) -> OLS output layer over
+        the full corpus (eq. 7) -> first-stage index via the backend
+        registry.  ``corpus`` is any object with doc_tokens/doc_mask arrays
+        (e.g. ``data.synthetic.MultiVectorCorpus``)."""
+        cfg = cfg or LemurConfig()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        t0 = time.time()
+        keys = jax.random.split(key, 4)
+        doc_tokens = jnp.asarray(corpus.doc_tokens)
+        doc_mask = jnp.asarray(corpus.doc_mask)
+        m = doc_tokens.shape[0]
+
+        # 1. training tokens (§4.2)
+        if x_train is None:
+            x_train = indexer.make_training_tokens(corpus, cfg, seed=0)
+        x_train = jnp.asarray(x_train)
+
+        # 2. ψ pre-training against m' sampled documents (§4.3)
+        m_pre = min(cfg.m_pretrain, m)
+        pre_idx = jax.random.choice(keys[0], m, (m_pre,), replace=False)
+        g_pre = maxsim.token_maxsim(x_train, doc_tokens[pre_idx], doc_mask[pre_idx])
+        phi, stats, losses = train_phi(keys[1], x_train, g_pre, cfg)
+        if verbose:
+            print(f"[build] psi pretrain done ({time.time()-t0:.1f}s, "
+                  f"loss {losses[-1]:.4f})")
+
+        # 3. OLS output layer over the full corpus (eq. 7); the solver state
+        # (Gram factor + tokens) is retained so add() reuses it verbatim
+        n_ols = min(cfg.n_ols, x_train.shape[0])
+        x_ols = x_train[jax.random.choice(keys[2], x_train.shape[0], (n_ols,),
+                                          replace=False)]
+        solver = indexer.ols_solver_state(phi["psi"], x_ols, cfg)
+        W = indexer.fit_output_layer_ols(phi["psi"], x_ols, doc_tokens,
+                                         doc_mask, cfg, stats,
+                                         solver_state=solver)
+        if verbose:
+            print(f"[build] OLS W ({m} docs) done ({time.time()-t0:.1f}s)")
+
+        # 4. first-stage index via the backend registry
+        backend = registry.canonical(cfg.anns)
+        be = registry.get_backend(backend)
+        ann = be.build(keys[3], CorpusView(W, doc_tokens, doc_mask),
+                       cfg.backend_config(backend))
+        if verbose:
+            print(f"[build] {backend} index complete ({time.time()-t0:.1f}s)")
+        index = LemurIndex(cfg, phi["psi"], stats, W, doc_tokens, doc_mask,
+                           backend, ann)
+        return cls(index, solver_state=solver)
+
+    def with_backend(self, backend: str, *, key=None,
+                     cfg: LemurConfig | None = None) -> "LemurRetriever":
+        """A new retriever over the SAME trained reduction (ψ/W/doc tokens
+        shared, never re-trained) with a different first-stage backend —
+        what benchmarks use to sweep backends over one build."""
+        idx = self._index
+        cfg = cfg or idx.cfg
+        backend = registry.canonical(backend)
+        be = registry.get_backend(backend)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        view = CorpusView(idx.W, idx.doc_tokens, idx.doc_mask)
+        ann = be.build(key, view, cfg.backend_config(backend))
+        index = idx._replace(cfg=cfg.replace(anns=backend), backend=backend,
+                             ann=ann)
+        return LemurRetriever(index, solver_state=self._solver,
+                              x_ols=self._x_ols)
+
+    def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> "LemurRetriever":
+        """Incremental growth: fit new W rows with the frozen-ψ OLS solver
+        and push them into the first-stage backend via its ``add`` hook —
+        ψ and existing rows are never touched (§4.3).  Reuses the build-time
+        solver state when available (also after ``load()``); the corpus-
+        sampling fallback is seeded by the explicit ``seed``.  Mutates this
+        retriever (compiled query fns are invalidated) and returns it."""
+        idx = self._index
+        doc_tokens = jnp.asarray(doc_tokens)
+        doc_mask = jnp.asarray(doc_mask)
+        solver = self._ensure_solver(seed)
+        w_new = indexer.fit_docs(solver, doc_tokens, doc_mask, idx.stats)
+        be = registry.get_backend(idx.backend)
+        ann = be.add(idx.ann, CorpusView(w_new, doc_tokens, doc_mask))
+        self._index = idx._replace(
+            W=jnp.concatenate([idx.W, w_new], axis=0),
+            doc_tokens=jnp.concatenate([idx.doc_tokens, doc_tokens], axis=0),
+            doc_mask=jnp.concatenate([idx.doc_mask, doc_mask], axis=0),
+            ann=ann,
+        )
+        self._compiled.clear()
+        self._trace_counts.clear()
+        return self
+
+    def _ensure_solver(self, seed: int) -> dict:
+        if self._solver is not None:
+            return self._solver
+        idx = self._index
+        if self._x_ols is not None:
+            # persisted/handed-down OLS tokens: rebuild the Gram factor
+            # deterministically (bit-exact W scales across save/load)
+            self._solver = indexer.ols_solver_state(idx.psi, self._x_ols, idx.cfg)
+            return self._solver
+        # legacy fallback: resample OLS tokens from the stored corpus
+        # ("corpus" strategy) — seeded explicitly, not a hidden rng(0)
+        flat = np.asarray(idx.doc_tokens)[np.asarray(idx.doc_mask)]
+        pick = np.random.default_rng(seed).integers(
+            0, flat.shape[0], size=min(idx.cfg.n_ols, flat.shape[0]))
+        self._solver = indexer.ols_solver_state(
+            idx.psi, jnp.asarray(flat[pick]), idx.cfg)
+        return self._solver
+
+    # -- query --------------------------------------------------------------
+
+    def resolve(self, params: SearchParams | None = None) -> SearchParams:
+        """Fill a (possibly partial) SearchParams from the build config.
+        Memoized — cfg and backend are fixed for this retriever's lifetime,
+        so repeated serving calls skip the per-call resolution work."""
+        resolved = self._resolve_memo.get(params)
+        if resolved is None:
+            resolved = (params or SearchParams()).resolve(self.cfg, self.backend)
+            self._resolve_memo[params] = resolved
+        return resolved
+
+    def search(self, q_tokens, q_mask=None, params: SearchParams | None = None):
+        """q_tokens: (B, Tq, d) -> (scores (B, k), doc_ids (B, k)).
+
+        Runs the compiled pool -> candidates -> exact-rerank pipeline for
+        the resolved params (one XLA graph; compiled once per params and
+        batch shape)."""
+        q_tokens = jnp.asarray(q_tokens)
+        if q_mask is None:
+            q_mask = jnp.ones(q_tokens.shape[:2], bool)
+        return self._compiled_fn(self.resolve(params))(q_tokens, q_mask)
+
+    def candidates(self, q_tokens, q_mask=None,
+                   params: SearchParams | None = None):
+        """First-stage candidate ids only (recall@k' ablations, Fig. 2)."""
+        q_tokens = jnp.asarray(q_tokens)
+        if q_mask is None:
+            q_mask = jnp.ones(q_tokens.shape[:2], bool)
+        return first_stage(self._index, q_tokens, q_mask, self.resolve(params))
+
+    def _compiled_fn(self, resolved: SearchParams):
+        key = (self.backend, resolved)
+        fn = self._compiled.get(key)
+        if fn is None:
+            idx = self._index
+            counts = self._trace_counts
+
+            def run(q, qm):
+                counts[key] = counts.get(key, 0) + 1  # trace-time only
+                return search_pipeline(idx, q, qm, resolved)
+
+            fn = self._compiled[key] = jax.jit(run)
+        return fn
+
+    def trace_count(self, params: SearchParams | None = None) -> int:
+        """jit traces so far: for one resolved SearchParams, or in total.
+        The API contract is one trace per (backend, params, batch-shape)."""
+        if params is None:
+            return sum(self._trace_counts.values())
+        return self._trace_counts.get((self.backend, self.resolve(params)), 0)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, directory) -> pathlib.Path:
+        """Persist everything needed to serve (and grow) this retriever:
+        cfg, ψ, target stats, W, doc tokens/mask, the backend name + its
+        opaque packed state, and the OLS training tokens when available.
+        Uses the checkpoint manager's atomic manifest+shards layout."""
+        idx = self._index
+        be = registry.get_backend(idx.backend)
+        ann_arrays, ann_meta = be.pack_state(idx.ann)
+        tree = {
+            "psi": idx.psi,
+            "stats": {"mean": idx.stats.mean, "std": idx.stats.std},
+            "W": idx.W,
+            "doc_tokens": idx.doc_tokens,
+            "doc_mask": idx.doc_mask,
+            "ann": dict(ann_arrays),
+        }
+        if self._x_ols is not None:
+            tree["solver"] = {"x_ols": self._x_ols}
+        extra = {"format": FORMAT, "cfg": idx.cfg.to_dict(),
+                 "backend": idx.backend, "ann_meta": ann_meta}
+        return ckpt.save(directory, 0, tree, extra=extra)
+
+    @classmethod
+    def load(cls, directory, *, step: int | None = None) -> "LemurRetriever":
+        """Inverse of :meth:`save`; search ids reproduce bit-identically."""
+        directory = pathlib.Path(directory)
+        if step is None:
+            step = ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed retriever checkpoint under {directory}")
+        manifest = json.loads(
+            (directory / f"step_{step:08d}" / "manifest.json").read_text())
+        extra = manifest.get("extra", {})
+        if extra.get("format") != FORMAT:
+            raise ValueError(
+                f"{directory} is not a {FORMAT} checkpoint "
+                f"(format={extra.get('format')!r})")
+        target = _tree_from_manifest(manifest["leaves"])
+        tree, _ = ckpt.restore(directory, target, step=step)
+        cfg = LemurConfig.from_dict(extra["cfg"])
+        backend = extra["backend"]
+        be = registry.get_backend(backend)
+        ann = be.unpack_state(tree["ann"], extra.get("ann_meta", {}))
+        index = LemurIndex(cfg, tree["psi"],
+                           TargetStats(tree["stats"]["mean"], tree["stats"]["std"]),
+                           tree["W"], tree["doc_tokens"], tree["doc_mask"],
+                           backend, ann)
+        x_ols = tree.get("solver", {}).get("x_ols")
+        return cls(index, x_ols=x_ols)
+
+
+def _tree_from_manifest(leaves: dict[str, dict]) -> dict:
+    """Rebuild the (pure nested-dict) save tree's structure from manifest
+    leaf names, with ShapeDtypeStruct leaves (no allocation) for restore."""
+    root: dict = {}
+    for name, spec in leaves.items():
+        parts = name.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jax.ShapeDtypeStruct(
+            tuple(spec["shape"]), _np_dtype(spec["dtype"]))
+    return root
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:  # ml_dtypes names (bfloat16 et al.)
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))

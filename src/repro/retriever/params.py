@@ -1,0 +1,75 @@
+"""Typed, hashable search parameters for Retriever API v1.
+
+:class:`SearchParams` is the single query-time knob object: it replaces the
+v0 loose ``k/k_prime/nprobe`` kwargs of ``core.index.query`` and the untyped
+``**overrides`` of ``anns/base.py``.  It is a frozen dataclass, so it is
+hashable and usable as a jit-static argument — ``LemurRetriever`` keys its
+compiled-query cache on (backend, resolved params) and lets ``jax.jit``
+specialize per batch shape, i.e. exactly one trace per
+(backend, params, batch-shape).
+
+``backend`` carries the active backend's typed knobs (an instance of its
+registered ``params_cls``, e.g. :class:`~repro.anns.params.IVFSearchParams`);
+``None`` means "that backend's configured defaults".  ``k``/``k_prime``
+default to the build config's values when left ``None``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.anns.params import (
+    BackendSearchParams,
+    IVFSearchParams,
+    NoSearchParams,
+    TokenPruningSearchParams,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    k: int | None = None                       # final top-k (None => cfg.k)
+    k_prime: int | None = None                 # rerank budget (None => cfg.k_prime)
+    use_ann: bool = True                       # False => exact latent scan (Fig. 3)
+    backend: BackendSearchParams | None = None  # typed per-backend knobs
+
+    def resolve(self, cfg, backend_name: str) -> "SearchParams":
+        """Fill every ``None`` from the build config: ``k``/``k_prime`` from
+        the core config, ``backend`` from the named backend's namespace.
+        Resolution happens before jit, so equivalent param spellings share
+        one compiled query fn.  Raises ``TypeError`` if ``backend`` is typed
+        for a different backend than the active one."""
+        from repro.anns import registry
+
+        be = registry.get_backend(backend_name)
+        if not self.use_ann:
+            bp = None  # exact scan has no backend knobs; collapse the key
+        elif self.backend is None:
+            bp = be.default_params(cfg.backend_config(backend_name))
+        elif not isinstance(self.backend, be.params_cls):
+            raise TypeError(
+                f"SearchParams.backend is {type(self.backend).__name__}, but "
+                f"backend {be.name!r} takes {be.params_cls.__name__}")
+        else:
+            # fill the instance's None fields from the config namespace, so
+            # e.g. IVFSearchParams() === "cfg.ivf defaults" (and equivalent
+            # spellings collapse to one compiled-fn cache entry)
+            defaults = be.default_params(cfg.backend_config(backend_name))
+            fill = {f.name: getattr(defaults, f.name)
+                    for f in dataclasses.fields(self.backend)
+                    if getattr(self.backend, f.name) is None}
+            bp = dataclasses.replace(self.backend, **fill) if fill else self.backend
+        return dataclasses.replace(
+            self,
+            k=int(self.k if self.k is not None else cfg.k),
+            k_prime=int(self.k_prime if self.k_prime is not None else cfg.k_prime),
+            backend=bp,
+        )
+
+
+__all__ = [
+    "SearchParams",
+    "BackendSearchParams",
+    "IVFSearchParams",
+    "NoSearchParams",
+    "TokenPruningSearchParams",
+]
