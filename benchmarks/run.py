@@ -41,8 +41,19 @@ def main(argv=None) -> None:
     p.add_argument("--backend", default=None,
                    help="first-stage backends for fig3/table2: a registry "
                         "name, comma list, or 'all'")
+    p.add_argument("--mesh", default=None,
+                   help="table2 also reports sharded QPS over this mesh "
+                        "spec, e.g. '1x8' (host devices forced on CPU)")
     args = p.parse_args(argv)
     which = args.names or BENCHES
+    if args.mesh:
+        # before ANY bench initializes the jax backend (XLA_FLAGS is
+        # read once at backend init — forcing later is a no-op)
+        import numpy as np
+
+        from repro.launch.mesh import ensure_devices, parse_mesh_spec
+
+        ensure_devices(int(np.prod(parse_mesh_spec(args.mesh))))
     backends = _resolve_backends(args.backend)
 
     t0 = time.time()
@@ -57,7 +68,7 @@ def main(argv=None) -> None:
     if any(w.startswith("table2") for w in which):
         from benchmarks import table2_qps
 
-        table2_qps.run(backends=backends)
+        table2_qps.run(backends=backends, mesh=args.mesh)
     if any(w.startswith("appendix") for w in which):
         from benchmarks import appendix_d_training
 

@@ -71,7 +71,31 @@ def sweep_backend(name: str, q, qm, truth):
     return rows
 
 
-def run(backends=None):
+def sweep_sharded(mesh_spec: str, q, qm, truth):
+    """The sharded serving row: ``LemurRetriever.shard(mesh)`` (per-shard
+    latent scan + rerank + hierarchical merge; the first stage is the exact
+    scan, so the only query-time knob is the shared k' budget)."""
+    from repro.launch.mesh import make_serving_mesh
+
+    sr = common.lemur_retriever(128).shard(make_serving_mesh(mesh_spec))
+    rows = []
+    for params in (SearchParams(k_prime=kp) for kp in (50, 100, 200)):
+        t = common.timeit(lambda a, b, p=params: sr.search(a, b, p), q, qm, iters=3)
+        _, ids = sr.search(q, qm, params)
+        rows.append(_row_params(params)
+                    | {"recall": float(recall_at(ids, truth).mean()),
+                       "qps": q.shape[0] / t})
+    return rows
+
+
+def run(backends=None, mesh=None):
+    if mesh:
+        # must precede the first jax backend touch below
+        import numpy as np
+
+        from repro.launch.mesh import ensure_devices, parse_mesh_spec
+
+        ensure_devices(int(np.prod(parse_mesh_spec(mesh))))
     q, qm = common.queries()
     truth = common.ground_truth()
     c = common.corpus()
@@ -91,6 +115,12 @@ def run(backends=None):
     t = common.timeit(fn, q, qm, iters=3)
     out["exact_maxsim"] = {"recall": 1.0, "qps": q.shape[0] / t}
 
+    if mesh:
+        rows = sweep_sharded(mesh, q, qm, truth)
+        out[f"sharded_{mesh}"] = _best(rows)
+        common.save_json(f"table2_sharded_{mesh}", {"rows": rows,
+                                                    "best": out[f"sharded_{mesh}"]})
+
     for name, r in out.items():
         common.emit(f"table2_{name}", 1e6 / max(r["qps"], 1e-9),
                     f"recall={r['recall']:.3f},qps={r['qps']:.0f}")
@@ -106,4 +136,18 @@ def run(backends=None):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    _p = argparse.ArgumentParser()
+    _p.add_argument("--backend", default=None,
+                    help="comma list of backends, or 'all'")
+    _p.add_argument("--mesh", default=None,
+                    help="also report sharded QPS over this mesh, e.g. '1x8'")
+    _a = _p.parse_args()
+    if _a.backend in (None, "all"):
+        _backends = None  # run() defaults to the full registry
+    else:
+        _backends = [s for s in _a.backend.split(",") if s]
+        for _n in _backends:
+            registry.get_backend(_n)  # fail fast, before the corpus build
+    run(backends=_backends, mesh=_a.mesh)

@@ -1,0 +1,25 @@
+"""Batch-retry dry-run cells that have no results yet.
+
+Reads ``arch|shape`` lines from ``/tmp/missing.txt`` (one cell per line, as
+emitted by a prior ``repro.launch.dryrun`` sweep's gap report) and re-runs
+each through ``python -m repro.launch.dryrun`` on the given mesh, printing a
+per-cell return code.  Operator utility — not part of the library or CI.
+
+    PYTHONPATH=src python scripts/run_missing.py [single|multi]
+"""
+import pathlib
+import subprocess
+import sys
+
+mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+cells = [tuple(l.split("|")) for l in pathlib.Path("/tmp/missing.txt").read_text().splitlines() if l]
+for arch, shape in cells:
+    try:
+        r = subprocess.run([sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                            "--shape", shape, "--mesh", mesh],
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, timeout=3000)
+        rc = r.returncode
+    except Exception as e:
+        rc = repr(e)
+    print(f"=== {arch} x {shape}: rc={rc}", flush=True)
+print("DONE", flush=True)

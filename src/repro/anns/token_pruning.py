@@ -45,7 +45,8 @@ def build_token_pruning(key, doc_tokens, doc_mask, *, nlist: int = 0,
     flat = np.asarray(doc_tokens[doc_mask])          # (n_tokens, d)
     tok_doc = np.broadcast_to(np.arange(m)[:, None], (m, T))[np.asarray(doc_mask)]
     n = flat.shape[0]
-    nlist = nlist or plaid_nlist(n)
+    # tiny corpora: never ask kmeans for more centroids than tokens
+    nlist = min(nlist or plaid_nlist(n), n)
 
     sample = flat
     if n > train_sample:
@@ -100,6 +101,7 @@ def search_token_pruning(index: TokenPruningIndex, q, q_mask, *, nprobe: int,
                          k_prime: int, m: int):
     """q: (B, Tq, d) -> (approx_scores (B, k'), cand_ids (B, k'))."""
     B, Tq, d = q.shape
+    nprobe = min(nprobe, index.centroids.shape[0])  # tiny-index clamp
     cs = jnp.einsum("bqd,cd->bqc", q, index.centroids)      # (B, Tq, nlist)
     probe_s, probe = jax.lax.top_k(cs, nprobe)              # (B, Tq, nprobe)
 

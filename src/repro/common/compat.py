@@ -1,0 +1,102 @@
+"""jax version-compatibility layer for the multi-device code.
+
+The distributed layer was written against newer jax surface APIs
+(``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.set_mesh``); this container runs jax 0.4.37 where
+those live under ``jax.experimental`` or do not exist.  Every multi-device
+module imports the four names below from here instead of from jax, so the
+whole layer runs unchanged on either side of the API split:
+
+    from repro.common.compat import AxisType, make_mesh, set_mesh, shard_map
+
+Semantics per name:
+
+``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=False)``
+    Forwards to ``jax.shard_map`` when present; otherwise to
+    ``jax.experimental.shard_map.shard_map`` with ``check_vma`` renamed to
+    its old spelling ``check_rep``.
+
+``make_mesh(shape, axis_names, axis_types=None, devices=None)``
+    Forwards to ``jax.make_mesh``; the ``axis_types`` kwarg is dropped on
+    versions whose ``make_mesh`` does not accept it (pre-explicit-sharding
+    jax has only what ``AxisType.Auto`` means today).
+
+``AxisType``
+    ``jax.sharding.AxisType`` when present, else an inert stand-in enum with
+    the same member names (only ever passed back into :func:`make_mesh`,
+    which drops it on old jax).
+
+``set_mesh(mesh)``
+    Context manager.  ``jax.set_mesh`` / ``jax.sharding.use_mesh`` when
+    available; on old jax the ``Mesh`` object itself is the context manager
+    that installs the global mesh, which is all pre-explicit-sharding code
+    can use.
+
+``axis_size(name)``
+    ``jax.lax.axis_size`` when present; otherwise ``psum(1, name)`` inside a
+    mapped context (prefer static ``mesh.shape`` lookups where the mesh is
+    in scope — this is only for code that has just the axis name).
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+
+__all__ = ["AxisType", "axis_size", "make_mesh", "set_mesh", "shard_map"]
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    @functools.wraps(_shard_map_old)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    elif hasattr(jax.sharding, "use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:  # Mesh is its own (global-mesh) context manager on old jax
+            yield mesh
+
+
+def axis_size(name):
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)

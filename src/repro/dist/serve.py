@@ -1,0 +1,219 @@
+"""Distributed LEMUR: sharded indexing + sharded serving on the mesh.
+
+Serving (Fig. 1 at pod scale): the latent corpus W, the IVF lists, and the
+doc-token store are sharded over the *flattened* mesh (every chip owns
+m/n_devices docs).  A query batch is replicated across the corpus axis;
+each shard runs (latent scan -> local top-k' -> local exact rerank) entirely
+locally, and only the (k, score) pairs cross the wire in a final all-gather
+merge — per-query traffic is k·n_devices·8 bytes, independent of m.
+
+Indexing (§4.3): the Gram factor is tiny ((d')² fp32) and replicated; each
+shard fits OLS rows for its own documents with zero communication.
+
+The facade entry point is :meth:`repro.retriever.LemurRetriever.shard`;
+``repro.core.distributed`` re-exports this module for v0 call sites.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common.compat import shard_map
+from repro.core import maxsim
+from repro.core.config import LemurConfig
+from repro.core.model import pool_queries
+
+
+def corpus_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)  # shard the corpus over every axis
+
+
+def n_corpus_shards(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in corpus_axes(mesh)]))
+
+
+class ShardedRetrievalState(NamedTuple):
+    """Device arrays for the serving step (pytree).
+
+    With scales present, W / doc_tokens are int8 SQ codes (Glass-style SQ8 —
+    the layout repro.kernels.mips_sq8 scans on TPU): 2-4x less resident HBM
+    and per-step traffic than bf16/fp32 (EXPERIMENTS.md §Perf iteration 3)."""
+    psi: dict
+    W: jax.Array                    # (m, d') latent corpus (fp or int8 codes)
+    doc_tokens: jax.Array           # (m, Td, d) token store (fp or int8 codes)
+    doc_mask: jax.Array             # (m, Td)
+    W_scales: jax.Array | None = None      # (m,) per-row scales (int8 mode)
+    doc_scales: jax.Array | None = None    # (m, Td) per-token scales
+
+
+def state_shardings(mesh: Mesh, state: ShardedRetrievalState | None = None):
+    """NamedShardings for a ShardedRetrievalState: ψ replicated, every
+    corpus-sized leaf block-sharded over the flattened mesh.  With ``state``
+    given, its ψ tree structure (and scale presence) is mirrored exactly."""
+    corpus = NamedSharding(mesh, P(corpus_axes(mesh)))
+    repl = NamedSharding(mesh, P())
+    psi_tree = state.psi if state is not None else {
+        "dense": {"kernel": 0, "bias": 0}, "ln": {"scale": 0, "bias": 0}}
+    has_scales = state is not None and state.W_scales is not None
+    return ShardedRetrievalState(
+        psi=jax.tree_util.tree_map(lambda _: repl, psi_tree),
+        W=corpus,
+        doc_tokens=corpus,
+        doc_mask=corpus,
+        W_scales=corpus if has_scales else None,
+        doc_scales=corpus if has_scales else None,
+    )
+
+
+def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
+                    q_tokens, q_mask, *, k: int, k_prime: int,
+                    axes: tuple[str, ...], axis_sizes: tuple[int, ...],
+                    m_real: int | None = None):
+    """Per-shard body (inside shard_map): local MIPS + local rerank + merge.
+
+    * latent scan: int8 codes x fp query with per-row scales (the
+      kernels.mips_sq8 contraction) when scales are present;
+    * rerank: only the k' CANDIDATE doc codes are gathered and dequantized
+      before the exact MaxSim — scores stay exact w.r.t. the stored
+      (quantized) representation, matching Glass+SQ in the paper;
+    * merge: hierarchical per-axis top-k (tree reduction) — gather volume
+      k*|axis| per stage instead of k*n_devices at once.
+
+    ``m_real``: true corpus size when the leading dim carries padding rows
+    (the facade pads m up to the device count) — padded columns are masked
+    out of the latent scan so they can never displace a real candidate."""
+    # psi_q: (B, d') pooled queries, already encoded batch-sharded OUTSIDE the
+    # corpus shard_map (encoding inside would replicate the psi MLP's (B,Tq,d')
+    # intermediates on every corpus shard — §Perf iteration 3)
+    m_loc = W.shape[0]
+    kp = min(k_prime, m_loc)
+    # globalize ids: offset by this shard's first row (sizes are static —
+    # old jax has no lax.axis_size)
+    idx = 0
+    for ax, size in zip(axes, axis_sizes):
+        idx = idx * size + jax.lax.axis_index(ax)
+    s = psi_q @ W.T.astype(psi_q.dtype)                         # (B, m_loc)
+    if W_scales is not None:
+        s = s * W_scales[None, :].astype(s.dtype)
+    if m_real is not None:
+        pad = (idx * m_loc + jnp.arange(m_loc)) >= m_real
+        s = jnp.where(pad[None, :], maxsim.NEG, s)
+    _, cand = jax.lax.top_k(s, kp)                              # local candidates
+    if doc_scales is not None:
+        cd = jnp.take(doc_tokens, cand, axis=0).astype(q_tokens.dtype)
+        cs = jnp.take(doc_scales, cand, axis=0)
+        cm = jnp.take(doc_mask, cand, axis=0)
+        # fold the per-token scale into the SCORE tensor: score(q, s*c) =
+        # s*(q.c) — avoids materializing a dequantized (B,k',Td,d) fp copy
+        # (the Pallas maxsim kernel does the same dequant in-VMEM on TPU)
+        sc = jnp.einsum("bqd,bmtd->bmqt", q_tokens, cd,
+                        preferred_element_type=jnp.float32)
+        sc = sc * cs.astype(jnp.float32)[:, :, None, :]
+        sc = jnp.where(cm[:, :, None, :], sc, -1e30)
+        best = jnp.where(q_mask[:, None, :], jnp.max(sc, axis=-1), 0.0)
+        scores = jnp.sum(best, axis=-1)
+        scores, pos = jax.lax.top_k(scores, min(k, kp))
+        local_ids = jnp.take_along_axis(cand, pos, axis=1)
+    else:
+        scores, local_ids = maxsim.rerank(q_tokens, q_mask, cand, doc_tokens,
+                                          doc_mask, min(k, kp))
+    gids = local_ids + idx * m_loc
+    # hierarchical merge: reduce back to top-k after every axis gather
+    all_s, all_i = scores, gids
+    for ax in axes:
+        all_s = jax.lax.all_gather(all_s, ax, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(all_i, ax, axis=1, tiled=True)
+        all_s, pos = jax.lax.top_k(all_s, min(k, all_s.shape[1]))
+        all_i = jnp.take_along_axis(all_i, pos, axis=1)
+    return all_s, all_i
+
+
+def default_k_prime_local(cfg_k: int, cfg_k_prime: int, n_shards: int) -> int:
+    """Per-shard candidate budget: the paper's k' is a global budget; with N
+    corpus shards the expected per-shard share is k'/N, so a 4x oversample
+    keeps merge recall while bounding the per-shard rerank at
+    O(B · k'_loc · Tq · Td)."""
+    return max(cfg_k, (4 * cfg_k_prime + n_shards - 1) // n_shards)
+
+
+def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
+                    k_prime_local: int | None = None,
+                    m_real: int | None = None):
+    """Returns a jit-able serve_step(state, q_tokens, q_mask) -> (scores, ids).
+
+    Queries are replicated over the corpus shards (the corpus uses every mesh
+    axis, so there is no spare axis for query-batch parallelism; batchwise
+    throughput comes from the batch dimension itself).
+
+    ``k_prime_local``: per-shard candidate budget; defaults to
+    :func:`default_k_prime_local`'s 4x oversample of the global k'.
+    ``m_real``: true corpus size when state rows carry padding (see
+    :func:`_local_retrieve`)."""
+    axes = corpus_axes(mesh)
+    axis_sizes = tuple(mesh.shape[a] for a in axes)
+    n_shards = int(np.prod(axis_sizes))
+    if k_prime_local is None:
+        k_prime_local = default_k_prime_local(cfg.k, cfg.k_prime, n_shards)
+    corpus_spec = P(axes)
+    body = functools.partial(
+        _local_retrieve, k=cfg.k, k_prime=k_prime_local, axes=axes,
+        axis_sizes=axis_sizes, m_real=m_real,
+    )
+
+    def serve_step(state: ShardedRetrievalState, q_tokens, q_mask):
+        sq8 = state.W_scales is not None
+        # encode + pool queries batch-sharded (GSPMD), replicate only the
+        # pooled (B, d') vectors into the corpus shard_map
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+        if q_tokens.shape[0] % max(nb, 1) == 0 and ba:
+            qt = jax.lax.with_sharding_constraint(
+                q_tokens, NamedSharding(mesh, P(ba, None, None)))
+        else:
+            qt = q_tokens
+        psi_q = pool_queries(state.psi, qt.astype(jnp.float32), q_mask)
+        psi_q = jax.lax.with_sharding_constraint(
+            psi_q, NamedSharding(mesh, P())).astype(q_tokens.dtype)
+        in_specs = (P(), corpus_spec, corpus_spec if sq8 else P(),
+                    corpus_spec, corpus_spec if sq8 else P(), corpus_spec,
+                    P(), P())
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(P(), P()),
+            check_vma=False,
+        )(psi_q, state.W, state.W_scales, state.doc_tokens,
+          state.doc_scales, state.doc_mask, q_tokens, q_mask)
+
+    return serve_step
+
+
+def make_index_step(mesh: Mesh, cfg: LemurConfig, *, doc_block: int = 128):
+    """Distributed OLS indexing step: every shard fits W rows for its local
+    doc block against the replicated Gram factor.  jit-able; zero comms."""
+    axes = corpus_axes(mesh)
+    corpus_spec = P(axes)
+
+    def body(chol_c, feats, x_ols, doc_tokens, doc_mask, mean, std):
+        g = maxsim.token_maxsim(x_ols, doc_tokens, doc_mask, block=doc_block)
+        g = (g - mean) / std
+        rhs = feats.T @ g
+        return jax.scipy.linalg.cho_solve((chol_c, False), rhs).T
+
+    def index_step(chol_c, feats, x_ols, doc_tokens, doc_mask, mean, std):
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), corpus_spec, corpus_spec, P(), P()),
+            out_specs=corpus_spec,
+            check_vma=False,
+        )(chol_c, feats, x_ols, doc_tokens, doc_mask, mean, std)
+
+    return index_step

@@ -1,0 +1,125 @@
+"""Regex rule tables mapping parameter names to PartitionSpecs.
+
+One :class:`ShardingRules` table per model family; ``launch/cells.py``
+resolves every parameter leaf of every architecture through these tables
+when building dry-run cells, and ``tests/test_sharding_rules.py`` statically
+validates that each resolved spec divides the production meshes (the cheap
+canary for config/rule drift).
+
+Lookup contract (first-match-wins):
+
+    rules = ShardingRules(rules=((r"attn/w.*$", P("model")), (r".*", P())))
+    rules.spec("attn/wq", 3)   # -> P("model")  (trailing dims replicated)
+    rules.spec("ln1/scale", 1) # -> P()         (catch-all)
+
+A spec may be *shorter* than the leaf's rank — missing trailing entries mean
+replicated — but never longer: a rule whose spec has more entries than the
+leaf has dims raises ``ValueError`` (rule drift, not a silent truncation).
+
+Scan-stacked leaves (names under ``stack_*/pos_*/``) are resolved by
+``launch.cells._resolve_spec``, which strips the stack prefix, matches the
+per-layer name at ``ndim - 1``, and prepends ``None`` for the scan dim — the
+tables below are therefore written against PER-LAYER names and ranks.
+
+Axis conventions (launch/mesh.py): ``pod`` is pure cross-pod data
+parallelism, so parameters never use it (they are replicated across pods
+and their gradients cross the DCN through optim/compress.py); ``data``
+carries FSDP/ZeRO shards; ``model`` carries tensor/expert/vocab shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "GNN_RULES",
+    "LM_RULES",
+    "LM_RULES_FFSLICE",
+    "RECSYS_RULES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """First-match-wins (regex, PartitionSpec) table (see module docstring)."""
+
+    rules: tuple[tuple[str, P], ...]
+
+    def spec(self, name: str, ndim: int) -> P:
+        for pattern, spec in self.rules:
+            if re.search(pattern, name):
+                if len(spec) > ndim:
+                    raise ValueError(
+                        f"rule {pattern!r} spec {spec} has {len(spec)} entries "
+                        f"but leaf {name!r} has rank {ndim}")
+                return spec
+        raise KeyError(f"no sharding rule matches {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# LM family.  Per-layer names/ranks (the scan-stack dim is handled by the
+# caller).  Dense layers: megatron TP on the ffn/vocab axes + FSDP over
+# "data" on d_model where every production arch divides (5120/6144/3072/7168
+# and all ffn widths are multiples of 16).  Biases, norms, and routers are
+# tiny -> replicated.
+# ---------------------------------------------------------------------------
+
+_LM_COMMON_HEAD = (
+    (r"(^|/)(scale|bias)$", P()),          # norms + all dense biases
+    (r"attn/b[qkv]$", P()),                # per-head attn biases (ragged heads)
+    (r"embed/embedding$", P("model", None)),   # vocab-sharded
+    (r"head/kernel$", P(None, "model")),       # (d_model, vocab)
+    (r"attn/wo$", P(None, None, "model")),     # (heads, head_dim, d_model)
+    (r"attn/w", P("model")),               # every other attn proj: (d_model, ...)
+)
+
+_LM_COMMON_TAIL = (
+    (r"moe/router$", P()),
+    (r"wi(_\d)?/kernel$", P("data", "model")),  # (d_model, ffn) incl. moe/shared
+    (r"wo/kernel$", P("model", "data")),        # (ffn, d_model)
+    (r".*", P()),
+)
+
+#: expert-parallel layout: expert dim sharded over "model", d_model FSDP
+#: over "data".  moe/wi_*: (E, d_model, ffn_e); moe/wo: (E, ffn_e, d_model).
+LM_RULES = ShardingRules(rules=_LM_COMMON_HEAD + (
+    (r"moe/wi_\d$", P("model", "data", None)),
+    (r"moe/wo$", P("model", "data", None)),
+) + _LM_COMMON_TAIL)
+
+#: ffslice layout: experts replicated, each expert's ffn dim sliced over
+#: "model" (nn/moe.py's all-experts-resident layout for few-large-expert
+#: models such as llama4-maverick).
+LM_RULES_FFSLICE = ShardingRules(rules=_LM_COMMON_HEAD + (
+    (r"moe/wi_\d$", P(None, "data", "model")),
+    (r"moe/wo$", P(None, "model", "data")),
+) + _LM_COMMON_TAIL)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family.  The embedding tables are the only parameters that matter
+# at scale (16M x 10 .. 10M x 256 rows) -> row-sharded over "model" (the
+# sharded_embedding_lookup substrate); the BST positional table (21 rows)
+# and all MLP/CIN/attention weights are sub-megabyte -> replicated, except
+# the two-tower MLPs whose widths are uniform multiples of 16.
+# ---------------------------------------------------------------------------
+
+RECSYS_RULES = ShardingRules(rules=(
+    (r"(^|/)(scale|bias)$", P()),
+    (r"pos_table/embedding$", P()),
+    (r"/embedding$", P("model", None)),
+    (r"_tower/layer_\d+/kernel$", P(None, "model")),
+    (r".*", P()),
+))
+
+
+# ---------------------------------------------------------------------------
+# GNN family.  Message-passing MLPs are small and the graph (nodes/edges)
+# carries all the parallelism (see models/gnn.py's edge-sharded shard_map);
+# parameters are replicated wholesale.
+# ---------------------------------------------------------------------------
+
+GNN_RULES = ShardingRules(rules=((r".*", P()),))

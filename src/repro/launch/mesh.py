@@ -11,13 +11,14 @@ never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.common.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh():
@@ -27,9 +28,53 @@ def make_host_mesh():
         # spread over whatever local devices exist (e.g. XLA host-device tests)
         model = 2
         data = n // 2
-        return jax.make_mesh((data, model), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def make_serving_mesh(spec: str):
+    """Corpus-serving mesh from a ``--mesh`` CLI spec like ``"1x8"``.
+
+    The rightmost axes of (pod, data, model) are used: ``"8"`` -> 8-way
+    ``model``, ``"1x8"`` -> (data=1, model=8), ``"2x2x2"`` -> all three.
+    LEMUR's corpus sharding spans every axis (``dist.serve.corpus_axes``),
+    so the split across names only matters when serving shares the mesh
+    with batch-parallel work."""
+    shape = parse_mesh_spec(spec)
+    axes = ("pod", "data", "model")[3 - len(shape):]
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def parse_mesh_spec(spec: str) -> tuple[int, ...]:
+    """``"1x8"`` -> (1, 8).  1-3 ``x``-separated positive ints."""
+    try:
+        shape = tuple(int(p) for p in str(spec).lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad --mesh spec {spec!r}; want e.g. '8' or '1x8'")
+    if not 1 <= len(shape) <= 3 or any(s < 1 for s in shape):
+        raise ValueError(f"bad --mesh spec {spec!r}; want 1-3 positive ints")
+    return shape
+
+
+def ensure_devices(n: int) -> None:
+    """Make sure ``n`` devices exist for a ``--mesh`` request, forcing XLA
+    host devices when the process has not touched a jax backend yet (the
+    flag is read at backend initialization, so this works as long as it
+    runs before the first device query).  Raises with the manual fix when
+    the backend is already pinned to fewer devices."""
+    import os
+
+    if n > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"--mesh needs {n} devices but only {len(jax.devices())} are "
+            f"visible; launch with XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} (or run on a {n}-device accelerator)")
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -12,6 +12,14 @@ sweep every backend over the SAME trained reduction via
 per (backend, SearchParams, batch shape) — the launcher reports its trace
 count.  The first (compile) batch is excluded from BOTH the QPS and the
 recall aggregates, so the reported operating point is steady-state.
+
+``--mesh 1x8`` additionally serves through ``LemurRetriever.shard(mesh)``
+(the corpus block-sharded over the flattened mesh, per-shard latent scan +
+rerank, hierarchical top-k merge) and reports sharded QPS next to the
+single-device numbers.  On a CPU host the requested XLA host-device count
+is forced automatically:
+
+  PYTHONPATH=src python -m repro.launch.serve --m 8000 --mesh 1x8
 """
 from __future__ import annotations
 
@@ -19,15 +27,34 @@ import argparse
 import time
 
 
+def _serve_loop(search, batches, args):
+    """(qps, recall) over ``batches``, excluding the first (compile) batch
+    from both aggregates so the operating point is steady-state."""
+    import jax
+
+    from repro.core import recall_at
+
+    total_q, total_t, recs = 0, 0.0, []
+    for b, (q, qm, truth) in enumerate(batches):
+        t0 = time.time()
+        s, ids = search(q, qm)
+        jax.block_until_ready(ids)
+        dt = time.time() - t0
+        if b > 0:  # skip the compile batch in QPS *and* recall
+            total_q += args.batch
+            total_t += dt
+            recs.append(float(recall_at(ids, truth).mean()))
+        elif len(batches) == 1:  # recall is timing-free: better one sample
+            recs.append(float(recall_at(ids, truth).mean()))  # than a fake 0
+    return total_q / max(total_t, 1e-9), sum(recs) / max(len(recs), 1)
+
+
 def serve_backend(retriever, backend, batches, args, *, key=None):
     """Serve ``batches`` through ``retriever`` re-pointed at ``backend``;
     returns a metrics dict.  ``batches`` is a list of (q, qm, truth) —
     ground truth is precomputed once in main() since the query stream is
     identical across backends."""
-    import jax
-
     from repro.anns import registry
-    from repro.core import recall_at
     from repro.retriever import SearchParams
 
     # serve the retriever's own state when it already runs this backend
@@ -38,24 +65,28 @@ def serve_backend(retriever, backend, batches, args, *, key=None):
     else:
         r = retriever.with_backend(backend, key=key)
     params = SearchParams(k=args.k)
-    total_q, total_t, recs = 0, 0.0, []
-    for b, (q, qm, truth) in enumerate(batches):
-        t0 = time.time()
-        s, ids = r.search(q, qm, params)
-        jax.block_until_ready(ids)
-        dt = time.time() - t0
-        if b > 0:  # skip the compile batch in QPS *and* recall
-            total_q += args.batch
-            total_t += dt
-            recs.append(float(recall_at(ids, truth).mean()))
-        elif len(batches) == 1:  # recall is timing-free: better one sample
-            recs.append(float(recall_at(ids, truth).mean()))  # than a fake 0
-    qps = total_q / max(total_t, 1e-9)
-    rec = sum(recs) / max(len(recs), 1)
+    qps, rec = _serve_loop(lambda q, qm: r.search(q, qm, params), batches, args)
     traces = r.trace_count()
     print(f"[serve] backend={backend:13s} QPS={qps:.0f}  "
           f"recall@{args.k}={rec:.3f}  jit_traces={traces}")
     return {"backend": backend, "qps": qps, f"recall@{args.k}": rec,
+            "jit_traces": traces}
+
+
+def serve_sharded(retriever, mesh_spec, batches, args):
+    """Serve ``batches`` through ``retriever.shard(mesh)`` and report the
+    sharded operating point next to the single-device rows."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.retriever import SearchParams
+
+    mesh = make_serving_mesh(mesh_spec)
+    sr = retriever.shard(mesh)
+    params = SearchParams(k=args.k)
+    qps, rec = _serve_loop(lambda q, qm: sr.search(q, qm, params), batches, args)
+    traces = sr.trace_count()
+    print(f"[serve] mesh={mesh_spec:>7s} sharded QPS={qps:.0f}  "
+          f"recall@{args.k}={rec:.3f}  jit_traces={traces}  sq8={sr.sq8}")
+    return {"mesh": mesh_spec, "qps": qps, f"recall@{args.k}": rec,
             "jit_traces": traces}
 
 
@@ -72,7 +103,18 @@ def main(argv=None):
     p.add_argument("--save-dir", default=None,
                    help="optional: persist the built retriever here "
                         "(LemurRetriever.save) and reload before serving")
+    p.add_argument("--mesh", default=None,
+                   help="also serve sharded over this mesh, e.g. '1x8' "
+                        "(host devices are forced on CPU)")
     args = p.parse_args(argv)
+
+    if args.mesh:
+        # before any jax backend touch: force the host device count
+        import numpy as np
+
+        from repro.launch.mesh import ensure_devices, parse_mesh_spec
+
+        ensure_devices(int(np.prod(parse_mesh_spec(args.mesh))))
 
     import jax
     import jax.numpy as jnp
@@ -112,6 +154,9 @@ def main(argv=None):
 
     for name in names:
         serve_backend(retriever, name, batches, args, key=jax.random.PRNGKey(1))
+
+    if args.mesh:
+        serve_sharded(retriever, args.mesh, batches, args)
 
 
 if __name__ == "__main__":

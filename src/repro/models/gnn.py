@@ -21,8 +21,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.common.config import ConfigBase
 from repro.common.prng import PRNGSeq
 from repro.nn import layers
@@ -118,8 +120,8 @@ def _forward_body(params, node_feat, edge_feat, senders, receivers, cfg: GNNConf
     n_total = n_loc
     node_idx = 0
     for ax in node_axes:
-        n_total *= jax.lax.axis_size(ax)
-        node_idx = node_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        n_total *= compat.axis_size(ax)
+        node_idx = node_idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
 
     def gather_full(h_l):
         h = h_l
@@ -175,7 +177,7 @@ def forward(params, node_feat, edge_feat, senders, receivers, cfg: GNNConfig,
     array sharded over the batch axes when a mesh is given)."""
     if mesh is None:
         return _forward_body(params, node_feat, edge_feat, senders, receivers, cfg)
-    from jax import shard_map
+    from repro.common.compat import shard_map
 
     axes = tuple(mesh.axis_names)
     node_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -194,7 +196,7 @@ def loss_fn(params, batch, cfg: GNNConfig, mesh=None):
         out = _forward_body(params, batch["node_feat"], batch["edge_feat"],
                             batch["senders"], batch["receivers"], cfg)
         return _loss_from_out(out, batch, cfg)
-    from jax import shard_map
+    from repro.common.compat import shard_map
 
     axes = tuple(mesh.axis_names)
     node_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

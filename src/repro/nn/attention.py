@@ -188,7 +188,7 @@ def flash_attention_cp(q, k, v, q_positions, mesh, *, causal=True, chunk=None,
     EXPERIMENTS.md §Perf iteration 1).  Causal load imbalance across shards
     is accepted (ring/striped attention is the documented next step).
     """
-    from jax import shard_map
+    from repro.common.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -26,8 +26,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.nn import layers
 
 
@@ -193,7 +195,7 @@ def _moe_tokengather_body(x, router_w, wi_0, wi_1, wi, wo, *, layout, n_experts,
     y = jax.lax.psum(y, ("model", "data"))
     idx = 0
     for ax in batch_axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
     y = jax.lax.dynamic_slice_in_dim(y, idx * n_local_tokens, n_local_tokens, axis=0)
     return y, jax.lax.pmean(aux, "model")
 
@@ -209,7 +211,7 @@ def moe_apply(params, x, *, layout: str, n_experts: int, top_k: int, mesh,
     instead of the ZeRO weight-gather body.
     """
     import numpy as np
-    from jax import shard_map
+    from repro.common.compat import shard_map
 
     B, T, d = x.shape
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

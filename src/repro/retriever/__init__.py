@@ -19,9 +19,11 @@ from repro.anns.params import (
 )
 from repro.retriever.facade import LemurRetriever
 from repro.retriever.params import SearchParams
+from repro.retriever.sharded import ShardedLemurRetriever
 
 __all__ = [
     "LemurRetriever",
+    "ShardedLemurRetriever",
     "SearchParams",
     "IVFSearchParams",
     "NoSearchParams",

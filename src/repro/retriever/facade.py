@@ -6,6 +6,7 @@ One object owns the full lifecycle of a LEMUR index (Fig. 1):
     scores, ids = r.search(q_tokens, q_mask, SearchParams(k=10))
     r.add(new_doc_tokens, new_doc_mask)          # incremental growth (§4.3)
     r2 = r.with_backend("muvera")                # same reduction, new stage
+    sr = r.shard(mesh)                           # multi-device serving
     r.save("my_index/"); r = LemurRetriever.load("my_index/")
 
 Design points:
@@ -223,6 +224,23 @@ class LemurRetriever:
         self._compiled.clear()
         self._trace_counts.clear()
         return self
+
+    def shard(self, mesh, *, sq8: bool | None = None,
+              k_prime_local: int | None = None):
+        """Multi-device serving: a :class:`~repro.retriever.sharded.
+        ShardedLemurRetriever` over this built retriever, with the corpus
+        block-sharded across every axis of ``mesh`` (Fig. 1 at pod scale —
+        each shard runs latent scan → local top-k' → local exact rerank,
+        only (k, score) pairs cross the wire).
+
+        ``sq8`` selects the SQ8 code path for the resident corpus (default:
+        the build config's ``cfg.ivf.sq8``); ``k_prime_local`` overrides the
+        per-shard candidate budget (default: a 4x oversample of k'/n_shards,
+        see ``repro.dist.serve.default_k_prime_local``)."""
+        from repro.retriever.sharded import ShardedLemurRetriever
+
+        return ShardedLemurRetriever(self, mesh, sq8=sq8,
+                                     k_prime_local=k_prime_local)
 
     def _ensure_solver(self, seed: int) -> dict:
         if self._solver is not None:

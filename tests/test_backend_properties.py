@@ -1,0 +1,98 @@
+"""Property-based backend contract tests (hypothesis, optional).
+
+Randomized (m, Td, d, k, k') shapes through every registered first-stage
+backend: search must return valid in-range ids, the exact rerank must never
+leak ``-1`` pads while real candidates remain, and ``k > m`` must clamp
+(pad) instead of crashing.  With hypothesis absent (`tests/_hypothesis_compat`)
+the ``@given`` tests skip, but the same invariant checker still runs over a
+small deterministic grid so the contract is exercised everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.anns import registry
+from repro.anns.base import CorpusView, QueryBatch
+from repro.core import maxsim
+
+BACKENDS = registry.list_backends()
+DP = 16   # latent dim (fixed: backends either use it or ignore it)
+B = 3     # query batch
+
+
+def _make_data(m: int, td: int, d: int, seed: int):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((m, td)) < 0.8
+    mask[:, 0] = True                      # every doc keeps >= 1 token
+    view = CorpusView(
+        jnp.asarray(rng.standard_normal((m, DP)), jnp.float32),
+        jnp.asarray(rng.standard_normal((m, td, d)), jnp.float32),
+        jnp.asarray(mask),
+    )
+    qb = QueryBatch(
+        jnp.asarray(rng.standard_normal((B, DP)), jnp.float32),
+        jnp.asarray(rng.standard_normal((B, 3, d)), jnp.float32),
+        jnp.ones((B, 3), bool),
+    )
+    return view, qb
+
+
+def check_backend_contract(name: str, m: int, td: int, d: int, k: int,
+                           k_prime: int, seed: int = 0):
+    """The invariants every registered backend must uphold for ANY shape."""
+    view, qb = _make_data(m, td, d, seed)
+    be = registry.get_backend(name)
+    state = be.build(jax.random.PRNGKey(seed), view, None)
+
+    # -- first stage: (B, k') int32 ids in [-1, m), valid ids unique per row
+    scores, ids = be.search(state, qb, k_prime)
+    assert scores.shape == (B, k_prime) and ids.shape == (B, k_prime)
+    assert ids.dtype == jnp.int32
+    ids_np = np.asarray(ids)
+    assert ids_np.min() >= -1 and ids_np.max() < m, name
+    for row in ids_np:
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), f"{name}: dup candidates"
+
+    # -- rerank: pads may only surface when a row ran out of real candidates
+    kk = min(k, k_prime)
+    r_scores, r_ids = maxsim.rerank(qb.tokens, qb.mask, ids,
+                                    view.doc_tokens, view.doc_mask, kk)
+    assert r_ids.shape == (B, kk)
+    r_np = np.asarray(r_ids)
+    assert r_np.min() >= -1 and r_np.max() < m, name
+    for first, row in zip(ids_np, r_np):
+        n_valid = int((first >= 0).sum())
+        lead = row[: min(kk, n_valid)]
+        assert (lead >= 0).all(), f"{name}: -1 leaked past {n_valid} candidates"
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), f"{name}: dup after rerank"
+
+    # -- k' > m must clamp (pad with -1), not crash or invent ids
+    s2, i2 = be.search(state, qb, m + 7)
+    assert i2.shape == (B, m + 7)
+    i2_np = np.asarray(i2)
+    assert i2_np.min() >= -1 and i2_np.max() < m, name
+
+
+# deterministic floor: runs with or without hypothesis
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("m,td,d,k,k_prime", [
+    (24, 2, 4, 5, 10),
+    (64, 5, 12, 10, 96),    # k' > m: clamped
+    (40, 3, 8, 50, 30),     # k > k': rerank clamps to k'
+])
+def test_backend_contract_grid(name, m, td, d, k, k_prime):
+    check_backend_contract(name, m, td, d, k, k_prime, seed=1)
+
+
+# randomized sweep: only with hypothesis installed
+@pytest.mark.parametrize("name", BACKENDS)
+@settings(deadline=None, max_examples=15)
+@given(m=st.integers(24, 96), td=st.integers(2, 6), d=st.integers(4, 16),
+       k=st.integers(1, 30), k_prime=st.integers(1, 120),
+       seed=st.integers(0, 3))
+def test_backend_contract_random(name, m, td, d, k, k_prime, seed):
+    check_backend_contract(name, m, td, d, k, k_prime, seed)

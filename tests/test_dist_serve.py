@@ -1,0 +1,187 @@
+"""Sharded-vs-local parity for the facade's multi-device serving path.
+
+``LemurRetriever.shard(mesh)`` must be a pure distribution transform: the
+same top-k ids AND scores as the single-device facade, bit for bit, on any
+mesh — each test runs in a subprocess with 8 forced XLA host devices and
+compares a 1-device and an 8-device mesh against the local reference.
+
+The corpora deliberately do NOT divide the device count (m=90, 8 devices)
+so the pad-row masking path is always exercised.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+# shared preamble: tiny retriever whose k' covers the whole corpus, so the
+# two-stage pipeline degenerates to exact MaxSim and parity must be EXACT
+_BUILD = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.common import compat
+from repro.core import LemurConfig
+from repro.data import synthetic
+from repro.retriever import LemurRetriever, SearchParams, ShardedLemurRetriever
+
+def build(m=90, k=5):
+    corpus = synthetic.make_corpus(m=m, d=16, avg_tokens=8, max_tokens=8,
+                                   n_centers=16, seed=0)
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=64, n_train=512, n_ols=256,
+                      epochs=3, k=k, k_prime=m, anns="bruteforce")
+    r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 4, 4, seed=5))
+    qm = jnp.ones(q.shape[:2], bool)
+    return r, q, qm
+
+MESH1 = compat.make_mesh((1,), ("model",))
+MESH8 = compat.make_mesh((2, 4), ("data", "model"))
+"""
+
+
+def test_sharded_search_matches_facade_fp32():
+    """fp32 sharded search == single-device facade, bit-identical, on 1 and
+    8 host devices; exactly one jit trace per (params, batch shape)."""
+    out = _run(_BUILD + textwrap.dedent("""
+    r, q, qm = build()
+    params = SearchParams(use_ann=False)
+    want_s, want_i = r.search(q, qm, params)
+    for mesh in (MESH1, MESH8):
+        sr = r.shard(mesh, sq8=False)
+        got_s, got_i = sr.search(q, qm, params)
+        assert np.array_equal(np.asarray(got_i), np.asarray(want_i)), mesh
+        assert np.array_equal(np.asarray(got_s), np.asarray(want_s)), mesh
+        sr.search(q, qm, params)          # same params + shape: no retrace
+        assert sr.trace_count() == 1
+        assert sr.trace_count(params) == 1
+    print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_search_sq8_matches_single_device():
+    """SQ8 state: scores are exact w.r.t. the quantized representation, so
+    8-device serving must still be bit-identical to the 1-device mesh."""
+    out = _run(_BUILD + textwrap.dedent("""
+    r, q, qm = build()
+    params = SearchParams(use_ann=False)
+    s1, i1 = r.shard(MESH1, sq8=True).search(q, qm, params)
+    s8, i8 = r.shard(MESH8, sq8=True).search(q, qm, params)
+    assert np.array_equal(np.asarray(i1), np.asarray(i8))
+    assert np.array_equal(np.asarray(s1), np.asarray(s8))
+    ids = np.asarray(i8)
+    assert ids.min() >= 0 and ids.max() < r.m      # pads never surface
+    # quantized top-k stays close to the fp32 ranking on this easy corpus
+    _, fp_i = r.search(q, qm, params)
+    overlap = np.mean([len(set(a) & set(b)) / len(a)
+                       for a, b in zip(ids, np.asarray(fp_i))])
+    assert overlap >= 0.8, overlap
+    print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_add_matches_facade():
+    """Shard-balanced growth: after add(), sharded search still matches the
+    (identically grown) facade bit for bit, and every shard holds the same
+    row count."""
+    out = _run(_BUILD + textwrap.dedent("""
+    import repro.dist as dist
+    r, q, qm = build()
+    sr = r.shard(MESH8, sq8=False)
+    extra = synthetic.make_corpus(m=21, d=16, avg_tokens=8, max_tokens=8,
+                                  n_centers=16, seed=9)
+    sr.add(extra.doc_tokens, extra.doc_mask)      # grows the shared base too
+    assert sr.m == r.m == 111
+    assert sr.state.W.shape[0] % dist.n_corpus_shards(MESH8) == 0
+    params = SearchParams(k_prime=r.m, use_ann=False)  # full coverage again
+    want_s, want_i = r.search(q, qm, params)
+    got_s, got_i = sr.search(q, qm, params)
+    assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_k_exceeds_corpus_pads_to_k():
+    """k > m on a corpus smaller than the device count: search must keep
+    the facade's (B, k) shape, padding with (NEG, -1) — not return the
+    merge's narrower width."""
+    out = _run(_BUILD + textwrap.dedent("""
+    corpus = synthetic.make_corpus(m=6, d=16, avg_tokens=6, max_tokens=6,
+                                   n_centers=4, seed=0)
+    cfg = LemurConfig(d=16, d_prime=16, m_pretrain=6, n_train=128, n_ols=64,
+                      epochs=2, batch_size=64, k=10, k_prime=6,
+                      anns="bruteforce")
+    r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 2, 3, seed=1))
+    qm = jnp.ones(q.shape[:2], bool)
+    sr = r.shard(MESH8, sq8=False)
+    s, i = sr.search(q, qm, SearchParams(k=10))
+    ids = np.asarray(i)
+    assert s.shape == (2, 10) and i.shape == (2, 10)
+    assert (ids[:, 6:] == -1).all()
+    assert (np.sort(ids[:, :6], axis=1) == np.arange(6)).all()
+    print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_save_load_roundtrip():
+    """save() persists the mesh-free index; load(directory, mesh) reproduces
+    sharded search ids/scores bit-identically."""
+    out = _run(_BUILD + textwrap.dedent("""
+    import tempfile
+    r, q, qm = build()
+    params = SearchParams(use_ann=False)
+    want_s, want_i = r.shard(MESH8, sq8=False).search(q, qm, params)
+    with tempfile.TemporaryDirectory() as d:
+        r.shard(MESH8).save(d)
+        sr = ShardedLemurRetriever.load(d, MESH8, sq8=False)
+        got_s, got_i = sr.search(q, qm, params)
+    assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_index_step_matches_local_ols():
+    """The zero-comms distributed OLS index step reproduces the local
+    solve over an 8-way sharded corpus."""
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.common import compat
+    from repro.core import LemurConfig, indexer
+    from repro.core.model import init_psi
+    from repro.data import synthetic
+    from repro.dist import make_index_step
+
+    corpus = synthetic.make_corpus(m=96, d=16, avg_tokens=8, max_tokens=8, seed=0)
+    cfg = LemurConfig(d=16, d_prime=32, ridge=1e-4, n_ols=128)
+    psi = init_psi(jax.random.PRNGKey(0), 16, 32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+    docs = jnp.asarray(corpus.doc_tokens); mask = jnp.asarray(corpus.doc_mask)
+    W_ref = indexer.fit_output_layer_ols(psi, x, docs, mask, cfg)
+
+    chol, feats = indexer.gram_factor(psi, x, cfg.ridge)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
+    step = make_index_step(mesh, cfg, doc_block=12)
+    W = jax.jit(step)(chol[0], feats, x, docs, mask, jnp.zeros(()), jnp.ones(()))
+    err = float(jnp.max(jnp.abs(W - W_ref)))
+    assert err < 1e-3, err
+    print("OK")
+    """)
+    assert "OK" in out

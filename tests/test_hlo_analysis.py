@@ -21,11 +21,11 @@ def test_scan_trip_count_correction():
 
 
 def test_collectives_inside_scan_multiplied():
-    from jax import shard_map
+    from repro.common.compat import AxisType, make_mesh, set_mesh, shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
 
     def g(x):
         def body(c, _):
@@ -37,7 +37,7 @@ def test_collectives_inside_scan_multiplied():
         return y
 
     spec = jax.ShapeDtypeStruct((32, 32), jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         comp = jax.jit(g).lower(spec).compile()
     r = analyze(comp.as_text())
     assert r["collective_count"].get("all-reduce", 0) == 5

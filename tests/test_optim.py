@@ -76,10 +76,10 @@ def test_ef_int8_allreduce_error_feedback():
     """Over many steps the error-feedback compression is unbiased: the sum of
     dequantized transmissions converges to the sum of true gradients."""
     from repro.optim.compress import ef_int8_allreduce
-    from jax import shard_map
+    from repro.common.compat import AxisType, make_mesh, shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,))
     rng = np.random.default_rng(0)
     g_true = [jnp.asarray(rng.standard_normal(32), jnp.float32) for _ in range(30)]
     err = {"g": jnp.zeros(32)}

@@ -81,6 +81,33 @@ def test_lm_shape_cells_batch_divisible():
             assert seq % 16 == 0  # model-axis seq sharding
 
 
+def test_cells_resolve_specs_for_lm_and_recsys():
+    """Regression: launch/cells.py imports repro.dist.sharding and builds
+    full cells — every in_sharding leaf resolves to a NamedSharding on the
+    mesh — for one LM and one recsys config (no compilation, eval_shape
+    only)."""
+    from jax.sharding import NamedSharding
+
+    from repro.common.compat import make_mesh
+    from repro.launch import cells
+    from repro.models import lm, recsys
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+
+    lm_cfg = get_arch("gemma-7b").CONFIG
+    cell = cells.lm_prefill_cell("gemma-7b", lm_cfg, seq=128, global_batch=1,
+                                 mesh=mesh)
+    rs_cfg = get_arch("two-tower-retrieval").CONFIG
+    rcell = cells.recsys_cell("two-tower-retrieval", rs_cfg, batch=32,
+                              mesh=mesh, kind="train")
+    for c in (cell, rcell):
+        leaves = jax.tree_util.tree_leaves(
+            c.in_shardings,
+            is_leaf=lambda x: isinstance(x, NamedSharding))
+        assert leaves and all(isinstance(l, NamedSharding) for l in leaves), c.arch
+        assert all(l.mesh == mesh for l in leaves), c.arch
+
+
 def test_rules_first_match_wins():
     from jax.sharding import PartitionSpec as P
 
