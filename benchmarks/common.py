@@ -17,6 +17,9 @@ from repro.data import synthetic
 
 RESULTS = pathlib.Path("results")
 RESULTS.mkdir(exist_ok=True)
+# repo root, for the committed BENCH_*.json perf trajectory (machine-readable
+# fused-vs-legacy serving numbers future PRs are held to)
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 # CPU-scaled benchmark setting (statistics mirror SCIDOCS: m≈25k docs).
 M, D, AVG_T, MAX_T = 12000, 48, 16, 24
@@ -126,3 +129,31 @@ def emit(name: str, us_per_call: float, derived: str):
 
 def save_json(name: str, obj):
     (RESULTS / f"bench_{name}.json").write_text(json.dumps(obj, indent=1))
+
+
+def save_bench_root(name: str, obj):
+    """Write ``BENCH_<name>.json`` at the REPO ROOT (the committed perf
+    trajectory — ``results/`` holds per-run scratch, these hold the numbers
+    the next PR is compared against)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(obj, indent=1) + "\n")
+    return path
+
+
+def bench_row(op: str, shape: str, legacy_s: float, fused_s: float,
+              gathered_bytes: int, *, parity: bool) -> dict:
+    """One fused-vs-legacy row of the BENCH_*.json contract: wall-µs per
+    call for both paths, effective GB/s over the logical gathered bytes
+    (same byte count for both paths — the fused path streams them once,
+    the legacy path materializes them in HBM first), and the speedup."""
+    return {
+        "op": op,
+        "shape": shape,
+        "legacy_us": legacy_s * 1e6,
+        "fused_us": fused_s * 1e6,
+        "fused_vs_legacy": legacy_s / max(fused_s, 1e-12),
+        "gathered_bytes": int(gathered_bytes),
+        "legacy_gbps": gathered_bytes / max(legacy_s, 1e-12) / 1e9,
+        "fused_gbps": gathered_bytes / max(fused_s, 1e-12) / 1e9,
+        "parity": bool(parity),
+    }

@@ -1,7 +1,8 @@
 """Kernel-layer micro-benchmarks: ops-vs-ref wall time (CPU: reference path
 is the measurement; the Pallas path is TPU-targeted and validated in
 interpret mode by tests).  Reports the arithmetic layout costs that drive
-the §Perf napkin math."""
+the §Perf napkin math, plus the fused-vs-legacy gather rows that feed the
+repo-root ``BENCH_kernels.json`` perf trajectory."""
 from __future__ import annotations
 
 import jax
@@ -10,10 +11,79 @@ import numpy as np
 
 from benchmarks import common
 from repro.anns.quantization import sq8_quant
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
-def run():
+def _gather_rows(rng):
+    """Fused-vs-legacy rows at the raw kernel/oracle level: the probe-scan
+    and rerank score stages, stripped of index build and top-k, through the
+    real ``ops`` dispatch (parity asserted per row).
+
+    ``REPRO_BENCH_INTERPRET=1`` (the CI bench-smoke job) additionally runs
+    the Pallas kernels in interpret mode on a small slice and folds the
+    result into each row's parity bit — a kernel-body regression fails the
+    bench even on a CPU runner."""
+    import os
+
+    from repro.core import maxsim
+
+    interpret = os.environ.get("REPRO_BENCH_INTERPRET") == "1"
+    rows = []
+    # IVF probe scan stage: (B, nprobe) clusters of (cap, d)
+    B, nlist, cap, d, nprobe = 64, 128, 128, 128, 16
+    ids = jnp.asarray(rng.integers(0, 1 << 20, (nlist, cap)), jnp.int32)
+    vecs = jnp.asarray(rng.standard_normal((nlist, cap, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    probe = jnp.asarray(rng.integers(0, nlist, (B, nprobe)), jnp.int32)
+    codes, scales = sq8_quant(vecs)
+    for name, v, s, item in (("ivf_scan_fp32", vecs, None, 4),
+                             ("ivf_scan_sq8", codes, scales, 1)):
+        legacy = jax.jit(lambda qq, pp, v=v, s=s: ref.ivf_scan_ref(
+            qq, pp, ids, v, s))
+        fused = jax.jit(lambda qq, pp, v=v, s=s: ops.fused_ivf_scan(
+            qq, pp, ids, v, s))
+        lo, fo = legacy(q, probe), fused(q, probe)
+        parity = bool(np.allclose(np.asarray(lo), np.asarray(fo)))
+        if interpret:
+            ko = ops.fused_ivf_scan(q[:4], probe[:4], ids, v, s,
+                                    use_kernel=True)
+            tol = 1e-6 if s is None else 2 ** -13
+            parity &= bool(np.allclose(np.asarray(ko), np.asarray(lo[:4]),
+                                       rtol=tol, atol=1e-3))
+        gathered = B * nprobe * cap * (d * item + 4 + (4 if s is not None else 0))
+        rows.append(common.bench_row(
+            name, f"B={B},nprobe={nprobe},cap={cap},d={d}",
+            common.timeit(legacy, q, probe), common.timeit(fused, q, probe),
+            gathered, parity=parity))
+        common.emit(f"kernel_{name}", rows[-1]["fused_us"],
+                    f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy")
+
+    # candidate-gather rerank stage: (B, k') docs of (Td, d)
+    B, m, Tq, Td, d, kp = 32, 8192, 8, 16, 128, 128
+    qt = jnp.asarray(rng.standard_normal((B, Tq, d)), jnp.float32)
+    qm = jnp.ones((B, Tq), bool)
+    docs = jnp.asarray(rng.standard_normal((m, Td, d)), jnp.float32)
+    dm = jnp.asarray(rng.random((m, Td)) > 0.2).at[:, 0].set(True)
+    cand = jnp.asarray(rng.integers(0, m, (B, kp)), jnp.int32)
+    legacy = jax.jit(lambda a, b, c: maxsim.rerank(a, b, c, docs, dm, 10))
+    fused = jax.jit(lambda a, b, c: ops.fused_rerank(a, b, c, docs, dm, 10))
+    _, li = legacy(qt, qm, cand)
+    _, fi = fused(qt, qm, cand)
+    parity = bool(np.array_equal(np.asarray(li), np.asarray(fi)))
+    if interpret:
+        _, ki = ops.fused_rerank(qt[:2], qm[:2], cand[:2], docs, dm, 10,
+                                 use_kernel=True)
+        parity &= bool(np.array_equal(np.asarray(ki), np.asarray(li[:2])))
+    rows.append(common.bench_row(
+        "rerank", f"B={B},k_prime={kp},Tq={Tq},Td={Td},d={d}",
+        common.timeit(legacy, qt, qm, cand), common.timeit(fused, qt, qm, cand),
+        B * kp * Td * (d * 4 + 4), parity=parity))
+    common.emit("kernel_rerank_fused", rows[-1]["fused_us"],
+                f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy")
+    return rows
+
+
+def run(emit_json: bool = False):
     rng = np.random.default_rng(0)
     out = {}
     # token_maxsim (rerank/OLS-target contraction)
@@ -45,9 +115,27 @@ def run():
     out["mips_sq8"] = {"s": t, "gflops": flops / t / 1e9}
     common.emit("kernel_mips_sq8", t * 1e6, f"gflops={flops/t/1e9:.1f}")
 
+    gather = _gather_rows(rng)
+    out["gather"] = gather
     common.save_json("kernels", out)
+    if emit_json:
+        common.save_bench_root("kernels", {
+            "meta": {"backend": jax.default_backend(),
+                     "note": "fused rows run the real ops dispatch — on CPU "
+                             "both paths lower to jnp (ratio ~1); the "
+                             "gather-at-source wins land on TPU"},
+            "rows": gather})
+    bad = [r["op"] for r in gather if not r["parity"]]
+    if bad:
+        raise SystemExit(f"fused-path parity regression in: {bad}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    _p = argparse.ArgumentParser()
+    _p.add_argument("--emit-json", action="store_true",
+                    help="also overwrite the committed repo-root "
+                         "BENCH_kernels.json (the perf trajectory)")
+    run(emit_json=_p.parse_args().emit_json)

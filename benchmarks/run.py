@@ -44,6 +44,11 @@ def main(argv=None) -> None:
     p.add_argument("--mesh", default=None,
                    help="table2 also reports sharded QPS over this mesh "
                         "spec, e.g. '1x8' (host devices forced on CPU)")
+    p.add_argument("--emit-json", action="store_true",
+                   help="also write the repo-root BENCH_*.json perf "
+                        "trajectory (BENCH_kernels.json from the kernels "
+                        "bench, BENCH_serving.json from table2's fused-vs-"
+                        "legacy serving rows)")
     args = p.parse_args(argv)
     which = args.names or BENCHES
     if args.mesh:
@@ -68,7 +73,8 @@ def main(argv=None) -> None:
     if any(w.startswith("table2") for w in which):
         from benchmarks import table2_qps
 
-        table2_qps.run(backends=backends, mesh=args.mesh)
+        table2_qps.run(backends=backends, mesh=args.mesh,
+                       emit_json=args.emit_json)
     if any(w.startswith("appendix") for w in which):
         from benchmarks import appendix_d_training
 
@@ -76,7 +82,7 @@ def main(argv=None) -> None:
     if any(w.startswith("kernel") for w in which):
         from benchmarks import kernels_bench
 
-        kernels_bench.run()
+        kernels_bench.run(emit_json=args.emit_json)
     print(f"# total bench time: {time.time()-t0:.1f}s", file=sys.stderr)
 
 

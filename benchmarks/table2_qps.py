@@ -88,7 +88,98 @@ def sweep_sharded(mesh_spec: str, q, qm, truth):
     return rows
 
 
-def run(backends=None, mesh=None):
+def serving_perf(sizes=(4096, 16384), *, batch: int = 32, d: int = 64,
+                 nprobe: int = 16, k_prime: int = 128, td: int = 16,
+                 emit_json: bool = True):
+    """Fused-vs-legacy serving micro-bench -> repo-root ``BENCH_serving.json``.
+
+    Times the two gather-dominated serving ops at each corpus size in
+    ``sizes`` — the IVF probe scan (fp32 AND SQ8) and the candidate MaxSim
+    rerank — through the real dispatch path (``use_fused_gather`` True vs
+    False), asserting parity on every row (bit-identical ids on fp32,
+    ≤2^-16-relative scores on SQ8): a CI bench-smoke run FAILS if the fused
+    path ever diverges.  Indexes are built directly over random latents so
+    the bench measures serving, not LEMUR training."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.anns import ivf as _ivf
+    from repro.core import maxsim
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for m in sizes:
+        q = jnp.asarray(rng.standard_normal((batch, d)), jnp.float32)
+        for sq8 in (False, True):
+            index = _ivf.build_ivf(jax.random.PRNGKey(0),
+                                   jnp.asarray(rng.standard_normal((m, d)),
+                                               jnp.float32),
+                                   sq8=sq8, kmeans_iters=3)
+            npr = min(nprobe, index.nlist)
+            legacy = jax.jit(lambda qq, idx=index, npr=npr: _ivf.search_ivf(
+                idx, qq, npr, common.K, use_fused_gather=False))
+            fused = jax.jit(lambda qq, idx=index, npr=npr: _ivf.search_ivf(
+                idx, qq, npr, common.K, use_fused_gather=True))
+            ls, li = legacy(q)
+            fs, fi = fused(q)
+            if sq8:
+                fin = np.isfinite(np.asarray(ls))
+                parity = bool(
+                    np.array_equal(np.isfinite(np.asarray(fs)), fin)
+                    and np.allclose(np.asarray(fs)[fin], np.asarray(ls)[fin],
+                                    rtol=2 ** -14, atol=1e-4))
+            else:
+                parity = bool(np.array_equal(np.asarray(fi), np.asarray(li)))
+            item = 1 if sq8 else 4
+            gathered = batch * npr * index.capacity * (d * item + 4
+                                                       + (4 if sq8 else 0))
+            op = f"ivf_scan_{'sq8' if sq8 else 'fp32'}"
+            rows.append(common.bench_row(
+                op, f"m={m},B={batch},nprobe={npr},cap={index.capacity},d={d}",
+                common.timeit(legacy, q, iters=3),
+                common.timeit(fused, q, iters=3), gathered, parity=parity))
+            common.emit(f"serving_{op}_m{m}", rows[-1]["fused_us"],
+                        f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy")
+
+        # candidate-gather rerank over random token matrices
+        docs = jnp.asarray(rng.standard_normal((m, td, 32)), jnp.float32)
+        dmask = jnp.asarray(rng.random((m, td)) > 0.2).at[:, 0].set(True)
+        qt = jnp.asarray(rng.standard_normal((batch, 8, 32)), jnp.float32)
+        qm = jnp.ones((batch, 8), bool)
+        cand = jnp.asarray(rng.integers(0, m, (batch, k_prime)), jnp.int32)
+        legacy = jax.jit(lambda a, b, c: maxsim.rerank(a, b, c, docs, dmask,
+                                                       common.K))
+        fused = jax.jit(lambda a, b, c: ops.fused_rerank(a, b, c, docs, dmask,
+                                                         common.K))
+        _, li = legacy(qt, qm, cand)
+        _, fi = fused(qt, qm, cand)
+        parity = bool(np.array_equal(np.asarray(fi), np.asarray(li)))
+        gathered = batch * k_prime * td * (32 * 4 + 4)
+        rows.append(common.bench_row(
+            "rerank", f"m={m},B={batch},k_prime={k_prime},Td={td},d=32",
+            common.timeit(legacy, qt, qm, cand, iters=3),
+            common.timeit(fused, qt, qm, cand, iters=3), gathered,
+            parity=parity))
+        common.emit(f"serving_rerank_m{m}", rows[-1]["fused_us"],
+                    f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy")
+
+    out = {"meta": {"backend": jax.default_backend(), "batch": batch,
+                    "sizes": list(sizes),
+                    "note": "fused path == kernels/gather_scan.py dispatch; "
+                            "on CPU both paths lower to jnp (ratio ~1); the "
+                            "kernel wins land on TPU where the gather "
+                            "never touches HBM"},
+           "rows": rows}
+    if emit_json:
+        common.save_bench_root("serving", out)
+    bad = [r["op"] for r in rows if not r["parity"]]
+    if bad:
+        raise SystemExit(f"fused-path parity regression in: {bad}")
+    return out
+
+
+def run(backends=None, mesh=None, emit_json: bool = False):
     if mesh:
         # must precede the first jax backend touch below
         import numpy as np
@@ -125,6 +216,8 @@ def run(backends=None, mesh=None):
         common.emit(f"table2_{name}", 1e6 / max(r["qps"], 1e-9),
                     f"recall={r['recall']:.3f},qps={r['qps']:.0f}")
     common.save_json("table2_qps", out)
+    if emit_json:
+        serving_perf(emit_json=True)
 
     if "ivf" in out:
         baselines = [out[n]["qps"] for n in ("muvera", "token_pruning", "dessert")
@@ -143,11 +236,27 @@ if __name__ == "__main__":
                     help="comma list of backends, or 'all'")
     _p.add_argument("--mesh", default=None,
                     help="also report sharded QPS over this mesh, e.g. '1x8'")
+    _p.add_argument("--emit-json", action="store_true",
+                    help="also write repo-root BENCH_serving.json "
+                         "(fused-vs-legacy serving rows)")
+    _p.add_argument("--serving-only", action="store_true",
+                    help="skip the backend sweeps; run ONLY the fused-vs-"
+                         "legacy serving bench (the CI bench-smoke config)")
+    _p.add_argument("--serving-sizes", default=None,
+                    help="comma list of corpus sizes for the serving bench, "
+                         "e.g. '768,1536'")
+    _p.add_argument("--serving-batch", type=int, default=32,
+                    help="query batch for the serving bench")
     _a = _p.parse_args()
-    if _a.backend in (None, "all"):
-        _backends = None  # run() defaults to the full registry
+    if _a.serving_only:
+        _sizes = (tuple(int(s) for s in _a.serving_sizes.split(","))
+                  if _a.serving_sizes else (4096, 16384))
+        serving_perf(_sizes, batch=_a.serving_batch, emit_json=True)
     else:
-        _backends = [s for s in _a.backend.split(",") if s]
-        for _n in _backends:
-            registry.get_backend(_n)  # fail fast, before the corpus build
-    run(backends=_backends, mesh=_a.mesh)
+        if _a.backend in (None, "all"):
+            _backends = None  # run() defaults to the full registry
+        else:
+            _backends = [s for s in _a.backend.split(",") if s]
+            for _n in _backends:
+                registry.get_backend(_n)  # fail fast, before the corpus build
+        run(backends=_backends, mesh=_a.mesh, emit_json=_a.emit_json)

@@ -100,13 +100,22 @@ class IVFRetriever:
                params: IVFSearchParams | None = None):
         nprobe = params.nprobe if params is not None else None
         nprobe = min(int(nprobe or min(32, state.nlist)), state.nlist)
-        return _ivf.search_ivf(state, query.latent, nprobe, k)
+        # unresolved params default to the fused path (like nprobe's 32
+        # fallback above, cfg routing happens in SearchParams.resolve —
+        # default_params carries cfg.ivf.use_fused_gather through it)
+        fused = params.use_fused_gather if params is not None else None
+        fused = True if fused is None else bool(fused)
+        return _ivf.search_ivf(state, query.latent, nprobe, k,
+                               use_fused_gather=fused)
 
     def add(self, state, corpus: CorpusView):
         return _ivf.extend_ivf(state, jnp.asarray(corpus.latent))
 
     def default_params(self, cfg) -> IVFSearchParams:
-        return IVFSearchParams(nprobe=cfg.nprobe if cfg is not None else None)
+        if cfg is None:
+            return IVFSearchParams()
+        return IVFSearchParams(nprobe=cfg.nprobe,
+                               use_fused_gather=cfg.use_fused_gather)
 
     def pack_state(self, state: _ivf.IVFIndex):
         arrays = {"centroids": state.centroids, "ids": state.ids,

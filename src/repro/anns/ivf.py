@@ -3,9 +3,11 @@
 Build: k-means coarse quantizer over the latent corpus; vectors are packed
 into fixed-capacity padded cluster lists (capacity = max cluster size) with
 optional SQ8 storage.  Search: one (B, nlist) centroid matmul, top-`nprobe`
-clusters, a gathered block scan, masked top-k'.  Everything is dense matmul
-+ gather — no pointer chasing — so it maps onto MXU tiles and shards (each
-device holds a slice of the cluster lists).
+clusters, then either the gather-at-source probe scan (default —
+``kernels.gather_scan`` DMAs each probed cluster tile straight into VMEM on
+TPU) or the legacy gathered block scan, and a masked top-k'.  Everything is
+dense matmul + gather — no pointer chasing — so it maps onto MXU tiles and
+shards (each device holds a slice of the cluster lists).
 
 The recall/latency knob is ``nprobe`` (HNSW's ef_search analogue, §6.2).
 """
@@ -135,27 +137,39 @@ def extend_ivf(index: IVFIndex, new_vectors: jax.Array) -> IVFIndex:
     return IVFIndex(index.centroids, ids2, vecs2, scales2, counts2, index.mean)
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
-def search_ivf(index: IVFIndex, q: jax.Array, nprobe: int, k: int):
-    """q: (B, d) -> (scores (B, k), ids (B, k))."""
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "use_fused_gather"))
+def search_ivf(index: IVFIndex, q: jax.Array, nprobe: int, k: int,
+               use_fused_gather: bool = False):
+    """q: (B, d) -> (scores (B, k), ids (B, k)).
+
+    ``use_fused_gather=True`` scores the probed cluster lists through the
+    gather-at-source kernel path (``ops.fused_ivf_scan``: the scalar-prefetch
+    Pallas scan on TPU, its gather-then-score oracle elsewhere) — only the
+    ``(B, nprobe, cap)`` id strip is ever gathered in HBM.  ``False`` keeps
+    the legacy materialize-then-score path benchmarkable.
+    """
     B, d = q.shape
     cs = q @ index.centroids.T                     # (B, nlist)
     _, probe = jax.lax.top_k(cs, nprobe)           # (B, nprobe)
     ids = jnp.take(index.ids, probe, axis=0)       # (B, nprobe, cap)
-    vecs = jnp.take(index.vecs, probe, axis=0)     # (B, nprobe, cap, d)
-    if index.scales is not None:
-        # SQ8 scan through the Pallas kernel path (dequant inside the kernel;
-        # pure-jnp reference off-TPU) — one (1, P·cap) MIPS per query row
-        sc = jnp.take(index.scales, probe, axis=0)             # (B, P, cap)
-        cap = vecs.shape[2]
-        s = jax.vmap(
-            lambda qi, ci, si: ops.mips_sq8(qi[None, :], ci, si)[0]
-        )(q, vecs.reshape(B, -1, d), sc.reshape(B, -1))        # (B, P*cap)
-        s = s.reshape(B, nprobe, cap)
+    if use_fused_gather:
+        # masked -inf inside the scan (same pad convention as below)
+        s = ops.fused_ivf_scan(q, probe, index.ids, index.vecs, index.scales)
     else:
-        s = jnp.einsum("bd,bpcd->bpc", q, vecs.astype(q.dtype),
-                       preferred_element_type=jnp.float32)
-    s = jnp.where(ids >= 0, s, -jnp.inf)
+        vecs = jnp.take(index.vecs, probe, axis=0)  # (B, nprobe, cap, d)
+        cap = vecs.shape[2]
+        if index.scales is not None:
+            # batched SQ8 scan: all B queries' gathered lists in ONE call
+            # (the old path vmapped B one-row mips_sq8 launches — 1/128 MXU
+            # tile utilization at block_q=128)
+            sc = jnp.take(index.scales, probe, axis=0)         # (B, P, cap)
+            s = ops.mips_sq8_batched(q, vecs.reshape(B, -1, d),
+                                     sc.reshape(B, -1))        # (B, P*cap)
+            s = s.reshape(B, nprobe, cap)
+        else:
+            s = jnp.einsum("bd,bpcd->bpc", q, vecs.astype(q.dtype),
+                           preferred_element_type=jnp.float32)
+        s = jnp.where(ids >= 0, s, -jnp.inf)
     flat_s = s.reshape(B, -1)
     flat_i = ids.reshape(B, -1)
     kk = min(k, flat_s.shape[1])

@@ -49,6 +49,8 @@ class IVFBackendConfig(BackendConfig):
     nlist: int = 0           # 0 => 4*sqrt(m) rounded down to pow2 (paper's rule)
     nprobe: int = 32         # default query-time probe count
     sq8: bool = True         # scalar-quantize the latent corpus (Glass-style)
+    use_fused_gather: bool = True  # gather-at-source probe scan (kernels.
+                                   # gather_scan); False = legacy HBM gather
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +84,7 @@ class NoSearchParams(BackendSearchParams):
 @dataclasses.dataclass(frozen=True)
 class IVFSearchParams(BackendSearchParams):
     nprobe: int | None = None    # None => cfg.ivf.nprobe
+    use_fused_gather: bool | None = None  # None => cfg.ivf.use_fused_gather
 
 
 @dataclasses.dataclass(frozen=True)

@@ -69,6 +69,11 @@ class LemurConfig(ConfigBase):
     dessert: DessertBackendConfig = DessertBackendConfig()
     token_pruning: TokenPruningBackendConfig = TokenPruningBackendConfig()
     rerank_block: int = 1024     # docs per MaxSim rerank tile
+    use_fused_gather: bool = True  # candidate-gather rerank through the
+                                   # gather-at-source kernel path (kernels.
+                                   # gather_scan); False = legacy HBM gather.
+                                   # The IVF probe-scan twin lives in
+                                   # cfg.ivf.use_fused_gather.
     score_dtype: str = "float32"
 
     def __post_init__(self):

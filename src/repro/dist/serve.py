@@ -28,6 +28,7 @@ from repro.common.compat import shard_map
 from repro.core import maxsim
 from repro.core.config import LemurConfig
 from repro.core.model import pool_queries
+from repro.kernels import ops
 
 
 def corpus_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -74,13 +75,18 @@ def state_shardings(mesh: Mesh, state: ShardedRetrievalState | None = None):
 def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
                     q_tokens, q_mask, *, k: int, k_prime: int,
                     axes: tuple[str, ...], axis_sizes: tuple[int, ...],
-                    m_real: int | None = None):
+                    m_real: int | None = None, use_fused_gather: bool = True):
     """Per-shard body (inside shard_map): local MIPS + local rerank + merge.
 
     * latent scan: int8 codes x fp query with per-row scales (the
       kernels.mips_sq8 contraction) when scales are present;
-    * rerank: only the k' CANDIDATE doc codes are gathered and dequantized
-      before the exact MaxSim — scores stay exact w.r.t. the stored
+    * rerank: ``use_fused_gather=True`` routes the per-shard candidate
+      rerank through ``kernels.ops.fused_rerank`` — the SAME gather-at-
+      source kernel the single-device facade serves with (candidate token
+      slabs DMA'd straight into VMEM on TPU; per-token SQ8 scales folded
+      into the score rows in-kernel).  ``False`` keeps the legacy
+      gather-then-contract path benchmarkable.  Either way only the k'
+      CANDIDATE docs are touched and scores stay exact w.r.t. the stored
       (quantized) representation, matching Glass+SQ in the paper;
     * merge: hierarchical per-axis top-k (tree reduction) — gather volume
       k*|axis| per stage instead of k*n_devices at once.
@@ -105,13 +111,17 @@ def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
         pad = (idx * m_loc + jnp.arange(m_loc)) >= m_real
         s = jnp.where(pad[None, :], maxsim.NEG, s)
     _, cand = jax.lax.top_k(s, kp)                              # local candidates
-    if doc_scales is not None:
+    if use_fused_gather:
+        scores, local_ids = ops.fused_rerank(
+            q_tokens, q_mask, cand, doc_tokens, doc_mask, min(k, kp),
+            doc_scales=doc_scales)
+    elif doc_scales is not None:
         cd = jnp.take(doc_tokens, cand, axis=0).astype(q_tokens.dtype)
         cs = jnp.take(doc_scales, cand, axis=0)
         cm = jnp.take(doc_mask, cand, axis=0)
         # fold the per-token scale into the SCORE tensor: score(q, s*c) =
         # s*(q.c) — avoids materializing a dequantized (B,k',Td,d) fp copy
-        # (the Pallas maxsim kernel does the same dequant in-VMEM on TPU)
+        # (the fused kernel path does the same dequant in-VMEM on TPU)
         sc = jnp.einsum("bqd,bmtd->bmqt", q_tokens, cd,
                         preferred_element_type=jnp.float32)
         sc = sc * cs.astype(jnp.float32)[:, :, None, :]
@@ -144,7 +154,8 @@ def default_k_prime_local(cfg_k: int, cfg_k_prime: int, n_shards: int) -> int:
 
 def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
                     k_prime_local: int | None = None,
-                    m_real: int | None = None):
+                    m_real: int | None = None,
+                    use_fused_gather: bool | None = None):
     """Returns a jit-able serve_step(state, q_tokens, q_mask) -> (scores, ids).
 
     Queries are replicated over the corpus shards (the corpus uses every mesh
@@ -154,16 +165,21 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
     ``k_prime_local``: per-shard candidate budget; defaults to
     :func:`default_k_prime_local`'s 4x oversample of the global k'.
     ``m_real``: true corpus size when state rows carry padding (see
-    :func:`_local_retrieve`)."""
+    :func:`_local_retrieve`).
+    ``use_fused_gather``: per-shard rerank through the gather-at-source
+    kernel path (default: ``cfg.use_fused_gather``)."""
     axes = corpus_axes(mesh)
     axis_sizes = tuple(mesh.shape[a] for a in axes)
     n_shards = int(np.prod(axis_sizes))
     if k_prime_local is None:
         k_prime_local = default_k_prime_local(cfg.k, cfg.k_prime, n_shards)
+    if use_fused_gather is None:
+        use_fused_gather = bool(cfg.use_fused_gather)
     corpus_spec = P(axes)
     body = functools.partial(
         _local_retrieve, k=cfg.k, k_prime=k_prime_local, axes=axes,
         axis_sizes=axis_sizes, m_real=m_real,
+        use_fused_gather=bool(use_fused_gather),
     )
 
     def serve_step(state: ShardedRetrievalState, q_tokens, q_mask):

@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-maxsim    — token-level MaxSim (rerank + OLS target matrix; the paper's C++ loop)
-fused_psi — ψ(x) = LN(GELU(xW'+b)) fused single-pass encoder
-mips_sq8  — int8 scalar-quantized latent MIPS scan (Glass-style SQ)
+maxsim      — token-level MaxSim (rerank + OLS target matrix; the paper's C++ loop)
+fused_psi   — ψ(x) = LN(GELU(xW'+b)) fused single-pass encoder
+mips_sq8    — int8 scalar-quantized latent MIPS scan (Glass-style SQ)
+gather_scan — gather-at-source serving kernels: scalar-prefetch IVF probe
+              scan + fused candidate-gather MaxSim rerank (DMA the probed
+              cluster / candidate tiles straight into VMEM instead of
+              materializing the gathers in HBM)
 
 ``ops`` holds the jit'd wrappers with CPU-interpret dispatch; ``ref`` the
 pure-jnp oracles.
 """
-from repro.kernels import ops, ref
+from repro.kernels import gather_scan, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["gather_scan", "ops", "ref"]

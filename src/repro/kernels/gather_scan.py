@@ -1,0 +1,211 @@
+"""Pallas TPU gather-at-source serving kernels (scalar-prefetch DMA).
+
+LEMUR inference is two memory-bound gathers: the IVF probe scan pulls
+``nprobe`` cluster lists per query, the exact rerank pulls ``k'`` candidate
+documents per query.  The pure-XLA path materializes both gathers in HBM
+(``jnp.take`` copies a ``(B, nprobe, cap, d)`` / ``(B, k', Td, d)`` tensor)
+before any math runs — every gathered byte makes three HBM trips (read at
+the source, write to the copy, read by the scoring op) and the copies are
+duplicated per query row.
+
+These kernels move the gather INTO the grid instead: the probe / candidate
+ids are scalar-prefetched to SMEM (``pltpu.PrefetchScalarGridSpec``), and
+each grid step's BlockSpec ``index_map`` reads the prefetched id to DMA
+exactly one cluster (or candidate) tile HBM→VMEM, where the MXU contraction
+runs immediately.  Per query the HBM read volume is O(nprobe·cap·d) /
+O(k'·Td·d) source bytes streamed exactly once; nothing is materialized.
+Consecutive grid steps double-buffer their DMAs automatically (the Pallas
+grid pipeline), so the scan runs at HBM bandwidth.
+
+``ivf_probe_scan`` — grid ``(B, nprobe)``; step ``(b, p)`` DMAs cluster
+``probe[b, p]``'s ``(cap, d)`` list (fp32, or int8 codes dequantized
+in-kernel via the same hi/lo-bf16 split as ``mips_sq8``), scores it against
+query row ``b`` in one MXU matmul, masks ``-1`` pad slots to ``-inf`` and
+writes a compact ``(B, nprobe, cap)`` score strip (the top-k' runs on the
+strip outside, like the legacy path — bit-identical ids on fp32).
+
+VMEM per step (cap=4096, d=128): fp32 cluster tile 2 MiB (int8: 512 KiB +
+16 KiB scales), query row 512 B, score strip 16 KiB — ×2 for the pipeline's
+double buffer, comfortably inside ~16 MiB v5e VMEM.
+
+``rerank_gather_scores`` — grid ``(B, k')``; step ``(b, c)`` DMAs candidate
+``cand[b, c]``'s ``(Td, d)`` token slab (fp or int8 + per-token scales),
+computes the masked ``(Tq × Td)`` MXU contraction, token-max and
+query-masked sum entirely in VMEM, and writes the single MaxSim score.
+``-1`` candidates are clamped to doc 0 for the DMA and masked by the
+caller (``ops.fused_rerank``), matching ``core.maxsim.rerank``.
+
+VMEM per step (Tq=32, Td=32, d=128): query slab 16 KiB, doc slab 16 KiB
+(int8: 4 KiB + 128 B scales), score tile 4 KiB — the whole working set of
+one candidate fits in registers-adjacent VMEM; the ``(B, k', Td, d)`` HBM
+tensor of the legacy path never exists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# scalar-prefetch IVF probe scan
+# --------------------------------------------------------------------------
+
+def _ivf_scan_fp_kernel(probe_ref, q_ref, ids_ref, vecs_ref, out_ref):
+    # q: (1, d); ids: (1, cap); vecs: (1, cap, d) — ONE cluster, DMA'd by the
+    # index_map from the prefetched probe id; out: (1, 1, cap) score strip
+    q = q_ref[...]
+    _, cap, d = vecs_ref.shape
+    s = jax.lax.dot_general(
+        q, vecs_ref[...].reshape(cap, d), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, cap)
+    out_ref[...] = jnp.where(ids_ref[...] >= 0, s, -jnp.inf).reshape(1, 1, cap)
+
+
+def _ivf_scan_sq8_kernel(probe_ref, q_ref, ids_ref, codes_ref, scales_ref,
+                         out_ref):
+    # int8 cluster codes dequantized IN-KERNEL: hi/lo bf16 split of the fp32
+    # query (two MXU passes) x bf16-widened codes, per-slot scales folded
+    # into the score strip — matches kernels.mips_sq8 to ~2^-16 relative
+    q = q_ref[...]                                   # (1, d) fp32
+    _, cap, d = codes_ref.shape
+    c = codes_ref[...].reshape(cap, d).astype(jnp.bfloat16)
+    q_hi = q.astype(jnp.bfloat16)
+    q_lo = (q - q_hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    dot = lambda a: jax.lax.dot_general(
+        a, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = (dot(q_hi) + dot(q_lo)) * scales_ref[...]    # (1, cap)
+    out_ref[...] = jnp.where(ids_ref[...] >= 0, s, -jnp.inf).reshape(1, 1, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ivf_probe_scan(q, probe, ids, vecs, scales=None, *, interpret: bool = False):
+    """Scan the probed IVF cluster lists without gathering them to HBM.
+
+    q: (B, d) fp32; probe: (B, nprobe) int32 cluster ids; ids: (nlist, cap)
+    int32 (-1 padded); vecs: (nlist, cap, d) fp32 — or int8 codes with
+    scales: (nlist, cap) — returns (B, nprobe, cap) fp32 scores with pad
+    slots at ``-inf``.  Each grid step DMAs only cluster ``probe[b, p]``.
+    """
+    B, d = q.shape
+    nprobe = probe.shape[1]
+    nlist, cap = ids.shape
+    grid = (B, nprobe)
+    in_specs = [
+        pl.BlockSpec((1, d), lambda b, p, pr: (b, 0)),
+        pl.BlockSpec((1, cap), lambda b, p, pr: (pr[b, p], 0)),
+        pl.BlockSpec((1, cap, d), lambda b, p, pr: (pr[b, p], 0, 0)),
+    ]
+    args = [q, ids, vecs]
+    kernel = _ivf_scan_fp_kernel
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((1, cap), lambda b, p, pr: (pr[b, p], 0)))
+        args.append(scales)
+        kernel = _ivf_scan_sq8_kernel
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, cap), lambda b, p, pr: (b, p, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nprobe, cap), jnp.float32),
+        interpret=interpret,
+    )(probe.astype(jnp.int32), *args)
+
+
+# --------------------------------------------------------------------------
+# fused candidate-gather MaxSim rerank
+# --------------------------------------------------------------------------
+
+def _rerank_fp_kernel(cand_ref, q_ref, qm_ref, docs_ref, dm_ref, out_ref):
+    # q: (1, Tq, d); docs: (1, Td, d) — ONE candidate's token slab, DMA'd by
+    # the index_map from the prefetched (clamped) candidate id; the masks
+    # arrive pre-gathered per (b, c) (they are Td bytes against the slab's
+    # Td·d·4 — see rerank_gather_scores); out: (1, 1)
+    _, Tq, d = q_ref.shape
+    _, Td, _ = docs_ref.shape
+    s = jax.lax.dot_general(
+        q_ref[...].reshape(Tq, d), docs_ref[...].reshape(Td, d),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (Tq, Td)
+    s = jnp.where(dm_ref[...].reshape(1, Td) > 0, s, NEG)
+    best = jnp.max(s, axis=-1)                       # (Tq,)
+    best = jnp.where(qm_ref[...].reshape(Tq) > 0, best, 0.0)
+    out_ref[...] = jnp.sum(best).reshape(1, 1)
+
+
+def _rerank_sq8_kernel(cand_ref, q_ref, qm_ref, codes_ref, dm_ref, ds_ref,
+                       out_ref):
+    # per-token scales fold into the SCORE rows — score(q, s·c) = s·(q·c) —
+    # so the dequantized fp slab never materializes (same identity the
+    # sharded serve step used in jnp, now in VMEM)
+    _, Tq, d = q_ref.shape
+    _, Td, _ = codes_ref.shape
+    q = q_ref[...].reshape(Tq, d)
+    c = codes_ref[...].reshape(Td, d).astype(jnp.bfloat16)
+    q_hi = q.astype(jnp.bfloat16)
+    q_lo = (q - q_hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    dot = lambda a: jax.lax.dot_general(
+        a, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = (dot(q_hi) + dot(q_lo)) * ds_ref[...].reshape(1, Td)
+    s = jnp.where(dm_ref[...].reshape(1, Td) > 0, s, NEG)
+    best = jnp.max(s, axis=-1)
+    best = jnp.where(qm_ref[...].reshape(Tq) > 0, best, 0.0)
+    out_ref[...] = jnp.sum(best).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rerank_gather_scores(q, q_mask, cand_ids, doc_tokens, doc_mask,
+                         doc_scales=None, *, interpret: bool = False):
+    """Exact MaxSim of each query against ITS OWN candidate docs, gathering
+    each candidate's token slab at the source.
+
+    q: (B, Tq, d); cand_ids: (B, k') int32 (-1 padded — pads are clamped to
+    doc 0 here and must be masked by the caller); doc_tokens: (m, Td, d) fp
+    — or int8 codes with doc_scales: (m, Td) — returns (B, k') fp32 raw
+    pair scores.
+    """
+    B, Tq, d = q.shape
+    kp = cand_ids.shape[1]
+    m, Td, _ = doc_tokens.shape
+    safe = jnp.maximum(cand_ids, 0).astype(jnp.int32)
+    qm = q_mask.astype(jnp.int8)
+    # masks (and SQ8 scales) are gathered per candidate in XLA — B·k'·Td
+    # slots, tiny next to the (Td, d) token slabs the kernel streams, and it
+    # avoids converting/copying the corpus-sized (m, Td) mask every call
+    dm = jnp.take(doc_mask, safe, axis=0).astype(jnp.int8)   # (B, k', Td)
+    in_specs = [
+        pl.BlockSpec((1, Tq, d), lambda b, c, cr: (b, 0, 0)),
+        pl.BlockSpec((1, Tq), lambda b, c, cr: (b, 0)),
+        pl.BlockSpec((1, Td, d), lambda b, c, cr: (cr[b, c], 0, 0)),
+        pl.BlockSpec((1, 1, Td), lambda b, c, cr: (b, c, 0)),
+    ]
+    args = [q, qm, doc_tokens, dm]
+    kernel = _rerank_fp_kernel
+    if doc_scales is not None:
+        in_specs.append(pl.BlockSpec((1, 1, Td), lambda b, c, cr: (b, c, 0)))
+        args.append(jnp.take(doc_scales, safe, axis=0))
+        kernel = _rerank_sq8_kernel
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, kp),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, cr: (b, c)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kp), jnp.float32),
+        interpret=interpret,
+    )(safe, *args)

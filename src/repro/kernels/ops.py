@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_psi as _fp
+from repro.kernels import gather_scan as _gs
 from repro.kernels import maxsim as _mx
 from repro.kernels import mips_sq8 as _mq
 from repro.kernels import ref
@@ -65,3 +66,80 @@ def mips_sq8(q, codes, scales, *, use_kernel: bool | None = None,
         return ref.mips_sq8_ref(q, codes, scales)
     return _mq.mips_sq8(q, codes, scales, block_q=block_q, block_m=block_m,
                         interpret=not _on_tpu())
+
+
+def mips_sq8_batched(q, codes, scales, *, use_kernel: bool | None = None,
+                     block_q: int = 128, block_m: int = 1024):
+    """Per-query SQ8 scan: q (B, d) x codes (B, n, d) / scales (B, n) ->
+    (B, n), every query scoring its OWN gathered list.
+
+    The fallback is ONE batched contraction (``ref.mips_sq8_batched_ref``)
+    instead of B one-row ``mips_sq8`` calls (1/128 MXU tile utilization at
+    ``block_q=128``).  The kernel path flattens the per-query lists into a
+    single ``mips_sq8`` launch — the B query rows fill a whole MXU tile,
+    whose off-diagonal strips were dead weight in the one-row calls anyway
+    — and slices each query's own strip back out.  Prefer
+    :func:`fused_ivf_scan` on TPU: it skips the HBM gather entirely.
+    """
+    B, n, d = codes.shape
+    # the flattened launch materializes a (B, B*n) score matrix before the
+    # strip slice; past ~256 MB that HBM spike costs more than the tile-
+    # utilization win, so large shapes take the single-contraction fallback
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel or B * B * n * 4 > 256 * 2**20:
+        return ref.mips_sq8_batched_ref(q, codes, scales)
+    full = _mq.mips_sq8(q, codes.reshape(B * n, d), scales.reshape(B * n),
+                        block_q=block_q, block_m=block_m,
+                        interpret=not _on_tpu())            # (B, B*n)
+    strip = jnp.arange(B)[:, None] * n + jnp.arange(n)[None, :]
+    return jnp.take_along_axis(full, strip, axis=1)         # (B, n)
+
+
+def fused_ivf_scan(q, probe, ids, vecs, scales=None, *,
+                   use_kernel: bool | None = None):
+    """Gather-at-source IVF probe scan: score the probed cluster lists
+    without materializing the ``(B, nprobe, cap, d)`` gather in HBM.
+
+    q: (B, d); probe: (B, nprobe) int32; ids/vecs/scales are the IVF
+    index's padded cluster lists -> (B, nprobe, cap) fp32 scores, pad slots
+    ``-inf``.  TPU: the scalar-prefetch Pallas kernel
+    (:func:`repro.kernels.gather_scan.ivf_probe_scan`); otherwise the
+    gather-then-score oracle (identical math to the legacy path).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.ivf_scan_ref(q, probe, ids, vecs, scales)
+    return _gs.ivf_probe_scan(q, probe, ids, vecs, scales,
+                              interpret=not _on_tpu())
+
+
+def fused_rerank(q, q_mask, cand_ids, doc_tokens, doc_mask, k: int, *,
+                 doc_scales=None, use_kernel: bool | None = None):
+    """Fused candidate-gather exact MaxSim rerank -> (scores, ids), (B, k).
+
+    Drop-in for ``core.maxsim.rerank`` (same ``-1``-pad contract: pads
+    score ``NEG`` and can only surface, id ``-1``, when a row has fewer
+    than ``k`` real candidates; rows are padded out to ``k`` when
+    ``k > k'``).  ``doc_scales`` selects the SQ8 token store (per-token
+    scales folded into the score rows).  TPU: the scalar-prefetch Pallas
+    kernel; otherwise the gather-then-contract oracle.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        s = ref.rerank_scores_ref(q, q_mask, cand_ids, doc_tokens, doc_mask,
+                                  doc_scales)
+    else:
+        s = _gs.rerank_gather_scores(q, q_mask, cand_ids, doc_tokens,
+                                     doc_mask, doc_scales,
+                                     interpret=not _on_tpu())
+    s = jnp.where(cand_ids >= 0, s, ref.NEG)
+    kk = min(k, s.shape[1])
+    top, idx = jax.lax.top_k(s, kk)
+    out_ids = jnp.take_along_axis(cand_ids, idx, axis=1)
+    if kk < k:
+        top = jnp.pad(top, ((0, 0), (0, k - kk)), constant_values=ref.NEG)
+        out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return top, out_ids

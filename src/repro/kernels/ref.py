@@ -41,3 +41,56 @@ def mips_sq8_ref(q, codes, scales):
     """fp32 queries x int8 corpus with per-row scales.
     q: (B, d); codes: (m, d) int8; scales: (m,) -> (B, m) fp32."""
     return (q @ codes.astype(jnp.float32).T) * scales[None, :]
+
+
+def mips_sq8_batched_ref(q, codes, scales):
+    """Per-query SQ8 MIPS: every query scores its OWN code list, all B rows
+    in ONE contraction (the batched non-Pallas fallback for the IVF scan —
+    no per-row vmap, no B one-row kernel launches).
+    q: (B, d); codes: (B, n, d) int8; scales: (B, n) -> (B, n) fp32."""
+    s = jnp.einsum("bd,bnd->bn", q, codes.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return s * scales.astype(jnp.float32)
+
+
+def ivf_scan_ref(q, probe, ids, vecs, scales=None):
+    """Oracle for :func:`repro.kernels.gather_scan.ivf_probe_scan` — the
+    gather-then-score path (what the legacy ``search_ivf`` computes).
+    q: (B, d); probe: (B, nprobe); ids: (nlist, cap); vecs: (nlist, cap, d)
+    fp32 or int8 (with scales (nlist, cap)) -> (B, nprobe, cap) fp32,
+    pad slots at ``-inf``."""
+    gids = jnp.take(ids, probe, axis=0)                 # (B, P, cap)
+    gv = jnp.take(vecs, probe, axis=0)                  # (B, P, cap, d)
+    if scales is not None:
+        # same flattened contraction as mips_sq8_batched_ref (the legacy
+        # SQ8 fallback), so fused-ref == legacy bit for bit on CPU
+        B, P, cap, d = gv.shape
+        s = jnp.einsum("bd,bnd->bn", q,
+                       gv.reshape(B, P * cap, d).astype(jnp.float32),
+                       preferred_element_type=jnp.float32).reshape(B, P, cap)
+        s = s * jnp.take(scales, probe, axis=0).astype(jnp.float32)
+    else:
+        s = jnp.einsum("bd,bpcd->bpc", q, gv.astype(q.dtype),
+                       preferred_element_type=jnp.float32)
+    return jnp.where(gids >= 0, s, -jnp.inf)
+
+
+def rerank_scores_ref(q, q_mask, cand_ids, doc_tokens, doc_mask,
+                      doc_scales=None):
+    """Oracle for :func:`repro.kernels.gather_scan.rerank_gather_scores` —
+    gathers the ``(B, k', Td, d)`` candidate slab and contracts it (what
+    ``core.maxsim.rerank`` computes before its top-k).  ``-1`` candidates
+    score doc 0 here; the caller masks them.
+    q: (B, Tq, d); cand_ids: (B, k') -> (B, k') fp32 raw pair scores."""
+    safe = jnp.maximum(cand_ids, 0)
+    cd = jnp.take(doc_tokens, safe, axis=0)             # (B, k', Td, d)
+    cm = jnp.take(doc_mask, safe, axis=0)               # (B, k', Td)
+    s = jnp.einsum("bqd,bmtd->bmqt", q, cd.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    if doc_scales is not None:
+        cs = jnp.take(doc_scales, safe, axis=0)
+        s = s * cs.astype(jnp.float32)[:, :, None, :]
+    s = jnp.where(cm[:, :, None, :], s, NEG)
+    best = jnp.max(s, axis=-1)                          # (B, k', Tq)
+    best = jnp.where(q_mask[:, None, :], best, 0.0)
+    return jnp.sum(best, axis=-1)                       # (B, k')

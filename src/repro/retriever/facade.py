@@ -51,6 +51,7 @@ from repro.anns.bruteforce import mips_topk
 from repro.checkpoint import manager as ckpt
 from repro.core import indexer, maxsim
 from repro.core.config import LemurConfig
+from repro.kernels import ops
 from repro.core.index import LemurIndex
 from repro.core.model import TargetStats, pool_queries, train_phi
 from repro.retriever.params import SearchParams
@@ -77,9 +78,17 @@ def first_stage(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
 def search_pipeline(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
     """pool -> first-stage candidates -> exact MaxSim rerank -> top-k.
 
-    ``-1``-padded first-stage rows are masked inside ``maxsim.rerank`` —
-    pads can never surface as results."""
+    ``-1``-padded first-stage rows are masked inside the rerank — pads can
+    never surface as results.  ``params.use_fused_gather`` (the resolved
+    default) sends the rerank through the gather-at-source kernel path
+    (``kernels.ops.fused_rerank``: candidate token slabs are DMA'd straight
+    into VMEM on TPU instead of materializing the ``(B, k', Td, d)`` gather
+    in HBM); ``False`` keeps the legacy ``maxsim.rerank`` benchmarkable —
+    both return bit-identical ids on fp32."""
     cand = first_stage(index, q_tokens, q_mask, params)
+    if params.use_fused_gather:
+        return ops.fused_rerank(q_tokens, q_mask, cand,
+                                index.doc_tokens, index.doc_mask, params.k)
     return maxsim.rerank(q_tokens, q_mask, cand,
                          index.doc_tokens, index.doc_mask, params.k)
 

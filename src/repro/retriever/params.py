@@ -31,6 +31,13 @@ class SearchParams:
     k_prime: int | None = None                 # rerank budget (None => cfg.k_prime)
     use_ann: bool = True                       # False => exact latent scan (Fig. 3)
     backend: BackendSearchParams | None = None  # typed per-backend knobs
+    use_fused_gather: bool | None = None       # candidate-gather rerank via the
+                                               # gather-at-source kernel path
+                                               # (None => cfg.use_fused_gather);
+                                               # False keeps the legacy HBM
+                                               # gather benchmarkable.  The IVF
+                                               # probe-scan twin rides in
+                                               # IVFSearchParams.use_fused_gather.
 
     def resolve(self, cfg, backend_name: str) -> "SearchParams":
         """Fill every ``None`` from the build config: ``k``/``k_prime`` from
@@ -63,6 +70,9 @@ class SearchParams:
             k=int(self.k if self.k is not None else cfg.k),
             k_prime=int(self.k_prime if self.k_prime is not None else cfg.k_prime),
             backend=bp,
+            use_fused_gather=bool(
+                cfg.use_fused_gather if self.use_fused_gather is None
+                else self.use_fused_gather),
         )
 
 

@@ -148,14 +148,15 @@ class ShardedLemurRetriever:
         return self._compiled_fn(resolved)(self._state, q_tokens, q_mask)
 
     def _compiled_fn(self, resolved: SearchParams):
-        key = (resolved.k, resolved.k_prime)
+        key = (resolved.k, resolved.k_prime, resolved.use_fused_gather)
         fn = self._compiled.get(key)
         if fn is None:
             serve = dist.make_serve_step(
                 self._mesh,
                 self.cfg.replace(k=resolved.k, k_prime=resolved.k_prime),
                 k_prime_local=self._k_prime_local,
-                m_real=self._m_real)
+                m_real=self._m_real,
+                use_fused_gather=resolved.use_fused_gather)
             m_real = self._m_real
             counts = self._trace_counts
 
@@ -184,7 +185,8 @@ class ShardedLemurRetriever:
         if params is None:
             return sum(self._trace_counts.values())
         resolved = self.resolve(params)
-        return self._trace_counts.get((resolved.k, resolved.k_prime), 0)
+        return self._trace_counts.get(
+            (resolved.k, resolved.k_prime, resolved.use_fused_gather), 0)
 
     # -- growth -------------------------------------------------------------
 

@@ -92,6 +92,32 @@ def test_sharded_search_sq8_matches_single_device():
     assert "OK" in out
 
 
+def test_sharded_fused_gather_matches_legacy():
+    """The fused (gather-at-source) per-shard rerank — the default — and the
+    legacy gather-then-contract path return identical results on 8 devices,
+    for both the fp32 and SQ8 states; the toggle gets its own jit trace."""
+    out = _run(_BUILD + textwrap.dedent("""
+    r, q, qm = build()
+    fused = SearchParams(use_ann=False)                    # resolved default: fused
+    legacy = SearchParams(use_ann=False, use_fused_gather=False)
+    for sq8 in (False, True):
+        sr = r.shard(MESH8, sq8=sq8)
+        fs, fi = sr.search(q, qm, fused)
+        ls, li = sr.search(q, qm, legacy)
+        assert np.array_equal(np.asarray(fi), np.asarray(li)), sq8
+        assert np.array_equal(np.asarray(fs), np.asarray(ls)), sq8
+        assert sr.trace_count(fused) == 1 and sr.trace_count(legacy) == 1
+    # fp32 fused sharded == local facade, bit for bit
+    sr = r.shard(MESH8, sq8=False)
+    want_s, want_i = r.search(q, qm, fused)
+    got_s, got_i = sr.search(q, qm, fused)
+    assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_sharded_add_matches_facade():
     """Shard-balanced growth: after add(), sharded search still matches the
     (identically grown) facade bit for bit, and every shard holds the same

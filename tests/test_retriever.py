@@ -144,7 +144,10 @@ def test_search_params_hashable_and_resolved(retriever):
     r = retriever.with_backend("ivf")
     resolved = r.resolve(SearchParams())
     assert resolved.k == r.cfg.k and resolved.k_prime == r.cfg.k_prime
-    assert resolved.backend == IVFSearchParams(nprobe=r.cfg.ivf.nprobe)
+    assert resolved.backend == IVFSearchParams(
+        nprobe=r.cfg.ivf.nprobe,
+        use_fused_gather=r.cfg.ivf.use_fused_gather)
+    assert resolved.use_fused_gather == r.cfg.use_fused_gather
     # exact-scan params carry no backend knobs (cache key collapses)
     assert r.resolve(SearchParams(use_ann=False)).backend is None
 
@@ -156,7 +159,8 @@ def test_partial_backend_params_fill_from_config(retriever):
         anns="ivf", ivf=IVFBackendConfig(nprobe=48)))
     a = r.resolve(SearchParams(backend=IVFSearchParams()))
     b = r.resolve(SearchParams())
-    assert a.backend == IVFSearchParams(nprobe=48) and a == b
+    assert a.backend == IVFSearchParams(nprobe=48, use_fused_gather=True)
+    assert a == b
 
 
 def test_from_dict_folds_v0_flat_knobs():
