@@ -18,7 +18,7 @@ import argparse
 import sys
 import time
 
-BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels"]
+BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels", "serving_online"]
 
 
 def _resolve_backends(spec: str | None):
@@ -83,6 +83,10 @@ def main(argv=None) -> None:
         from benchmarks import kernels_bench
 
         kernels_bench.run(emit_json=args.emit_json)
+    if any(w.startswith("serving") for w in which):
+        from benchmarks import serving_online
+
+        serving_online.run(emit_json=args.emit_json)
     print(f"# total bench time: {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -1,0 +1,204 @@
+"""Online-serving benchmark: Poisson arrival replay through RetrieverServer.
+
+Replays a seeded Poisson trace of ragged single queries against the online
+runtime (``repro.serving``) in front of a LEMUR retriever, then EXTENDS the
+repo-root ``BENCH_serving.json`` perf trail with latency-percentile rows —
+the offline fused-vs-legacy rows written by ``table2_qps.serving_perf`` are
+preserved; this bench owns the ``"online"`` section:
+
+    {"meta": {...}, "rows": [...],            # offline (table2_qps)
+     "online": {"meta": {...}, "rows": [      # this bench
+        {"op": "online_serving", "p50_ms": ..., "p95_ms": ..., "p99_ms": ...,
+         "qps": ..., "offered_qps": ..., "mean_occupancy": ...,
+         "trace_count": ..., "compile_bound": ..., "parity": true}, ...]}}
+
+Every run asserts the serving contract (SystemExit on violation, so the CI
+bench-smoke job fails):
+
+* **parity** — a sample of replayed requests is re-answered by a direct
+  ``retriever.search`` of the raw ragged query; top-k ids must be
+  bit-identical.
+* **p99 finite** — percentiles must be real numbers (a deadlocked or
+  request-dropping micro-batcher would poison them).
+* **compile bound** — ``trace_count()`` never exceeds the bucket ladder's
+  bound, no matter the trace's shape churn.
+
+  PYTHONPATH=src python -m benchmarks.serving_online                # default
+  PYTHONPATH=src python -m benchmarks.serving_online --m 600 --duration 10 \\
+      --rate 50 --epochs 4                                          # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+import numpy as np
+
+from benchmarks import common
+
+LADDER = (8, 16, 32)
+
+
+def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
+        duration: float = 10.0, max_batch: int = 8, max_wait_us: int = 2000,
+        backend: str = "ivf", epochs: int = 10, seed: int = 0,
+        add_docs: int = 32, parity_sample: int = 16,
+        emit_json: bool = True) -> dict:
+    import jax
+
+    from repro.core import LemurConfig
+    from repro.data import synthetic
+    from repro.retriever import IVFBackendConfig, LemurRetriever
+    from repro.serving import (
+        BucketLadder,
+        RetrieverServer,
+        poisson_trace,
+        ragged_queries,
+        replay,
+        warm_buckets,
+    )
+
+    corpus = synthetic.make_corpus(m=m, d=d, avg_tokens=12, max_tokens=16,
+                                   seed=seed)
+    cfg = LemurConfig(d=d, d_prime=64, m_pretrain=min(256, m),
+                      n_train=4096, n_ols=1024, epochs=epochs, k=10,
+                      k_prime=min(128, m), anns=backend,
+                      ivf=IVFBackendConfig(nprobe=16))
+    retriever = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(seed))
+    ladder = BucketLadder(LADDER, max_batch=max_batch)
+    queries = ragged_queries(256, d, tq_range=(2, 24), seed=seed + 1)
+    arrivals = poisson_trace(rate, duration, seed=seed + 2)
+
+    rows = []
+    with RetrieverServer(retriever, ladder=ladder,
+                         max_wait_us=max_wait_us) as srv:
+        warmed = warm_buckets(retriever, ladder, d)
+        results, report = replay(srv, queries, arrivals)
+
+        # parity: a request sample re-answered by direct facade search
+        rng = np.random.default_rng(seed + 3)
+        sample = rng.choice(len(results), min(parity_sample, len(results)),
+                            replace=False)
+        parity = True
+        for i in sample:
+            q = queries[i % len(queries)]
+            _, want = retriever.search(q[None], np.ones((1, len(q)), bool))
+            parity &= bool(np.array_equal(results[i][1], np.asarray(want)[0]))
+
+        bound = ladder.compile_bound(1)
+        rows.append({
+            "op": "online_serving",
+            "shape": (f"m={m},backend={backend},rate={rate:g},"
+                      f"ladder={'/'.join(map(str, LADDER))},"
+                      f"max_batch={ladder.max_batch},"
+                      f"max_wait_us={max_wait_us}"),
+            **{k: report[k] for k in ("p50_ms", "p95_ms", "p99_ms", "mean_ms",
+                                      "qps", "offered_qps", "mean_occupancy",
+                                      "n_requests", "n_batches")},
+            "trace_count": report["trace_count"],
+            "compile_bound": bound,
+            "warmed_shapes": warmed,
+            "parity": parity,
+        })
+        common.emit("serving_online_p99", rows[-1]["p99_ms"] * 1e3,
+                    f"p50={rows[-1]['p50_ms']:.2f}ms,"
+                    f"qps={rows[-1]['qps']:.0f},"
+                    f"occ={rows[-1]['mean_occupancy']:.2f}")
+
+        # add-while-serving: stream growth mid-replay, re-check parity on a
+        # post-add query targeting a brand-new doc
+        if add_docs:
+            extra = synthetic.make_corpus(m=add_docs, d=d, avg_tokens=12,
+                                          max_tokens=16, seed=seed + 7)
+            tail = poisson_trace(rate, min(duration, 2.0), seed=seed + 8)
+            add_fut = srv.add(extra.doc_tokens, extra.doc_mask)
+            _, report2 = replay(srv, queries, tail)
+            new_m = add_fut.result(timeout=300)
+            # post-add visibility check under the exact latent scan (full
+            # candidate coverage), so a query carrying a new doc's exact
+            # tokens MUST retrieve it top-1 — ANN recall on out-of-
+            # distribution adds is a quality question, not a correctness one
+            from repro.retriever import SearchParams
+
+            exact = SearchParams(use_ann=False, k_prime=new_m)
+            target = extra.doc_tokens[0][extra.doc_mask[0]]
+            _, ids = srv.search(np.asarray(target), params=exact, timeout=300)
+            _, want = retriever.search(target[None],
+                                       np.ones((1, len(target)), bool), exact)
+            add_parity = (bool(np.array_equal(ids, np.asarray(want)[0]))
+                          and new_m == m + add_docs
+                          and int(ids[0]) == m)
+            rows.append({
+                "op": "online_serving_add",
+                "shape": f"m={m}+{add_docs},backend={backend},rate={rate:g}",
+                **{k: report2[k] for k in ("p50_ms", "p95_ms", "p99_ms",
+                                           "qps", "mean_occupancy",
+                                           "n_requests")},
+                "trace_count": srv.trace_count(),
+                # two param sets post-add: the replay's defaults + the
+                # exact-scan visibility probe
+                "compile_bound": ladder.compile_bound(2),
+                "parity": add_parity,
+            })
+            common.emit("serving_online_add_p99", rows[-1]["p99_ms"] * 1e3,
+                        f"parity={add_parity}")
+
+    out = {
+        "meta": {"backend_platform": __import__("jax").default_backend(),
+                 "m": m, "d": d, "rate_qps": rate, "duration_s": duration,
+                 "ladder": list(LADDER), "max_batch": ladder.max_batch,
+                 "max_wait_us": max_wait_us, "first_stage": backend,
+                 "note": "open-loop Poisson replay of ragged single queries "
+                         "through repro.serving.RetrieverServer; percentile "
+                         "rows are the online latency contract future PRs "
+                         "are compared against"},
+        "rows": rows,
+    }
+    if emit_json:
+        _extend_bench_serving(out)
+
+    bad = [r["op"] for r in rows if not r["parity"]]
+    if bad:
+        raise SystemExit(f"online serving parity regression in: {bad}")
+    for r in rows:
+        if not math.isfinite(r["p99_ms"]):
+            raise SystemExit(f"non-finite p99 in {r['op']}: {r['p99_ms']}")
+        if r["trace_count"] > r["compile_bound"]:
+            raise SystemExit(
+                f"{r['op']}: trace_count {r['trace_count']} exceeded the "
+                f"bucket-ladder compile bound {r['compile_bound']}")
+    return out
+
+
+def _extend_bench_serving(online: dict) -> None:
+    """Merge the online section into the repo-root BENCH_serving.json,
+    preserving the offline fused-vs-legacy rows written by table2_qps."""
+    path = common.REPO_ROOT / "BENCH_serving.json"
+    merged = json.loads(path.read_text()) if path.exists() else {}
+    merged["online"] = online
+    common.save_bench_root("serving", merged)
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--m", type=int, default=2000)
+    p.add_argument("--d", type=int, default=32)
+    p.add_argument("--rate", type=float, default=100.0,
+                   help="offered load, queries/second (Poisson)")
+    p.add_argument("--duration", type=float, default=10.0)
+    p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--max-wait-us", type=int, default=2000)
+    p.add_argument("--backend", default="ivf")
+    p.add_argument("--epochs", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--add-docs", type=int, default=32,
+                   help="docs streamed in mid-replay (0 disables)")
+    p.add_argument("--no-emit-json", action="store_true",
+                   help="skip extending the repo-root BENCH_serving.json")
+    a = p.parse_args()
+    out = run(a.m, d=a.d, rate=a.rate, duration=a.duration,
+              max_batch=a.max_batch, max_wait_us=a.max_wait_us,
+              backend=a.backend, epochs=a.epochs, seed=a.seed,
+              add_docs=a.add_docs, emit_json=not a.no_emit_json)
+    print(json.dumps(out["rows"], indent=1))

@@ -20,6 +20,16 @@ single-device numbers.  On a CPU host the requested XLA host-device count
 is forced automatically:
 
   PYTHONPATH=src python -m repro.launch.serve --m 8000 --mesh 1x8
+
+``--online`` switches from offline fixed-shape batches to the online
+runtime (``repro.serving``): ragged single queries replayed from a seeded
+Poisson trace through ``RetrieverServer`` (shape-bucketed micro-batching,
+``--online-rate`` offered QPS for ``--online-duration`` seconds), reporting
+p50/p95/p99 latency, achieved QPS, micro-batch occupancy, and the
+compiled-fn count against the bucket-ladder bound:
+
+  PYTHONPATH=src python -m repro.launch.serve --m 8000 --online \\
+      --online-rate 200 --online-duration 10
 """
 from __future__ import annotations
 
@@ -90,6 +100,39 @@ def serve_sharded(retriever, mesh_spec, batches, args):
             "jit_traces": traces}
 
 
+def serve_online(retriever, args):
+    """Online operating point: Poisson replay of ragged single queries
+    through the micro-batching server; prints the latency/occupancy row."""
+    from repro.serving import (
+        BucketLadder,
+        RetrieverServer,
+        poisson_trace,
+        ragged_queries,
+        replay,
+        warm_buckets,
+    )
+
+    ladder = BucketLadder(tuple(int(t) for t in args.online_ladder.split(",")),
+                          max_batch=args.online_max_batch)
+    queries = ragged_queries(256, retriever.cfg.d,
+                             tq_range=(2, ladder.tq_ladder[-1]), seed=17)
+    arrivals = poisson_trace(args.online_rate, args.online_duration, seed=18)
+    offline_traces = retriever.trace_count()   # the offline phase's shapes
+    with RetrieverServer(retriever, ladder=ladder,
+                         max_wait_us=args.online_max_wait_us) as srv:
+        warm_buckets(retriever, ladder, retriever.cfg.d)
+        _, report = replay(srv, queries, arrivals)
+    bound = ladder.compile_bound(1)
+    online_traces = report["trace_count"] - offline_traces
+    print(f"[serve] online rate={args.online_rate:g}qps "
+          f"p50={report['p50_ms']:.2f}ms p95={report['p95_ms']:.2f}ms "
+          f"p99={report['p99_ms']:.2f}ms achieved={report['qps']:.0f}qps "
+          f"occupancy={report['mean_occupancy']:.2f} "
+          f"jit_traces={online_traces}/{bound}")
+    assert online_traces <= bound, "bucket-ladder compile bound blown"
+    return report
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--m", type=int, default=8000)
@@ -106,6 +149,17 @@ def main(argv=None):
     p.add_argument("--mesh", default=None,
                    help="also serve sharded over this mesh, e.g. '1x8' "
                         "(host devices are forced on CPU)")
+    p.add_argument("--online", action="store_true",
+                   help="also serve a Poisson replay of ragged single "
+                        "queries through the online micro-batching runtime")
+    p.add_argument("--online-rate", type=float, default=100.0,
+                   help="offered load for --online, queries/second")
+    p.add_argument("--online-duration", type=float, default=8.0,
+                   help="Poisson replay length for --online, seconds")
+    p.add_argument("--online-ladder", default="8,16,32",
+                   help="comma Tq bucket ladder for --online")
+    p.add_argument("--online-max-batch", type=int, default=8)
+    p.add_argument("--online-max-wait-us", type=int, default=2000)
     args = p.parse_args(argv)
 
     if args.mesh:
@@ -157,6 +211,9 @@ def main(argv=None):
 
     if args.mesh:
         serve_sharded(retriever, args.mesh, batches, args)
+
+    if args.online:
+        serve_online(retriever, args)
 
 
 if __name__ == "__main__":

@@ -111,7 +111,9 @@ class LemurRetriever:
             solver_state["x_ols"] if solver_state else None)
         self._compiled: dict[tuple, Any] = {}
         self._trace_counts: dict[tuple, int] = {}
+        self._trace_shapes: dict[tuple, int] = {}
         self._resolve_memo: dict[SearchParams | None, SearchParams] = {}
+        self._version = 0
 
     # -- introspection ------------------------------------------------------
 
@@ -130,6 +132,20 @@ class LemurRetriever:
     @property
     def m(self) -> int:
         return self._index.m
+
+    @property
+    def version(self) -> int:
+        """Snapshot version: bumped by every :meth:`add`.  Serving layers
+        (``repro.serving``) use it to tell which corpus snapshot answered a
+        request."""
+        return self._version
+
+    def snapshot(self) -> LemurIndex:
+        """The current immutable index snapshot.  ``add()`` swaps the whole
+        ``LemurIndex`` atomically (it is a NamedTuple — existing references
+        keep serving the old corpus), which is what makes add-while-serving
+        safe for readers holding a snapshot."""
+        return self._index
 
     def __repr__(self) -> str:
         return (f"LemurRetriever(m={self.m}, d_prime={self.cfg.d_prime}, "
@@ -232,6 +248,8 @@ class LemurRetriever:
         )
         self._compiled.clear()
         self._trace_counts.clear()
+        self._trace_shapes.clear()
+        self._version += 1
         return self
 
     def shard(self, mesh, *, sq8: bool | None = None,
@@ -306,9 +324,15 @@ class LemurRetriever:
         if fn is None:
             idx = self._index
             counts = self._trace_counts
+            shapes = self._trace_shapes
 
             def run(q, qm):
-                counts[key] = counts.get(key, 0) + 1  # trace-time only
+                # trace-time only: bucket-aware compile accounting — each
+                # (backend, params, q-shape) cache entry is observable, so
+                # serving layers can assert their shape-ladder compile bound
+                counts[key] = counts.get(key, 0) + 1
+                skey = key + (tuple(q.shape),)
+                shapes[skey] = shapes.get(skey, 0) + 1
                 return search_pipeline(idx, q, qm, resolved)
 
             fn = self._compiled[key] = jax.jit(run)
@@ -320,6 +344,16 @@ class LemurRetriever:
         if params is None:
             return sum(self._trace_counts.values())
         return self._trace_counts.get((self.backend, self.resolve(params)), 0)
+
+    def trace_shapes(self) -> dict[tuple, int]:
+        """Per-shape compile accounting: ``{(batch, Tq[, d]): n_traces}``
+        aggregated over params.  The online server's shape-bucket ladder
+        bounds ``len(trace_shapes())`` per resolved params no matter how
+        request shapes churn — asserted in tests/test_serving_runtime.py."""
+        out: dict[tuple, int] = {}
+        for (*_, shape), n in self._trace_shapes.items():
+            out[shape] = out.get(shape, 0) + n
+        return out
 
     # -- persistence --------------------------------------------------------
 

@@ -65,6 +65,7 @@ class ShardedLemurRetriever:
         self._k_prime_local = k_prime_local
         self._compiled: dict[tuple, Any] = {}
         self._trace_counts: dict[tuple, int] = {}
+        self._trace_shapes: dict[tuple, int] = {}
         self._state: dist.ShardedRetrievalState | None = None
         self._m_real = 0
         self._rebuild_state()
@@ -90,6 +91,11 @@ class ShardedLemurRetriever:
     @property
     def sq8(self) -> bool:
         return self._sq8
+
+    @property
+    def version(self) -> int:
+        """Snapshot version of the underlying facade (bumped per add)."""
+        return self._base.version
 
     @property
     def state(self) -> dist.ShardedRetrievalState:
@@ -159,9 +165,12 @@ class ShardedLemurRetriever:
                 use_fused_gather=resolved.use_fused_gather)
             m_real = self._m_real
             counts = self._trace_counts
+            shapes = self._trace_shapes
 
             def run(state, q, qm):
                 counts[key] = counts.get(key, 0) + 1  # trace-time only
+                skey = key + (tuple(q.shape),)
+                shapes[skey] = shapes.get(skey, 0) + 1
                 scores, ids = serve(state, q, qm)
                 valid = ids < m_real  # pads arrive id >= m_real, score NEG-ish
                 scores = jnp.where(valid, scores, maxsim.NEG)
@@ -188,6 +197,14 @@ class ShardedLemurRetriever:
         return self._trace_counts.get(
             (resolved.k, resolved.k_prime, resolved.use_fused_gather), 0)
 
+    def trace_shapes(self) -> dict[tuple, int]:
+        """Per-shape compile accounting (same contract as the single-device
+        facade): ``{q.shape: n_traces}`` aggregated over params."""
+        out: dict[tuple, int] = {}
+        for (*_, shape), n in self._trace_shapes.items():
+            out[shape] = out.get(shape, 0) + n
+        return out
+
     # -- growth -------------------------------------------------------------
 
     def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> "ShardedLemurRetriever":
@@ -200,6 +217,7 @@ class ShardedLemurRetriever:
         self._rebuild_state()
         self._compiled.clear()
         self._trace_counts.clear()
+        self._trace_shapes.clear()
         return self
 
     # -- persistence --------------------------------------------------------

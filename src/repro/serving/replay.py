@@ -1,0 +1,81 @@
+"""Poisson arrival-trace replay against a :class:`RetrieverServer`.
+
+The online operating point depends on the arrival process, not just the
+kernel: latency percentiles trade against micro-batch occupancy as load
+rises.  This module owns the replay loop shared by ``launch/serve.py
+--online``, ``benchmarks/serving_online.py``, and the example demo:
+generate a seeded Poisson trace, pace ragged submissions against the wall
+clock, then fold the server's stats into one JSON-able report.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def poisson_trace(rate_qps: float, duration_s: float, seed: int = 0):
+    """Arrival offsets (seconds from t0) of a Poisson process at
+    ``rate_qps`` over ``duration_s`` — the standard open-loop serving
+    workload (exponential inter-arrivals, seeded for reproducibility)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate_qps, 1e-9),
+                           size=max(int(rate_qps * duration_s * 2), 16))
+    at = np.cumsum(gaps)
+    return at[at < duration_s]
+
+
+def ragged_queries(n: int, d: int, tq_range=(2, 24), seed: int = 0):
+    """``n`` unit-norm ragged queries with Tq uniform over ``tq_range``."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        tq = int(rng.integers(tq_range[0], tq_range[1] + 1))
+        q = rng.standard_normal((tq, d)).astype(np.float32)
+        out.append(q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True),
+                                  1e-9))
+    return out
+
+
+def warm_buckets(retriever, ladder, d: int, params=None,
+                 batch_sizes=None) -> int:
+    """Pre-compile the bucketed serving shapes so the replay measures
+    steady-state latency, not XLA compiles.  Returns the number of shapes
+    warmed (== the compile bound actually paid)."""
+    resolved = retriever.resolve(params)
+    n = 0
+    for tq in ladder.tq_ladder:
+        for b in (batch_sizes or ladder.batch_sizes()):
+            q = np.zeros((b, tq, d), np.float32)
+            qm = np.zeros((b, tq), bool)
+            qm[:, 0] = True
+            retriever.search(q, qm, resolved)
+            n += 1
+    return n
+
+
+def replay(server, queries, arrivals, params=None, *, timeout: float = 300.0):
+    """Open-loop replay: submit ``queries[i]`` at wall-clock offset
+    ``arrivals[i]`` (cycling the query list if the trace is longer), wait
+    for every future, and return ``(results, report)`` where ``report`` is
+    ``server.stats.summary()`` extended with the offered load.  The stats
+    window is reset at replay start, so the report covers exactly this
+    trace (earlier phases don't bleed into the percentiles)."""
+    server.reset_stats()
+    t0 = time.perf_counter()
+    futs = []
+    for i, at in enumerate(arrivals):
+        delay = at - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        futs.append(server.submit(queries[i % len(queries)], params=params))
+    results = [f.result(timeout=timeout) for f in futs]
+    report = server.stats.summary()
+    report["offered_qps"] = (len(arrivals) / float(arrivals[-1])
+                             if len(arrivals) and arrivals[-1] > 0
+                             else float("nan"))
+    report["trace_count"] = server.trace_count()
+    return results, report
+
+
+__all__ = ["poisson_trace", "ragged_queries", "replay", "warm_buckets"]

@@ -1,0 +1,387 @@
+"""RetrieverServer: the online serving runtime in front of the facade.
+
+Offline serving (``examples/serve_batched.py``, ``benchmarks/table2_qps``)
+feeds fixed-shape query slabs to ``LemurRetriever.search``.  Real traffic
+is ragged single queries arriving asynchronously — this module turns the
+facade (or its sharded twin) into an online service:
+
+* **Dynamic micro-batching.**  ``submit()`` enqueues a request and returns
+  a future; a single worker thread coalesces in-flight requests that share
+  a (Tq bucket, resolved ``SearchParams``) group into one micro-batch, up
+  to ``max_batch`` requests or ``max_wait_us`` of head-of-line waiting,
+  whichever comes first.
+* **Shape bucketing.**  Requests are padded per :class:`~repro.serving.
+  buckets.BucketLadder` so the compiled-fn cache stays bounded by
+  ``ladder.compile_bound()`` regardless of traffic shape churn (padded
+  token rows are exact no-ops; padded batch rows are sliced away).
+  Returned top-k ids are bit-identical to a direct ``retriever.search()``
+  of the raw ragged query; scores match to float-reduction tolerance.
+* **Streaming add.**  ``add()`` enqueues a growth op that acts as a queue
+  barrier: searches submitted before it complete against the old snapshot,
+  the worker then applies ``retriever.add`` atomically between
+  micro-batches (the worker is the only thread touching the retriever),
+  and every later search sees the grown corpus.
+* **Observability.**  :class:`ServerStats` tracks per-request latency
+  percentiles (p50/p95/p99), QPS over the serving window, micro-batch
+  occupancy and bucket histograms; ``trace_count()``/``trace_shapes()``
+  pass through to the underlying retriever.
+
+The server works over any object with the facade serving surface
+(``search``/``add``/``resolve``/``trace_count``) — both ``LemurRetriever``
+and ``ShardedLemurRetriever``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serving.buckets import BucketLadder
+
+
+# --------------------------------------------------------------------------
+# stats
+# --------------------------------------------------------------------------
+
+class ServerStats:
+    """Per-request latency + micro-batch shape accounting (thread-safe).
+
+    Latencies are kept in a bounded sliding window (``window`` most recent
+    requests) so a long-lived server never grows without bound; counters
+    (requests, batches, occupancy/bucket histograms) are exact totals."""
+
+    def __init__(self, window: int = 100_000):
+        self._lock = threading.Lock()
+        self._latencies: collections.deque[float] = collections.deque(
+            maxlen=window)
+        self._occupancy = collections.Counter()   # n_real per micro-batch
+        self._buckets = collections.Counter()     # (batch_bucket, tq_bucket)
+        self._n_requests = 0
+        self._n_batches = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    def record_batch(self, latencies_s, n_real: int, batch_bucket: int,
+                     tq_bucket: int, t_done: float) -> None:
+        with self._lock:
+            self._latencies.extend(latencies_s)
+            self._n_requests += len(latencies_s)
+            self._occupancy[n_real] += 1
+            self._buckets[(batch_bucket, tq_bucket)] += 1
+            self._n_batches += 1
+            if self._t_first is None:
+                self._t_first = t_done
+            self._t_last = t_done
+
+    @property
+    def n_requests(self) -> int:
+        with self._lock:
+            return self._n_requests
+
+    @property
+    def n_batches(self) -> int:
+        with self._lock:
+            return self._n_batches
+
+    def percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        """Latency percentiles in milliseconds, ``{"p50": …, …}``."""
+        with self._lock:
+            lat = np.fromiter(self._latencies, np.float64)
+        if lat.size == 0:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(lat, q) * 1e3) for q in qs}
+
+    def summary(self) -> dict:
+        """One JSON-able dict: percentiles, QPS over the serving window,
+        occupancy/bucket histograms."""
+        pct = self.percentiles()
+        with self._lock:
+            n = self._n_requests
+            span = ((self._t_last - self._t_first)
+                    if (self._t_first is not None and self._n_batches > 1)
+                    else 0.0)
+            occ = dict(sorted(self._occupancy.items()))
+            buckets = {f"{b}x{t}": c
+                       for (b, t), c in sorted(self._buckets.items())}
+            n_batches = self._n_batches
+            mean_ms = (float(np.mean(np.fromiter(self._latencies,
+                                                 np.float64)) * 1e3)
+                       if self._latencies else float("nan"))
+        return {
+            "n_requests": n,
+            "n_batches": n_batches,
+            "mean_ms": mean_ms,
+            **{f"{k}_ms": v for k, v in pct.items()},
+            "qps": n / span if span > 0 else float("nan"),
+            "mean_occupancy": n / max(n_batches, 1),
+            "occupancy_hist": occ,
+            "bucket_hist": buckets,
+        }
+
+
+# --------------------------------------------------------------------------
+# queue ops
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Search:
+    rid: int
+    q: np.ndarray            # (Tq, d) fp32
+    qm: np.ndarray           # (Tq,) bool
+    params: object           # resolved SearchParams (hashable group key)
+    future: Future
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _Add:
+    doc_tokens: np.ndarray
+    doc_mask: np.ndarray
+    seed: int
+    future: Future
+
+
+# --------------------------------------------------------------------------
+# the server
+# --------------------------------------------------------------------------
+
+class RetrieverServer:
+    """Online micro-batching server over a retriever (see module docstring).
+
+    Use as a context manager, or ``start()``/``stop()`` explicitly::
+
+        with RetrieverServer(r, ladder=BucketLadder((32, 64), 8)) as srv:
+            fut = srv.submit(q_tokens)            # (Tq, d) ragged
+            scores, ids = fut.result(timeout=30)
+            srv.add(new_tokens, new_mask).result(timeout=60)
+    """
+
+    def __init__(self, retriever, *, ladder: BucketLadder | None = None,
+                 max_wait_us: int = 2000, default_params=None):
+        self._retriever = retriever
+        self._ladder = ladder or BucketLadder()
+        self._max_wait_s = max_wait_us / 1e6
+        self._default_params = default_params
+        self._queue: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._stats = ServerStats()
+        self._rid = 0
+        self._stopping = False
+        self._drain = True
+        self._worker: threading.Thread | None = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "RetrieverServer":
+        if self._worker is not None:
+            raise RuntimeError("server already started")
+        self._stopping = False
+        self._worker = threading.Thread(target=self._serve_loop,
+                                        name="lemur-retriever-server",
+                                        daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float | None = None) -> bool:
+        """Stop the worker.  ``drain=True`` (default) serves every queued
+        request first; ``drain=False`` cancels pending requests.  Returns
+        ``True`` once the worker has exited; ``False`` if ``timeout``
+        expired with the worker still draining — the server stays stopped
+        (submits raise) and ``start()`` keeps refusing until a later
+        ``stop()`` observes the exit, so a second worker can never race
+        the first on the queue."""
+        with self._cond:
+            self._stopping = True
+            self._drain = drain
+            self._cond.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout)
+            if self._worker.is_alive():
+                return False
+            self._worker = None
+        return True
+
+    def __enter__(self) -> "RetrieverServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc == (None, None, None))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def retriever(self):
+        return self._retriever
+
+    @property
+    def ladder(self) -> BucketLadder:
+        return self._ladder
+
+    @property
+    def stats(self) -> ServerStats:
+        return self._stats
+
+    def reset_stats(self) -> ServerStats:
+        """Swap in a fresh :class:`ServerStats` window (e.g. between replay
+        phases) and return the old one.  Trace counts are NOT reset — they
+        belong to the retriever's compile cache, not the serving window."""
+        old, self._stats = self._stats, ServerStats()
+        return old
+
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def trace_count(self, params=None) -> int:
+        return self._retriever.trace_count(params)
+
+    def trace_shapes(self):
+        return self._retriever.trace_shapes()
+
+    def compile_bound(self, n_param_sets: int = 1) -> int:
+        return self._ladder.compile_bound(n_param_sets)
+
+    # -- client surface -----------------------------------------------------
+
+    def submit(self, q_tokens, q_mask=None, params=None) -> Future:
+        """Enqueue one ragged query — ``q_tokens: (Tq, d)`` (a leading
+        singleton batch axis is accepted and squeezed).  Returns a future
+        resolving to ``(scores (k,), ids (k,))`` with ``future.request_id``
+        set; FIFO submission order is preserved relative to ``add()``."""
+        q = np.asarray(q_tokens, np.float32)
+        if q.ndim == 3 and q.shape[0] == 1:
+            q = q[0]
+            if q_mask is not None:
+                q_mask = np.asarray(q_mask)[0]
+        if q.ndim != 2:
+            raise ValueError(f"submit takes one (Tq, d) query, got {q.shape}")
+        qm = (np.ones(q.shape[0], bool) if q_mask is None
+              else np.asarray(q_mask, bool))
+        if qm.shape != (q.shape[0],):
+            raise ValueError(f"mask {qm.shape} does not match query {q.shape}")
+        resolved = self._retriever.resolve(
+            params if params is not None else self._default_params)
+        fut: Future = Future()
+        with self._cond:
+            if self._stopping:
+                raise RuntimeError("server is stopped")
+            self._rid += 1
+            fut.request_id = self._rid
+            self._queue.append(_Search(self._rid, q, qm, resolved, fut,
+                                       time.perf_counter()))
+            self._cond.notify_all()
+        return fut
+
+    def search(self, q_tokens, q_mask=None, params=None,
+               timeout: float | None = 60.0):
+        """Blocking convenience wrapper: ``submit(...).result(timeout)``."""
+        return self.submit(q_tokens, q_mask, params).result(timeout)
+
+    def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> Future:
+        """Enqueue streaming growth.  Acts as a FIFO barrier: earlier
+        searches run against the old snapshot, the swap happens atomically
+        between micro-batches, later searches see the new docs.  The future
+        resolves to the grown corpus size ``m``."""
+        fut: Future = Future()
+        op = _Add(np.asarray(doc_tokens), np.asarray(doc_mask), seed, fut)
+        with self._cond:
+            if self._stopping:
+                raise RuntimeError("server is stopped")
+            self._queue.append(op)
+            self._cond.notify_all()
+        return fut
+
+    # -- worker -------------------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        while True:
+            batch: list[_Search] = []
+            add_op: _Add | None = None
+            with self._cond:
+                while not self._queue and not self._stopping:
+                    self._cond.wait()
+                if not self._queue and self._stopping:
+                    return
+                if self._stopping and not self._drain:
+                    for op in self._queue:
+                        op.future.cancel()
+                    self._queue.clear()
+                    return
+                head = self._queue[0]
+                if isinstance(head, _Add):
+                    add_op = self._queue.popleft()
+                else:
+                    batch = self._collect_batch(head)
+            if add_op is not None:
+                self._apply_add(add_op)
+            elif batch:
+                self._run_batch(batch)
+
+    def _collect_batch(self, head: _Search) -> list[_Search]:
+        """Coalesce queue entries sharing head's (Tq bucket, params) group,
+        up to ``max_batch`` / ``max_wait_us``.  Called with the lock held;
+        removes the collected entries from the queue."""
+        key = (self._ladder.tq_bucket(head.q.shape[0]), head.params)
+        deadline = head.t_submit + self._max_wait_s
+
+        def matching() -> list[_Search]:
+            out = []
+            for op in self._queue:
+                if isinstance(op, _Add):
+                    break  # adds are barriers: never batch across one
+                if (self._ladder.tq_bucket(op.q.shape[0]), op.params) == key:
+                    out.append(op)
+                    if len(out) == self._ladder.max_batch:
+                        break
+            return out
+
+        batch = matching()
+        while (len(batch) < self._ladder.max_batch and not self._stopping):
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            self._cond.wait(timeout=remaining)
+            batch = matching()
+        got = set(id(op) for op in batch)
+        kept = [op for op in self._queue if id(op) not in got]
+        self._queue.clear()
+        self._queue.extend(kept)
+        return batch
+
+    def _run_batch(self, batch: list[_Search]) -> None:
+        try:
+            q, qm, n_real = self._ladder.pad_batch(
+                [op.q for op in batch], [op.qm for op in batch])
+            scores, ids = self._retriever.search(q, qm, batch[0].params)
+            scores = np.asarray(scores)   # blocks until ready
+            ids = np.asarray(ids)
+        except Exception as e:  # noqa: BLE001 — the request owns the error
+            for op in batch:
+                op.future.set_exception(e)
+            return
+        t_done = time.perf_counter()
+        # record stats BEFORE resolving any future: a client unblocked by the
+        # last result may immediately read/reset the stats window, and this
+        # batch must already be in it
+        self._stats.record_batch([t_done - op.t_submit for op in batch],
+                                 n_real, q.shape[0], q.shape[1], t_done)
+        version = getattr(self._retriever, "version", None)
+        for i, op in enumerate(batch):
+            # which corpus snapshot answered (facade.version, bumped per add)
+            op.future.snapshot_version = version
+            op.future.set_result((scores[i], ids[i]))
+
+    def _apply_add(self, op: _Add) -> None:
+        try:
+            self._retriever.add(op.doc_tokens, op.doc_mask, seed=op.seed)
+        except Exception as e:  # noqa: BLE001
+            op.future.set_exception(e)
+            return
+        op.future.set_result(self._retriever.m)
+
+
+__all__ = ["RetrieverServer", "ServerStats"]

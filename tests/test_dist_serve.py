@@ -2,28 +2,15 @@
 
 ``LemurRetriever.shard(mesh)`` must be a pure distribution transform: the
 same top-k ids AND scores as the single-device facade, bit for bit, on any
-mesh — each test runs in a subprocess with 8 forced XLA host devices and
-compares a 1-device and an 8-device mesh against the local reference.
+mesh — each test runs via the shared ``run_forced8`` conftest fixture (a
+subprocess with 8 forced XLA host devices; the main process keeps its
+single device under any pytest ordering) and compares a 1-device and an
+8-device mesh against the local reference.
 
 The corpora deliberately do NOT divide the device count (m=90, 8 devices)
 so the pad-row masking path is always exercised.
 """
-import os
-import subprocess
-import sys
 import textwrap
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(code: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env, timeout=560)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
-    return r.stdout
 
 
 # shared preamble: tiny retriever whose k' covers the whole corpus, so the
@@ -50,10 +37,10 @@ MESH8 = compat.make_mesh((2, 4), ("data", "model"))
 """
 
 
-def test_sharded_search_matches_facade_fp32():
+def test_sharded_search_matches_facade_fp32(run_forced8):
     """fp32 sharded search == single-device facade, bit-identical, on 1 and
     8 host devices; exactly one jit trace per (params, batch shape)."""
-    out = _run(_BUILD + textwrap.dedent("""
+    out = run_forced8(_BUILD + textwrap.dedent("""
     r, q, qm = build()
     params = SearchParams(use_ann=False)
     want_s, want_i = r.search(q, qm, params)
@@ -70,10 +57,10 @@ def test_sharded_search_matches_facade_fp32():
     assert "OK" in out
 
 
-def test_sharded_search_sq8_matches_single_device():
+def test_sharded_search_sq8_matches_single_device(run_forced8):
     """SQ8 state: scores are exact w.r.t. the quantized representation, so
     8-device serving must still be bit-identical to the 1-device mesh."""
-    out = _run(_BUILD + textwrap.dedent("""
+    out = run_forced8(_BUILD + textwrap.dedent("""
     r, q, qm = build()
     params = SearchParams(use_ann=False)
     s1, i1 = r.shard(MESH1, sq8=True).search(q, qm, params)
@@ -92,11 +79,11 @@ def test_sharded_search_sq8_matches_single_device():
     assert "OK" in out
 
 
-def test_sharded_fused_gather_matches_legacy():
+def test_sharded_fused_gather_matches_legacy(run_forced8):
     """The fused (gather-at-source) per-shard rerank — the default — and the
     legacy gather-then-contract path return identical results on 8 devices,
     for both the fp32 and SQ8 states; the toggle gets its own jit trace."""
-    out = _run(_BUILD + textwrap.dedent("""
+    out = run_forced8(_BUILD + textwrap.dedent("""
     r, q, qm = build()
     fused = SearchParams(use_ann=False)                    # resolved default: fused
     legacy = SearchParams(use_ann=False, use_fused_gather=False)
@@ -118,11 +105,11 @@ def test_sharded_fused_gather_matches_legacy():
     assert "OK" in out
 
 
-def test_sharded_add_matches_facade():
+def test_sharded_add_matches_facade(run_forced8):
     """Shard-balanced growth: after add(), sharded search still matches the
     (identically grown) facade bit for bit, and every shard holds the same
     row count."""
-    out = _run(_BUILD + textwrap.dedent("""
+    out = run_forced8(_BUILD + textwrap.dedent("""
     import repro.dist as dist
     r, q, qm = build()
     sr = r.shard(MESH8, sq8=False)
@@ -141,11 +128,11 @@ def test_sharded_add_matches_facade():
     assert "OK" in out
 
 
-def test_sharded_k_exceeds_corpus_pads_to_k():
+def test_sharded_k_exceeds_corpus_pads_to_k(run_forced8):
     """k > m on a corpus smaller than the device count: search must keep
     the facade's (B, k) shape, padding with (NEG, -1) — not return the
     merge's narrower width."""
-    out = _run(_BUILD + textwrap.dedent("""
+    out = run_forced8(_BUILD + textwrap.dedent("""
     corpus = synthetic.make_corpus(m=6, d=16, avg_tokens=6, max_tokens=6,
                                    n_centers=4, seed=0)
     cfg = LemurConfig(d=16, d_prime=16, m_pretrain=6, n_train=128, n_ols=64,
@@ -165,10 +152,10 @@ def test_sharded_k_exceeds_corpus_pads_to_k():
     assert "OK" in out
 
 
-def test_sharded_save_load_roundtrip():
+def test_sharded_save_load_roundtrip(run_forced8):
     """save() persists the mesh-free index; load(directory, mesh) reproduces
     sharded search ids/scores bit-identically."""
-    out = _run(_BUILD + textwrap.dedent("""
+    out = run_forced8(_BUILD + textwrap.dedent("""
     import tempfile
     r, q, qm = build()
     params = SearchParams(use_ann=False)
@@ -184,10 +171,10 @@ def test_sharded_save_load_roundtrip():
     assert "OK" in out
 
 
-def test_sharded_index_step_matches_local_ols():
+def test_sharded_index_step_matches_local_ols(run_forced8):
     """The zero-comms distributed OLS index step reproduces the local
     solve over an 8-way sharded corpus."""
-    out = _run("""
+    out = run_forced8("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.common import compat
     from repro.core import LemurConfig, indexer
@@ -210,4 +197,46 @@ def test_sharded_index_step_matches_local_ols():
     assert err < 1e-3, err
     print("OK")
     """)
+    assert "OK" in out
+
+
+def test_online_server_sharded_parity(run_forced8):
+    """The online serving runtime over an 8-device ShardedLemurRetriever:
+    ragged bucketed micro-batches return the same top-k ids as direct
+    sharded search (scores to reduction tolerance), streaming add() lands
+    between micro-batches and post-add queries see the new docs, and the
+    compiled-step count stays within the bucket-ladder bound."""
+    out = run_forced8(_BUILD + textwrap.dedent("""
+    from repro.serving import BucketLadder, RetrieverServer
+
+    r, q, qm = build()
+    sr = r.shard(MESH8, sq8=False)
+    params = SearchParams(use_ann=False)
+    ladder = BucketLadder((4, 8), max_batch=4)
+    rng = np.random.default_rng(3)
+    with RetrieverServer(sr, ladder=ladder, max_wait_us=500,
+                         default_params=params) as srv:
+        futs = []
+        for i in range(12):
+            tq = int(rng.integers(1, 9))
+            qi = np.asarray(q[i % q.shape[0], :tq])
+            futs.append((qi, srv.submit(qi)))
+        for qi, fut in futs:
+            s, ids = fut.result(timeout=120)
+            want_s, want_i = sr.search(qi[None],
+                                       np.ones((1, len(qi)), bool), params)
+            assert np.array_equal(ids, np.asarray(want_i)[0])
+            np.testing.assert_allclose(s, np.asarray(want_s)[0],
+                                       rtol=1e-5, atol=1e-6)
+        assert srv.trace_count() <= ladder.compile_bound(1)
+        # streaming add: applied between micro-batches, later queries see it
+        extra = synthetic.make_corpus(m=7, d=16, avg_tokens=8, max_tokens=8,
+                                      n_centers=16, seed=11)
+        assert srv.add(extra.doc_tokens, extra.doc_mask).result(timeout=300) == 97
+        grown = SearchParams(use_ann=False, k_prime=97)
+        target = extra.doc_tokens[2][extra.doc_mask[2]]
+        s, ids = srv.search(np.asarray(target), params=grown, timeout=300)
+        assert ids[0] == 92, ids     # new doc id = 90 + 2, visible post-add
+    print("OK")
+    """))
     assert "OK" in out

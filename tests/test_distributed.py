@@ -1,31 +1,14 @@
 """Multi-device distribution semantics, run in a subprocess with 8 forced
-host devices (the main test process keeps the default single device).
+host devices via the shared ``run_forced8`` conftest fixture (the main test
+process keeps the default single device under ANY pytest ordering).
 
 All mesh/shard_map plumbing goes through ``repro.common.compat`` so the
 suite runs on every supported jax (the installed 0.4.37 has no
 ``jax.set_mesh`` / ``jax.sharding.AxisType`` / top-level ``shard_map``)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def _run(code: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env, timeout=560)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
-    return r.stdout
-
-
-def test_moe_ep_multi_device_matches_dense():
-    out = _run("""
+def test_moe_ep_multi_device_matches_dense(run_forced8):
+    out = run_forced8("""
     import jax, jax.numpy as jnp
     from repro.common import compat
     from repro.nn import moe
@@ -46,8 +29,8 @@ def test_moe_ep_multi_device_matches_dense():
     assert "OK" in out
 
 
-def test_sharded_embedding_lookup_multi_device():
-    out = _run("""
+def test_sharded_embedding_lookup_multi_device(run_forced8):
+    out = run_forced8("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.common import compat
     from repro.models.recsys import sharded_embedding_lookup
@@ -64,8 +47,8 @@ def test_sharded_embedding_lookup_multi_device():
     assert "OK" in out
 
 
-def test_gnn_sharded_forward_matches_unsharded():
-    out = _run("""
+def test_gnn_sharded_forward_matches_unsharded(run_forced8):
+    out = run_forced8("""
     import jax, jax.numpy as jnp
     from repro.common import compat
     from repro.data import synthetic
@@ -94,8 +77,8 @@ def test_gnn_sharded_forward_matches_unsharded():
     assert "OK" in out
 
 
-def test_lemur_distributed_serve_matches_local():
-    out = _run("""
+def test_lemur_distributed_serve_matches_local(run_forced8):
+    out = run_forced8("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.common import compat
     from repro.core import LemurConfig, maxsim
@@ -130,8 +113,8 @@ def test_lemur_distributed_serve_matches_local():
     assert "OK" in out
 
 
-def test_lemur_distributed_index_matches_local():
-    out = _run("""
+def test_lemur_distributed_index_matches_local(run_forced8):
+    out = run_forced8("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.common import compat
     from repro.core import LemurConfig, indexer
@@ -160,8 +143,8 @@ def test_lemur_distributed_index_matches_local():
     assert "OK" in out
 
 
-def test_grad_compression_cross_pod():
-    out = _run("""
+def test_grad_compression_cross_pod(run_forced8):
+    out = run_forced8("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.common import compat
     from repro.common.compat import shard_map

@@ -1,0 +1,299 @@
+"""Online serving runtime conformance (repro.serving).
+
+Three contracts, hardened across every registered first-stage backend:
+
+* **Ragged-shape conformance.**  For query lengths straddling every bucket
+  boundary of the default ladder (Tq = 1, 31, 32, 33, 255, 256), the
+  server's bucketed/micro-batched answer must carry bit-identical top-k
+  ids to a direct ``retriever.search()`` of the raw ragged query (scores
+  to float-reduction tolerance), and the ladder padding itself must be a
+  no-op: searching the zero-padded/False-masked query directly returns the
+  same ids as the unpadded one.
+* **Queue semantics.**  Random interleavings of ``submit``/``add`` never
+  drop, duplicate, or cross-wire a request id, and queries submitted after
+  an ``add`` see the new docs (FIFO barrier).  Runs as a deterministic
+  grid everywhere plus a hypothesis sweep when installed
+  (tests/_hypothesis_compat.py).
+* **Compile bound.**  100 random request shapes churn through the server
+  without the compiled-fn cache ever exceeding the bucket-ladder bound
+  (``trace_count()`` / ``trace_shapes()``).
+
+Every blocking wait carries an explicit timeout so a deadlocked
+micro-batcher fails the test instead of hanging the suite.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.anns import registry
+from repro.core import LemurConfig
+from repro.retriever import IVFBackendConfig, LemurRetriever, SearchParams
+from repro.serving import BucketLadder, RetrieverServer, pad_single
+
+BACKENDS = registry.list_backends()
+BOUNDARY_TQ = (1, 31, 32, 33, 255, 256)   # straddles every default rung
+TIMEOUT = 120.0                            # deadlock guard on every wait
+
+
+@pytest.fixture(scope="module")
+def base(tiny_corpus):
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=128, n_train=1024,
+                      n_ols=512, epochs=4, k=5, k_prime=60, anns="bruteforce")
+    return LemurRetriever.build(tiny_corpus, cfg, key=jax.random.PRNGKey(0))
+
+
+def _ragged_query(tq: int, d: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((tq, d)).astype(np.float32)
+    return q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+
+
+def _direct(r, q: np.ndarray, params):
+    s, ids = r.search(q[None], np.ones((1, q.shape[0]), bool), params)
+    return np.asarray(s)[0], np.asarray(ids)[0]
+
+
+# --------------------------------------------------------------------------
+# ragged-shape conformance grid: backend x quantization x bucket boundaries
+# --------------------------------------------------------------------------
+
+def _conformance(r, params=None):
+    """Server answers == direct facade answers at every bucket boundary,
+    and the bucket padding itself is id-preserving."""
+    ladder = BucketLadder()  # the default 32/64/128/256 ladder
+    serve_r = LemurRetriever(r.index)     # fresh compile cache for the bound
+    with RetrieverServer(serve_r, ladder=ladder, max_wait_us=200,
+                         default_params=params) as srv:
+        for tq in BOUNDARY_TQ:
+            q = _ragged_query(tq, r.cfg.d, seed=tq)
+            want_s, want_i = _direct(r, q, params)
+            got_s, got_i = srv.search(q, timeout=TIMEOUT)
+            assert np.array_equal(got_i, want_i), f"Tq={tq}: ids diverged"
+            np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-6,
+                                       err_msg=f"Tq={tq}")
+            # pad-mask correctness, independent of the server: the padded
+            # rows (zero vectors, False mask) must be exact no-ops
+            qp, mp = pad_single(q, np.ones(tq, bool), ladder.tq_bucket(tq))
+            s_pad, i_pad = r.search(qp[None], mp[None], params)
+            assert np.array_equal(np.asarray(i_pad)[0], want_i), \
+                f"Tq={tq}: padded rows leaked into the result"
+        # 6 boundary lengths fold into 3 ladder rungs -> <= bound compiles
+        assert srv.trace_count() <= ladder.compile_bound(1)
+        assert len(srv.trace_shapes()) <= ladder.compile_bound(1)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_server_matches_direct_search_fp32(name, base):
+    _conformance(base.with_backend(name, key=jax.random.PRNGKey(1)))
+
+
+def test_server_matches_direct_search_sq8(base):
+    """SQ8 first-stage state (cfg.ivf.sq8): same conformance contract."""
+    cfg = base.cfg.replace(anns="ivf", ivf=IVFBackendConfig(sq8=True))
+    _conformance(base.with_backend("ivf", key=jax.random.PRNGKey(1), cfg=cfg))
+
+
+def test_server_matches_sharded_direct_search(base):
+    """The server over a 1-device ShardedLemurRetriever (fp32 AND SQ8
+    resident corpus): bucketed answers == direct sharded search.  The
+    8-device twin runs in test_dist_serve.py::test_online_server_sharded_
+    parity."""
+    from repro.common import compat
+
+    mesh = compat.make_mesh((1,), ("model",))
+    params = SearchParams(use_ann=False)
+    for sq8 in (False, True):
+        sr = base.shard(mesh, sq8=sq8)        # served instance
+        sr_ref = base.shard(mesh, sq8=sq8)    # direct reference (own cache)
+        ladder = BucketLadder((32, 64), max_batch=2)
+        with RetrieverServer(sr, ladder=ladder, max_wait_us=200,
+                             default_params=params) as srv:
+            for tq in (1, 31, 33):
+                q = _ragged_query(tq, base.cfg.d, seed=tq)
+                want_s, want_i = _direct(sr_ref, q, params)
+                got_s, got_i = srv.search(q, timeout=TIMEOUT)
+                assert np.array_equal(got_i, want_i), (sq8, tq)
+                np.testing.assert_allclose(got_s, want_s, rtol=1e-5,
+                                           atol=1e-6)
+            assert srv.trace_count() <= ladder.compile_bound(1)
+
+
+def test_micro_batcher_coalesces_inflight_requests(base):
+    """Requests sharing a bucket coalesce into one micro-batch (occupancy
+    > 1) and every future still gets its own row."""
+    r = LemurRetriever(base.index)
+    ladder = BucketLadder((16,), max_batch=8)
+    with RetrieverServer(r, ladder=ladder, max_wait_us=300_000) as srv:
+        qs = [_ragged_query(5 + i, base.cfg.d, seed=i) for i in range(8)]
+        futs = [srv.submit(q) for q in qs]
+        outs = [f.result(timeout=TIMEOUT) for f in futs]
+    summary = srv.stats.summary()
+    assert summary["n_requests"] == 8
+    assert summary["n_batches"] < 8, "micro-batcher never coalesced"
+    assert max(summary["occupancy_hist"]) > 1
+    for q, (s, ids) in zip(qs, outs):
+        assert np.array_equal(ids, _direct(base, q, None)[1])
+
+
+# --------------------------------------------------------------------------
+# queue semantics: submit/add interleavings (deterministic + hypothesis)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small(tiny_corpus):
+    """A tiny, fast-to-grow retriever for the interleaving property."""
+    import dataclasses as dc
+
+    sub = dc.replace(tiny_corpus,
+                     doc_tokens=tiny_corpus.doc_tokens[:60],
+                     doc_mask=tiny_corpus.doc_mask[:60],
+                     topics=tiny_corpus.topics[:60])
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=48, n_train=512, n_ols=256,
+                      epochs=3, k=3, k_prime=512, anns="bruteforce")
+    return LemurRetriever.build(sub, cfg, key=jax.random.PRNGKey(0)), sub
+
+
+def check_interleaving(small, seed: int, n_ops: int = 24,
+                       p_add: float = 0.25):
+    """Random submit/add interleaving invariants: every request id resolves
+    exactly once, to ITS OWN query's answer (each query is the exact token
+    set of a distinct known doc, so MaxSim top-1 must be that doc), and
+    queries targeting docs added earlier in the stream always find them
+    (FIFO barrier visibility)."""
+    from repro.data import synthetic
+
+    built, sub = small
+    r = LemurRetriever(built.index)       # fresh wrapper: adds stay local
+    # adds draw from a DISJOINT pool, so every query target is unambiguous
+    addpool = synthetic.make_corpus(m=16, d=16, avg_tokens=8, max_tokens=12,
+                                    n_centers=24, seed=900 + seed)
+    rng = np.random.default_rng(seed)
+    # k' (512) clamps to the (grown) corpus per the backend contract
+    params = SearchParams(k_prime=512)
+    expected: list[tuple[object, int]] = []   # (future, expected top-1 id)
+    adds = []
+    n_added = 0
+    ladder = BucketLadder((8, 16), max_batch=4)
+    with RetrieverServer(r, ladder=ladder, max_wait_us=300,
+                         default_params=params) as srv:
+        for _ in range(n_ops):
+            roll = rng.random()
+            if roll < p_add and n_added < addpool.m:
+                # grow by one pool doc: its id becomes 60 + n_added
+                adds.append(srv.add(addpool.doc_tokens[n_added:n_added + 1],
+                                    addpool.doc_mask[n_added:n_added + 1]))
+                n_added += 1
+            elif roll < 0.6 or n_added == 0:
+                j = int(rng.integers(0, 60))
+                q = sub.doc_tokens[j][sub.doc_mask[j]]
+                expected.append((srv.submit(np.asarray(q)), j))
+            else:
+                # target a doc whose add is already enqueued: the FIFO
+                # barrier guarantees this query sees it
+                a = int(rng.integers(0, n_added))
+                q = addpool.doc_tokens[a][addpool.doc_mask[a]]
+                expected.append((srv.submit(np.asarray(q)), 60 + a))
+        for fut in adds:   # every enqueued add must land
+            assert fut.result(timeout=TIMEOUT) <= 60 + n_added
+        # snapshot hook: a query after the last add is answered by the
+        # fully-grown snapshot (facade.version bumps once per add)
+        tail = srv.submit(np.asarray(sub.doc_tokens[0][sub.doc_mask[0]]))
+        tail.result(timeout=TIMEOUT)
+        assert tail.snapshot_version == n_added
+    assert r.m == 60 + n_added
+    rids = [f.request_id for f, _ in expected]
+    assert len(set(rids)) == len(rids), "duplicate request ids"
+    for fut, j in expected:
+        assert fut.done(), f"request {fut.request_id} dropped"
+        s, ids = fut.result(timeout=0)
+        assert ids[0] == j, (
+            f"request {fut.request_id} cross-wired: top-1 {ids[0]} != {j}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_submit_add_interleaving_grid(small, seed):
+    check_interleaving(small, seed)
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(10, 200))
+def test_submit_add_interleaving_random(small, seed):
+    check_interleaving(small, seed, n_ops=16)
+
+
+# --------------------------------------------------------------------------
+# compile-bound regression: 100 random shapes never exceed the ladder bound
+# --------------------------------------------------------------------------
+
+def _shape_churn(r, ladder: BucketLadder, tqs, expect_param_sets: int = 1):
+    with RetrieverServer(r, ladder=ladder, max_wait_us=100) as srv:
+        futs = [srv.submit(_ragged_query(tq, r.cfg.d, seed=i))
+                for i, tq in enumerate(tqs)]
+        for f in futs:
+            f.result(timeout=TIMEOUT)
+        bound = ladder.compile_bound(expect_param_sets)
+        assert srv.trace_count() <= bound, (
+            f"{srv.trace_count()} traces > ladder bound {bound}: "
+            f"{srv.trace_shapes()}")
+        assert len(srv.trace_shapes()) <= bound
+        for shape, n in srv.trace_shapes().items():
+            assert n == 1, f"shape {shape} retraced {n}x"
+            assert shape[1] in ladder.tq_ladder, f"off-ladder Tq in {shape}"
+            assert shape[0] in ladder.batch_sizes(), f"off-ladder B in {shape}"
+
+
+def test_trace_count_bounded_under_shape_churn(base):
+    """100 random request shapes; the compiled-fn cache must stay within
+    the bucket-ladder bound (the tentpole's compile-bound contract)."""
+    rng = np.random.default_rng(42)
+    tqs = [int(t) for t in rng.integers(1, 33, size=100)]
+    _shape_churn(LemurRetriever(base.index), BucketLadder((8, 16, 32), 4), tqs)
+
+
+@settings(deadline=None, max_examples=3)
+@given(seed=st.integers(0, 100))
+def test_trace_count_bounded_random(base, seed):
+    rng = np.random.default_rng(seed)
+    tqs = [int(t) for t in rng.integers(1, 33, size=40)]
+    _shape_churn(LemurRetriever(base.index), BucketLadder((8, 16, 32), 4), tqs)
+
+
+# --------------------------------------------------------------------------
+# ladder unit behaviour
+# --------------------------------------------------------------------------
+
+def test_bucket_ladder_policy():
+    ladder = BucketLadder((8, 16, 32), max_batch=6)   # rounds up to 8
+    assert ladder.max_batch == 8
+    assert ladder.batch_sizes() == (1, 2, 4, 8)
+    assert [ladder.tq_bucket(t) for t in (1, 8, 9, 16, 17, 32)] == \
+        [8, 8, 16, 16, 32, 32]
+    assert ladder.tq_bucket(33) == 64                 # overflow: next pow2
+    assert [ladder.batch_bucket(n) for n in (1, 2, 3, 5, 9)] == [1, 2, 4, 8, 8]
+    assert ladder.compile_bound() == 12
+    assert ladder.compile_bound(3) == 36
+    with pytest.raises(ValueError):
+        BucketLadder((16, 8))
+    with pytest.raises(ValueError):
+        BucketLadder(())
+    q, qm, n_real = ladder.pad_batch(
+        [np.ones((3, 4), np.float32), np.ones((10, 4), np.float32)],
+        [np.ones(3, bool), np.ones(10, bool)])
+    assert q.shape == (2, 16, 4) and qm.shape == (2, 16) and n_real == 2
+    assert not qm[0, 3:].any() and not qm[1, 10:].any()
+    assert (q[0, 3:] == 0).all()
+
+
+def test_server_stop_without_drain_cancels(base):
+    r = LemurRetriever(base.index)
+    srv = RetrieverServer(r, ladder=BucketLadder((8,), 2),
+                          max_wait_us=500_000).start()
+    futs = [srv.submit(_ragged_query(4, base.cfg.d, seed=i))
+            for i in range(6)]
+    srv.stop(drain=False, timeout=TIMEOUT)
+    states = [("done" if f.done() and not f.cancelled() else
+               "cancelled" if f.cancelled() else "lost") for f in futs]
+    assert "lost" not in states, states
+    with pytest.raises(RuntimeError):
+        srv.submit(_ragged_query(4, base.cfg.d, seed=0))
