@@ -141,12 +141,24 @@ def save_bench_root(name: str, obj):
 
 
 def bench_row(op: str, shape: str, legacy_s: float, fused_s: float,
-              gathered_bytes: int, *, parity: bool) -> dict:
+              gathered_bytes: int, *, parity: bool,
+              flops: float | None = None,
+              launches: dict[str, int] | None = None,
+              backend: str | None = None) -> dict:
     """One fused-vs-legacy row of the BENCH_*.json contract: wall-µs per
     call for both paths, effective GB/s over the logical gathered bytes
     (same byte count for both paths — the fused path streams them once,
-    the legacy path materializes them in HBM first), and the speedup."""
-    return {
+    the legacy path materializes them in HBM first), and the speedup.
+
+    Optional perf-trail columns (the roofline ratchet):
+    ``flops`` adds ``roofline_frac`` — the fused path's measured time vs the
+    analytic roofline of the op (``launch.roofline.kernel_roofline`` over
+    ``flops``/``gathered_bytes``); bench-smoke gates on it regressing.
+    ``launches`` records the pre-rerank kernel-launch count per path (e.g.
+    ``{"legacy": 3, "fused": 1}`` for the one-launch query).  ``backend``
+    stamps the row with the jax backend that produced it, so TPU rows are
+    never compared against CPU rows."""
+    row = {
         "op": op,
         "shape": shape,
         "legacy_us": legacy_s * 1e6,
@@ -156,4 +168,13 @@ def bench_row(op: str, shape: str, legacy_s: float, fused_s: float,
         "legacy_gbps": gathered_bytes / max(legacy_s, 1e-12) / 1e9,
         "fused_gbps": gathered_bytes / max(fused_s, 1e-12) / 1e9,
         "parity": bool(parity),
+        "backend": backend if backend is not None else jax.default_backend(),
     }
+    if launches is not None:
+        row["launches"] = dict(launches)
+    if flops is not None:
+        from repro.launch.roofline import kernel_roofline
+
+        row["roofline_frac"] = kernel_roofline(
+            float(flops), float(gathered_bytes), fused_s)["roofline_frac"]
+    return row

@@ -54,7 +54,8 @@ def _gather_rows(rng):
         rows.append(common.bench_row(
             name, f"B={B},nprobe={nprobe},cap={cap},d={d}",
             common.timeit(legacy, q, probe), common.timeit(fused, q, probe),
-            gathered, parity=parity))
+            gathered, parity=parity, flops=2 * B * nprobe * cap * d,
+            launches={"legacy": 1, "fused": 1}))
         common.emit(f"kernel_{name}", rows[-1]["fused_us"],
                     f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy")
 
@@ -77,9 +78,77 @@ def _gather_rows(rng):
     rows.append(common.bench_row(
         "rerank", f"B={B},k_prime={kp},Tq={Tq},Td={Td},d={d}",
         common.timeit(legacy, qt, qm, cand), common.timeit(fused, qt, qm, cand),
-        B * kp * Td * (d * 4 + 4), parity=parity))
+        B * kp * Td * (d * 4 + 4), parity=parity,
+        flops=2 * B * kp * Tq * Td * d, launches={"legacy": 1, "fused": 1}))
     common.emit("kernel_rerank_fused", rows[-1]["fused_us"],
                 f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy")
+    rows.extend(_one_launch_rows(rng, interpret))
+    return rows
+
+
+def _one_launch_rows(rng, interpret: bool):
+    """One-launch query rows: the legacy 3-launch first stage (ψ-pool →
+    probe scan → top-k', ``pool_queries`` + ``search_ivf``) vs the fused
+    ``search_ivf_one_launch`` path, fp32 and SQ8.  Parity = bit-identical
+    candidate ids; under ``REPRO_BENCH_INTERPRET=1`` the actual Pallas
+    kernel additionally runs (interpret mode) on a small slice and must
+    match the legacy ids too (SQ8 scores to the hi/lo-bf16 tolerance)."""
+    import jax.numpy as jnp  # noqa: F811 (kept local for symmetry)
+
+    from repro.anns.ivf import IVFIndex, search_ivf, search_ivf_one_launch
+    from repro.core.model import pool_queries
+
+    rows = []
+    B, Tq, d, dp = 64, 8, 64, 128
+    nlist, cap, nprobe, kp = 64, 64, 8, 128
+    psi = {"dense": {"kernel": jnp.asarray(rng.standard_normal((d, dp)) * 0.1,
+                                           jnp.float32),
+                     "bias": jnp.asarray(rng.standard_normal(dp) * 0.01,
+                                         jnp.float32)},
+           "ln": {"scale": jnp.asarray(1 + 0.1 * rng.standard_normal(dp),
+                                       jnp.float32),
+                  "bias": jnp.asarray(0.1 * rng.standard_normal(dp),
+                                      jnp.float32)}}
+    qt = jnp.asarray(rng.standard_normal((B, Tq, d)), jnp.float32)
+    qm = jnp.asarray(rng.random((B, Tq)) > 0.2).at[:, 0].set(True)
+    cents = jnp.asarray(rng.standard_normal((nlist, dp)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 1 << 20, (nlist, cap)), jnp.int32)
+    ids = ids.at[:, -4:].set(-1)                       # pad slots in play
+    vecs = jnp.asarray(rng.standard_normal((nlist, cap, dp)), jnp.float32)
+    codes, scales = sq8_quant(vecs)
+    counts = jnp.full((nlist,), cap - 4, jnp.int32)
+    for name, v, s, item in (("one_launch_query_fp32", vecs, None, 4),
+                             ("one_launch_query_sq8", codes, scales, 1)):
+        idx = IVFIndex(cents, ids, v, s, counts)
+        legacy = jax.jit(lambda a, b, idx=idx: search_ivf(
+            idx, pool_queries(psi, a, b), nprobe, kp))
+        fused = jax.jit(lambda a, b, idx=idx: search_ivf_one_launch(
+            idx, psi, a, b, nprobe, kp))
+        (ls, li), (fs, fi) = legacy(qt, qm), fused(qt, qm)
+        parity = bool(np.array_equal(np.asarray(li), np.asarray(fi)))
+        if interpret:
+            ks, ki = ops.fused_query(qt[:4], qm[:4], psi, cents, ids, v, s,
+                                     nprobe=nprobe, kp=kp, use_kernel=True)
+            parity &= bool(np.array_equal(np.asarray(ki), np.asarray(li[:4])))
+            finite = np.isfinite(np.asarray(ls[:4]))
+            tol = 1e-5 if s is None else 2 ** -13
+            parity &= bool(np.allclose(np.asarray(ks)[finite],
+                                       np.asarray(ls[:4])[finite],
+                                       rtol=tol, atol=1e-3))
+        flops = (2 * B * Tq * d * dp            # in-kernel psi projection
+                 + 2 * B * nlist * dp           # probe-select prelude
+                 + 2 * B * nprobe * cap * dp)   # probe scan
+        gathered = (B * nprobe * cap * (dp * item + 4
+                                        + (4 if s is not None else 0))
+                    + B * Tq * d * 4 + d * dp * 4)
+        rows.append(common.bench_row(
+            name, f"B={B},Tq={Tq},d={d},dp={dp},nprobe={nprobe},"
+                  f"cap={cap},kp={kp}",
+            common.timeit(legacy, qt, qm), common.timeit(fused, qt, qm),
+            gathered, parity=parity, flops=flops,
+            launches={"legacy": 3, "fused": 1}))
+        common.emit(f"kernel_{name}", rows[-1]["fused_us"],
+                    f"x{rows[-1]['fused_vs_legacy']:.2f}_vs_legacy_3launch")
     return rows
 
 
@@ -118,17 +187,67 @@ def run(emit_json: bool = False):
     gather = _gather_rows(rng)
     out["gather"] = gather
     common.save_json("kernels", out)
+    regressions = []
     if emit_json:
-        common.save_bench_root("kernels", {
-            "meta": {"backend": jax.default_backend(),
-                     "note": "fused rows run the real ops dispatch — on CPU "
-                             "both paths lower to jnp (ratio ~1); the "
-                             "gather-at-source wins land on TPU"},
-            "rows": gather})
+        meta = {"backend": jax.default_backend(),
+                "device_kind": jax.devices()[0].device_kind,
+                "jax_version": jax.__version__,
+                "seed": 0,
+                "note": "fused rows run the real ops dispatch — on CPU "
+                        "both paths lower to jnp (ratio ~1); the "
+                        "gather-at-source / one-launch wins land on TPU"}
+        doc, regressions = _merge_bench_root(meta, gather)
+        common.save_bench_root("kernels", doc)
     bad = [r["op"] for r in gather if not r["parity"]]
     if bad:
         raise SystemExit(f"fused-path parity regression in: {bad}")
+    if regressions:
+        raise SystemExit("roofline_frac regression vs checked-in "
+                         "BENCH_kernels.json: " + "; ".join(regressions))
     return out
+
+
+def _merge_bench_root(meta: dict, rows: list[dict]):
+    """Merge freshly measured rows into the committed BENCH_kernels.json.
+
+    * rows this run did NOT re-measure are preserved verbatim (same
+      semantics as PR 5's ``"online"`` section: a kernels-only run must not
+      drop the serving rows, a CPU run must not drop TPU rows) — a row's
+      identity is (op, shape, backend);
+    * the roofline ratchet: a re-measured row whose ``roofline_frac`` fell
+      more than ``REPRO_BENCH_ROOFLINE_TOL`` (default 10%) below the
+      checked-in row for the SAME identity is reported as a regression (the
+      caller SystemExits after writing, so the artifact still shows the
+      offending numbers).  CPU timing is noisy — CI's cpu-runner smoke sets
+      a looser tolerance; TPU runs keep the strict default."""
+    import json
+    import os
+
+    path = common.REPO_ROOT / "BENCH_kernels.json"
+    prev = json.loads(path.read_text()) if path.exists() else {}
+    prev_backend = prev.get("meta", {}).get("backend")
+
+    def key(r, fallback):
+        return (r["op"], r["shape"], r.get("backend", fallback))
+
+    prev_rows = {key(r, prev_backend): r for r in prev.get("rows", [])}
+    tol = float(os.environ.get("REPRO_BENCH_ROOFLINE_TOL", "0.10"))
+    regressions = []
+    for r in rows:
+        old = prev_rows.get(key(r, meta["backend"]))
+        if not old or "roofline_frac" not in old or "roofline_frac" not in r:
+            continue
+        if r["roofline_frac"] < old["roofline_frac"] * (1.0 - tol):
+            regressions.append(
+                f"{r['op']}[{r['shape']}] "
+                f"{old['roofline_frac']:.4g} -> {r['roofline_frac']:.4g}")
+    fresh = {key(r, meta["backend"]) for r in rows}
+    merged = list(rows) + [r for kk, r in prev_rows.items()
+                           if kk not in fresh]
+    doc = {k: v for k, v in prev.items() if k not in ("meta", "rows")}
+    doc["meta"] = meta
+    doc["rows"] = merged
+    return doc, regressions
 
 
 if __name__ == "__main__":

@@ -9,6 +9,11 @@ default) and the legacy HBM-gather path is timed next to it; pass
 estimate shows WHY the fused path wins on TPU — the legacy path
 materializes every gathered byte in HBM before any math runs.
 
+A third mode serves the ONE-LAUNCH first stage (``use_one_launch=True``:
+ψ-pool + probe scan + top-k' fused into a single kernel on the ivf backend)
+and every row prints its per-search ``launches`` breakdown — the one-launch
+row must show exactly 1 pre-rerank launch.
+
   PYTHONPATH=src python examples/serve_batched.py
   PYTHONPATH=src python examples/serve_batched.py --backend muvera
   PYTHONPATH=src python examples/serve_batched.py --no-fused-gather
@@ -46,11 +51,13 @@ retriever = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0), verbose
 idx = retriever.index
 
 
-def _params(fused: bool) -> SearchParams:
+def _params(fused: bool, one_launch: bool = False) -> SearchParams:
     backend = None
     if retriever.backend == "ivf":
-        backend = IVFSearchParams(use_fused_gather=fused)
-    return SearchParams(use_fused_gather=fused, backend=backend)
+        backend = IVFSearchParams(use_fused_gather=fused,
+                                  use_one_launch=one_launch)
+    return SearchParams(use_fused_gather=fused, backend=backend,
+                        use_one_launch=one_launch)
 
 
 def _gathered_bytes_per_query(fused: bool) -> int:
@@ -99,18 +106,22 @@ def _serve(params):
     return lat[1:], recs[1:]  # drop the compile batch
 
 
-modes = [(False, "legacy")] if args.no_fused_gather else \
-        [(True, "fused "), (False, "legacy")]
+modes = [(False, False, "legacy")] if args.no_fused_gather else \
+        [(True, False, "fused "), (False, False, "legacy"),
+         (True, True, "1launch")]
 results = {}
-for fused, label in modes:
-    params = _params(fused)
+for fused, one_launch, label in modes:
+    params = _params(fused, one_launch)
     lat, recs = _serve(params)
     results[label] = lat
     est = _gathered_bytes_per_query(fused)
+    plan = retriever.launches(params)
+    pre = sum(v for name, v in plan.items() if name != "rerank")
     print(f"LEMUR[{retriever.backend}|{label}]: p50={p50(lat):.1f}ms "
           f"p99={p99(lat):.1f}ms / 32-query batch "
           f"(~{est/1e6:.2f} MB gathered/query, "
-          f"jit traces: {retriever.trace_count(params)})  "
+          f"jit traces: {retriever.trace_count(params)}, "
+          f"launches: {plan} = {pre} pre-rerank)  "
           f"recall@10={np.mean(recs):.3f}")
 
 print(f"exact : p50={p50(lat_exact):.1f}ms p99={p99(lat_exact):.1f}ms")

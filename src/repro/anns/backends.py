@@ -115,7 +115,8 @@ class IVFRetriever:
         if cfg is None:
             return IVFSearchParams()
         return IVFSearchParams(nprobe=cfg.nprobe,
-                               use_fused_gather=cfg.use_fused_gather)
+                               use_fused_gather=cfg.use_fused_gather,
+                               use_one_launch=cfg.use_one_launch)
 
     def pack_state(self, state: _ivf.IVFIndex):
         arrays = {"centroids": state.centroids, "ids": state.ids,

@@ -176,3 +176,22 @@ def search_ivf(index: IVFIndex, q: jax.Array, nprobe: int, k: int,
     top, pos = jax.lax.top_k(flat_s, kk)
     out_ids = jnp.take_along_axis(flat_i, pos, axis=1)
     return pad_topk(top, out_ids, k)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
+def search_ivf_one_launch(index: IVFIndex, psi_params, q_tokens, q_mask,
+                          nprobe: int, k: int):
+    """One-launch first stage: raw query TOKENS in, top-k' candidates out.
+
+    Unlike :func:`search_ivf` this takes the query tokens, not the pooled
+    latent — the ψ projection, pooling, probe scan and top-k' all happen in
+    ONE Pallas launch on TPU (``ops.fused_query``; its legacy-composition
+    oracle elsewhere), so the ``(B, Tq, d')`` features and the
+    ``(B, nprobe, cap)`` score strip never round-trip HBM.  Same math as
+    ``pool_queries`` + :func:`search_ivf` — fp32 ids are bit-identical.
+    q_tokens: (B, Tq, d) -> (scores (B, k), ids (B, k))."""
+    kp = min(k, nprobe * index.capacity)
+    top, out_ids = ops.fused_query(
+        q_tokens, q_mask, psi_params, index.centroids, index.ids, index.vecs,
+        index.scales, nprobe=nprobe, kp=kp)
+    return pad_topk(top, out_ids, k)

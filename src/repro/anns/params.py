@@ -51,6 +51,9 @@ class IVFBackendConfig(BackendConfig):
     sq8: bool = True         # scalar-quantize the latent corpus (Glass-style)
     use_fused_gather: bool = True  # gather-at-source probe scan (kernels.
                                    # gather_scan); False = legacy HBM gather
+    use_one_launch: bool = False   # fuse ψ-pool + probe scan + top-k' into
+                                   # ONE launch (kernels.query_fused); the
+                                   # legacy 3-launch path stays the default
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +88,7 @@ class NoSearchParams(BackendSearchParams):
 class IVFSearchParams(BackendSearchParams):
     nprobe: int | None = None    # None => cfg.ivf.nprobe
     use_fused_gather: bool | None = None  # None => cfg.ivf.use_fused_gather
+    use_one_launch: bool | None = None    # None => cfg.ivf.use_one_launch
 
 
 @dataclasses.dataclass(frozen=True)

@@ -74,6 +74,11 @@ class LemurConfig(ConfigBase):
                                    # gather_scan); False = legacy HBM gather.
                                    # The IVF probe-scan twin lives in
                                    # cfg.ivf.use_fused_gather.
+    use_one_launch: bool = False   # fuse the pre-rerank first stage (ψ-pool +
+                                   # scan + top-k') into ONE kernel launch
+                                   # (kernels.query_fused) for the exact scan
+                                   # and the sharded serve step.  The IVF twin
+                                   # lives in cfg.ivf.use_one_launch.
     score_dtype: str = "float32"
 
     def __post_init__(self):

@@ -75,7 +75,8 @@ def state_shardings(mesh: Mesh, state: ShardedRetrievalState | None = None):
 def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
                     q_tokens, q_mask, *, k: int, k_prime: int,
                     axes: tuple[str, ...], axis_sizes: tuple[int, ...],
-                    m_real: int | None = None, use_fused_gather: bool = True):
+                    m_real: int | None = None, use_fused_gather: bool = True,
+                    use_one_launch: bool = False):
     """Per-shard body (inside shard_map): local MIPS + local rerank + merge.
 
     * latent scan: int8 codes x fp query with per-row scales (the
@@ -104,13 +105,23 @@ def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
     idx = 0
     for ax, size in zip(axes, axis_sizes):
         idx = idx * size + jax.lax.axis_index(ax)
-    s = psi_q @ W.T.astype(psi_q.dtype)                         # (B, m_loc)
-    if W_scales is not None:
-        s = s * W_scales[None, :].astype(s.dtype)
-    if m_real is not None:
-        pad = (idx * m_loc + jnp.arange(m_loc)) >= m_real
-        s = jnp.where(pad[None, :], maxsim.NEG, s)
-    _, cand = jax.lax.top_k(s, kp)                              # local candidates
+    if use_one_launch:
+        # fused latent scan + in-kernel top-k': the (B, m_loc) score matrix
+        # never exists in HBM.  The pad mask depends on the TRACED shard
+        # index, so it rides into the kernel as an array input (masked rows
+        # keep their position ids at NEG — identical to the legacy branch).
+        valid = None
+        if m_real is not None:
+            valid = (idx * m_loc + jnp.arange(m_loc)) < m_real
+        _, cand = ops.mips_topk_fused(psi_q, W, W_scales, kp, valid)
+    else:
+        s = psi_q @ W.T.astype(psi_q.dtype)                     # (B, m_loc)
+        if W_scales is not None:
+            s = s * W_scales[None, :].astype(s.dtype)
+        if m_real is not None:
+            pad = (idx * m_loc + jnp.arange(m_loc)) >= m_real
+            s = jnp.where(pad[None, :], maxsim.NEG, s)
+        _, cand = jax.lax.top_k(s, kp)                          # local candidates
     if use_fused_gather:
         scores, local_ids = ops.fused_rerank(
             q_tokens, q_mask, cand, doc_tokens, doc_mask, min(k, kp),
@@ -155,7 +166,8 @@ def default_k_prime_local(cfg_k: int, cfg_k_prime: int, n_shards: int) -> int:
 def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
                     k_prime_local: int | None = None,
                     m_real: int | None = None,
-                    use_fused_gather: bool | None = None):
+                    use_fused_gather: bool | None = None,
+                    use_one_launch: bool | None = None):
     """Returns a jit-able serve_step(state, q_tokens, q_mask) -> (scores, ids).
 
     Queries are replicated over the corpus shards (the corpus uses every mesh
@@ -167,7 +179,10 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
     ``m_real``: true corpus size when state rows carry padding (see
     :func:`_local_retrieve`).
     ``use_fused_gather``: per-shard rerank through the gather-at-source
-    kernel path (default: ``cfg.use_fused_gather``)."""
+    kernel path (default: ``cfg.use_fused_gather``).
+    ``use_one_launch``: per-shard latent scan + top-k' as ONE fused kernel
+    launch (default: ``cfg.use_one_launch``); ids match the legacy
+    scan-then-top-k branch bit for bit on fp32."""
     axes = corpus_axes(mesh)
     axis_sizes = tuple(mesh.shape[a] for a in axes)
     n_shards = int(np.prod(axis_sizes))
@@ -175,11 +190,14 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
         k_prime_local = default_k_prime_local(cfg.k, cfg.k_prime, n_shards)
     if use_fused_gather is None:
         use_fused_gather = bool(cfg.use_fused_gather)
+    if use_one_launch is None:
+        use_one_launch = bool(getattr(cfg, "use_one_launch", False))
     corpus_spec = P(axes)
     body = functools.partial(
         _local_retrieve, k=cfg.k, k_prime=k_prime_local, axes=axes,
         axis_sizes=axis_sizes, m_real=m_real,
         use_fused_gather=bool(use_fused_gather),
+        use_one_launch=bool(use_one_launch),
     )
 
     def serve_step(state: ShardedRetrievalState, q_tokens, q_mask):

@@ -16,6 +16,7 @@ from repro.kernels import fused_psi as _fp
 from repro.kernels import gather_scan as _gs
 from repro.kernels import maxsim as _mx
 from repro.kernels import mips_sq8 as _mq
+from repro.kernels import query_fused as _qf
 from repro.kernels import ref
 
 
@@ -143,3 +144,53 @@ def fused_rerank(q, q_mask, cand_ids, doc_tokens, doc_mask, k: int, *,
         top = jnp.pad(top, ((0, 0), (0, k - kk)), constant_values=ref.NEG)
         out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)), constant_values=-1)
     return top, out_ids
+
+
+def fused_query(q_tokens, q_mask, psi_params, centroids, ids, vecs,
+                scales=None, *, nprobe: int, kp: int,
+                use_kernel: bool | None = None):
+    """One-launch first stage: ψ-pool + IVF probe scan + in-kernel top-k'.
+
+    The probe SELECTION (pooled query vs the tiny (nlist, d') centroid
+    table + ``top_k(nprobe)``) runs as a query-scale XLA prelude in both
+    paths — it feeds the kernel's SMEM scalar prefetch, so it cannot live
+    inside the grid it steers.  Everything corpus-scale — the per-cluster
+    gather, MXU scoring, and the top-k' reduction — is one Pallas launch on
+    TPU (ψ is recomputed in-kernel at grid step 0: cheaper than an HBM
+    round-trip of the (B, d') latent).  Returns (scores, ids), (B, kp),
+    short rows padded with ``(-inf, -1)`` exactly like the legacy flat
+    top-k over the gathered strip.
+    """
+    kernel = psi_params["dense"]["kernel"]
+    bias = psi_params["dense"]["bias"]
+    g = psi_params["ln"]["scale"]
+    b = psi_params["ln"]["bias"]
+    psi_q = ref.psi_pool_ref(q_tokens, q_mask, kernel, bias, g, b)
+    cs = psi_q @ centroids.T
+    _, probe = jax.lax.top_k(cs, nprobe)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.query_fused_ref(q_tokens, q_mask, kernel, bias, g, b,
+                                   probe, ids, vecs, scales, kp=kp)
+    return _qf.query_fused(q_tokens, q_mask, kernel, bias, g, b, probe, ids,
+                           vecs, scales, kp=kp, interpret=not _on_tpu())
+
+
+def mips_topk_fused(q, W, W_scales, kp: int, valid=None, *,
+                    use_kernel: bool | None = None, block_m: int = 512):
+    """Fused dense latent scan + in-kernel top-k' (the sharded serve step's
+    one-launch first stage): never materializes the (B, m) score matrix.
+
+    Contract matches the legacy ``psi_q @ W.T`` → mask → ``top_k``: ids are
+    corpus POSITIONS (``valid=False`` rows keep their position but score
+    ``NEG``, so with ``kp`` ≤ #valid rows they never surface).  ``valid``
+    may be a traced array — the sharded path's pad mask depends on
+    ``jax.lax.axis_index``.  Returns (scores, ids), (B, kp).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.mips_topk_ref(q, W, W_scales, valid, kp=kp)
+    return _qf.mips_topk(q, W, W_scales, valid, kp=kp, block_m=block_m,
+                         interpret=not _on_tpu())

@@ -1,0 +1,310 @@
+"""Pallas TPU one-launch query kernels: ψ-projection → scan → in-kernel top-k'.
+
+LEMUR's speed claim is that MaxSim retrieval collapses into a single latent
+MIPS pass — yet the serving path still ran it as 3+ XLA launches with full
+HBM round-trips between them (ψ latent projection → IVF probe scan → top-k'):
+the ``(B, Tq, d')`` ψ features and the ``(B, nprobe, cap)`` score strip each
+made an HBM write+read purely to cross a launch boundary.  These kernels
+keep the whole pre-rerank pipeline inside ONE grid:
+
+``query_fused`` — grid ``(B, nprobe)``, probe ids scalar-prefetched to SMEM
+(``pltpu.PrefetchScalarGridSpec``, same scheme as ``gather_scan``):
+
+* step ``(b, 0)`` computes ψ for query ``b``'s tokens in-kernel (the
+  ``fused_psi`` matmul+GELU+LayerNorm body), masks and pools them
+  (eq. 5) into a ``(1, d')`` VMEM scratch — the pooled query never touches
+  HBM, and is carried across the ``nprobe`` minor grid steps (the TPU grid
+  iterates the last dimension innermost, so scratch persists per ``b``);
+* every step ``(b, p)`` DMAs exactly cluster ``probe[b, p]``'s ``(cap, d')``
+  tile HBM→VMEM (BlockSpec index_map reads the prefetched id; consecutive
+  steps double-buffer automatically — cluster ``p+1`` streams in while
+  ``p``'s MXU contraction runs), scores it against the pooled query (fp32,
+  or int8 codes dequantized in-kernel via the hi/lo-bf16 split), masks
+  ``-1`` pad slots to ``-inf``;
+* the per-step ``(1, cap)`` score strip is merged into a carried ``(1, k')``
+  best-scores/best-ids strip (local ``jax.lax.top_k`` over
+  ``concat([carried, strip])`` — carried first, so earlier flat positions
+  win score ties exactly like the legacy flat top-k), and only the final
+  ``(B, k')`` ids+scores are written to HBM.
+
+Per query the HBM traffic is the probed source bytes streamed once plus
+``k'`` result slots — the ``(B, Tq, d')`` feature tensor and the
+``(B, nprobe, cap)`` strip never exist.
+
+VMEM per step (Tq=32, d=128, d'=2048, cap=512, k'=1024, fp32): W' tile
+1 MiB + token slab 16 KiB + pooled query 8 KiB + cluster tile 4 MiB (×2 for
+the pipeline's double buffer) + heap strip 8 KiB ≈ 9.1 MiB — inside ~16 MiB
+v5e VMEM.  cap=4096 at d'=2048 would need 32 MiB/tile in fp32: the SQ8 path
+(8 MiB/tile) is the only one-launch option there.
+
+``mips_topk`` — the dense-scan twin for the sharded serving step: grid
+``(B, m/bm)`` over corpus tiles of the local latent shard, per-step MXU
+contraction + validity mask (corpus pad rows → ``NEG``) + the same carried
+top-k' merge.  Replaces ``psi_q @ W.T`` → mask → ``top_k`` (a full
+``(B, m_loc)`` HBM score matrix) with one launch returning ``(B, k')``.
+
+The in-kernel ``jax.lax.top_k`` merge is validated in interpret mode (the
+tests' parity grid); on real TPUs it relies on Mosaic's sort lowering —
+gate with ``use_one_launch=False`` if a toolchain rejects it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _merge_topk(best_s, best_i, s, ids):
+    """Fold one (1, n) score/id strip into the carried (1, k') strip.
+
+    The carried strip goes FIRST in the concat: its entries came from
+    earlier flat positions, so a stable ``jax.lax.top_k`` (lowest index
+    first on ties) reproduces the legacy flat top-k's tie-breaking, step by
+    step, by induction."""
+    kp = best_s.shape[1]
+    cs = jnp.concatenate([best_s[...], s], axis=1)
+    ci = jnp.concatenate([best_i[...], ids.astype(jnp.int32)], axis=1)
+    top, pos = jax.lax.top_k(cs, kp)
+    best_s[...] = top
+    best_i[...] = jnp.take_along_axis(ci, pos, axis=1)
+
+
+def _pool_psi(qt_ref, qm_ref, w_ref, b_ref, g_ref, beta_ref, eps):
+    """The ``fused_psi`` kernel body + mask + pool: (1, Tq, d) -> (1, d')."""
+    _, Tq, d = qt_ref.shape
+    x = qt_ref[...].reshape(Tq, d)
+    h = jax.lax.dot_general(
+        x, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    h = h + b_ref[...][None, :]
+    h = jax.nn.gelu(h, approximate=True)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    y = (h - mu) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...][None, :] + beta_ref[...][None, :]
+    y = y * (qm_ref[...].reshape(Tq, 1) > 0)
+    return jnp.sum(y, axis=0, keepdims=True)
+
+
+def _query_fused_fp_kernel(probe_ref, qt_ref, qm_ref, w_ref, b_ref, g_ref,
+                           beta_ref, ids_ref, vecs_ref, out_s_ref, out_i_ref,
+                           q_acc, best_s, best_i, *, eps, nprobe):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        q_acc[...] = _pool_psi(qt_ref, qm_ref, w_ref, b_ref, g_ref, beta_ref,
+                               eps)
+        best_s[...] = jnp.full(best_s.shape, -jnp.inf, jnp.float32)
+        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
+
+    _, cap, dp = vecs_ref.shape
+    s = jax.lax.dot_general(
+        q_acc[...], vecs_ref[...].reshape(cap, dp), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, cap)
+    s = jnp.where(ids_ref[...] >= 0, s, -jnp.inf)
+    _merge_topk(best_s, best_i, s, ids_ref[...])
+
+    @pl.when(p == nprobe - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+def _query_fused_sq8_kernel(probe_ref, qt_ref, qm_ref, w_ref, b_ref, g_ref,
+                            beta_ref, ids_ref, codes_ref, scales_ref,
+                            out_s_ref, out_i_ref, q_acc, best_s, best_i, *,
+                            eps, nprobe):
+    # int8 cluster codes dequantized IN-KERNEL: hi/lo bf16 split of the fp32
+    # pooled query (two MXU passes), per-slot scales folded into the strip —
+    # same identity as gather_scan._ivf_scan_sq8_kernel (~2^-16 relative)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        q_acc[...] = _pool_psi(qt_ref, qm_ref, w_ref, b_ref, g_ref, beta_ref,
+                               eps)
+        best_s[...] = jnp.full(best_s.shape, -jnp.inf, jnp.float32)
+        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
+
+    q = q_acc[...]
+    _, cap, dp = codes_ref.shape
+    c = codes_ref[...].reshape(cap, dp).astype(jnp.bfloat16)
+    q_hi = q.astype(jnp.bfloat16)
+    q_lo = (q - q_hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    dot = lambda a: jax.lax.dot_general(
+        a, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = (dot(q_hi) + dot(q_lo)) * scales_ref[...]
+    s = jnp.where(ids_ref[...] >= 0, s, -jnp.inf)
+    _merge_topk(best_s, best_i, s, ids_ref[...])
+
+    @pl.when(p == nprobe - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("kp", "interpret"))
+def query_fused(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias, probe,
+                ids, vecs, scales=None, *, kp: int, interpret: bool = False,
+                eps: float = 1e-5):
+    """One-launch fused query: pooled ψ(X) + probed IVF scan + top-k'.
+
+    q_tokens: (B, Tq, d); kernel/bias/ln_*: the ψ weights (d, d') / (d',);
+    probe: (B, nprobe) int32 cluster ids (the query-scale probe-select
+    prelude runs in XLA — see ``ops.fused_query``); ids: (nlist, cap) int32
+    (-1 padded); vecs: (nlist, cap, d') fp32 — or int8 codes with scales:
+    (nlist, cap) — returns (scores (B, kp) fp32, ids (B, kp) int32), rows
+    padded with ``(-inf, -1)`` when fewer than ``kp`` real candidates were
+    probed.  Only these two (B, kp) strips ever reach HBM.
+    """
+    B, Tq, d = q_tokens.shape
+    nprobe = probe.shape[1]
+    nlist, cap = ids.shape
+    dp = kernel.shape[1]
+    qm = q_mask.astype(jnp.int8)
+    in_specs = [
+        pl.BlockSpec((1, Tq, d), lambda b, p, pr: (b, 0, 0)),
+        pl.BlockSpec((1, Tq), lambda b, p, pr: (b, 0)),
+        pl.BlockSpec((d, dp), lambda b, p, pr: (0, 0)),
+        pl.BlockSpec((dp,), lambda b, p, pr: (0,)),
+        pl.BlockSpec((dp,), lambda b, p, pr: (0,)),
+        pl.BlockSpec((dp,), lambda b, p, pr: (0,)),
+        pl.BlockSpec((1, cap), lambda b, p, pr: (pr[b, p], 0)),
+        pl.BlockSpec((1, cap, dp), lambda b, p, pr: (pr[b, p], 0, 0)),
+    ]
+    args = [q_tokens, qm, kernel, bias, ln_scale, ln_bias, ids, vecs]
+    kfn = functools.partial(_query_fused_fp_kernel, eps=eps, nprobe=nprobe)
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((1, cap), lambda b, p, pr: (pr[b, p], 0)))
+        args.append(scales)
+        kfn = functools.partial(_query_fused_sq8_kernel, eps=eps,
+                                nprobe=nprobe)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nprobe),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, kp), lambda b, p, pr: (b, 0)),
+                   pl.BlockSpec((1, kp), lambda b, p, pr: (b, 0))],
+        scratch_shapes=[pltpu.VMEM((1, dp), jnp.float32),
+                        pltpu.VMEM((1, kp), jnp.float32),
+                        pltpu.VMEM((1, kp), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kfn,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, kp), jnp.int32)],
+        interpret=interpret,
+    )(probe.astype(jnp.int32), *args)
+
+
+# --------------------------------------------------------------------------
+# dense-scan twin: fused latent MIPS + in-kernel top-k' (the sharded path)
+# --------------------------------------------------------------------------
+
+def _mips_topk_fp_kernel(q_ref, w_ref, valid_ref, out_s_ref, out_i_ref,
+                         best_s, best_i, *, nt, bm):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        best_s[...] = jnp.full(best_s.shape, -jnp.inf, jnp.float32)
+        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
+
+    s = jax.lax.dot_general(
+        q_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, bm)
+    ids = t * bm + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+    s = jnp.where(valid_ref[...] > 0, s, NEG)
+    _merge_topk(best_s, best_i, s, ids)
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+def _mips_topk_sq8_kernel(q_ref, codes_ref, ws_ref, valid_ref, out_s_ref,
+                          out_i_ref, best_s, best_i, *, nt, bm):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        best_s[...] = jnp.full(best_s.shape, -jnp.inf, jnp.float32)
+        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
+
+    q = q_ref[...]
+    c = codes_ref[...].astype(jnp.bfloat16)
+    q_hi = q.astype(jnp.bfloat16)
+    q_lo = (q - q_hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    dot = lambda a: jax.lax.dot_general(
+        a, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = (dot(q_hi) + dot(q_lo)) * ws_ref[...]
+    ids = t * bm + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+    s = jnp.where(valid_ref[...] > 0, s, NEG)
+    _merge_topk(best_s, best_i, s, ids)
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("kp", "block_m", "interpret"))
+def mips_topk(q, W, W_scales=None, valid=None, *, kp: int,
+              block_m: int = 512, interpret: bool = False):
+    """Fused latent scan + top-k': q (B, d') x W (m, d') -> top-k' of each
+    row without materializing the (B, m) score matrix in HBM.
+
+    ``W`` is fp32 — or int8 codes with per-row ``W_scales`` (m,).  ``valid``
+    (m,) bool masks rows to ``NEG`` (score only — their POSITION ids are
+    kept, matching the sharded serve step's pad-row convention); the rows
+    this wrapper pads up to the tile multiple are masked the same way and,
+    sitting at the highest positions, can never displace a real row.
+    Returns (scores (B, kp) fp32, ids (B, kp) int32 positions).
+    """
+    B, dp = q.shape
+    m = W.shape[0]
+    bm = min(block_m, m)
+    mp = -(-m // bm) * bm
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    valid = jnp.pad(valid, (0, mp - m)).reshape(1, mp).astype(jnp.int8)
+    Wp = jnp.pad(W, ((0, mp - m), (0, 0)))
+    nt = mp // bm
+    in_specs = [
+        pl.BlockSpec((1, dp), lambda b, t: (b, 0)),
+        pl.BlockSpec((bm, dp), lambda b, t: (t, 0)),
+    ]
+    args = [q, Wp]
+    if W_scales is not None:
+        in_specs.append(pl.BlockSpec((1, bm), lambda b, t: (0, t)))
+        args.append(jnp.pad(W_scales, (0, mp - m)).reshape(1, mp))
+        kfn = functools.partial(_mips_topk_sq8_kernel, nt=nt, bm=bm)
+    else:
+        kfn = functools.partial(_mips_topk_fp_kernel, nt=nt, bm=bm)
+    in_specs.append(pl.BlockSpec((1, bm), lambda b, t: (0, t)))
+    args.append(valid)
+    return pl.pallas_call(
+        kfn,
+        grid=(B, nt),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, kp), lambda b, t: (b, 0)),
+                   pl.BlockSpec((1, kp), lambda b, t: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, kp), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, kp), jnp.float32),
+                        pltpu.VMEM((1, kp), jnp.int32)],
+        interpret=interpret,
+    )(*args)

@@ -94,3 +94,61 @@ def rerank_scores_ref(q, q_mask, cand_ids, doc_tokens, doc_mask,
     best = jnp.max(s, axis=-1)                          # (B, k', Tq)
     best = jnp.where(q_mask[:, None, :], best, 0.0)
     return jnp.sum(best, axis=-1)                       # (B, k')
+
+
+def psi_pool_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias,
+                 eps: float = 1e-5):
+    """Pooled query latent: sum_t mask_t * psi(x_t)  (eq. 5).
+
+    Op-for-op the same graph as ``core.model.pool_queries`` (dense → GELU →
+    LayerNorm → mask → sum), spelled on the raw weight arrays so the
+    one-launch oracle does not import the model layer.  For fp32 inputs the
+    two jit to identical XLA programs — bit-identical pooled latents.
+    q_tokens: (B, Tq, d) -> (B, d')."""
+    h = q_tokens @ kernel.astype(q_tokens.dtype) + bias.astype(q_tokens.dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    hf = h.astype(jnp.float32)
+    mu = jnp.mean(hf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(hf - mu), axis=-1, keepdims=True)
+    y = (hf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * ln_scale.astype(jnp.float32) + ln_bias.astype(jnp.float32)
+    y = y.astype(q_tokens.dtype)
+    if q_mask is not None:
+        y = y * q_mask[..., None]
+    return jnp.sum(y, axis=-2)
+
+
+def query_fused_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias,
+                    probe, ids, vecs, scales=None, *, kp: int):
+    """Oracle for :func:`repro.kernels.query_fused.query_fused` — the
+    legacy 3-launch composition: ψ-pool, gather-then-score probe scan, flat
+    top-k' over the (B, nprobe*cap) strip (stable: earlier flat positions
+    win ties, the contract the kernel's carried merge reproduces).
+    Returns (scores (B, kp), ids (B, kp)) padded with (-inf, -1)."""
+    psi_q = psi_pool_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias)
+    s = ivf_scan_ref(psi_q, probe, ids, vecs, scales)   # (B, P, cap)
+    gids = jnp.take(ids, probe, axis=0)                 # (B, P, cap)
+    B = s.shape[0]
+    flat_s = s.reshape(B, -1)
+    flat_i = gids.reshape(B, -1)
+    kk = min(kp, flat_s.shape[1])
+    top, pos = jax.lax.top_k(flat_s, kk)
+    out_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    if kk < kp:
+        top = jnp.pad(top, ((0, 0), (0, kp - kk)), constant_values=-jnp.inf)
+        out_i = jnp.pad(out_i, ((0, 0), (0, kp - kk)), constant_values=-1)
+    return top, out_i
+
+
+def mips_topk_ref(q, W, W_scales=None, valid=None, *, kp: int):
+    """Oracle for :func:`repro.kernels.query_fused.mips_topk` — exactly the
+    sharded serve step's legacy math: full (B, m) latent score matrix,
+    optional per-row scales, invalid rows pinned to ``NEG`` (position ids
+    kept), then ``jax.lax.top_k``.
+    q: (B, d'); W: (m, d') fp32 or int8 -> (scores, position ids) (B, kp)."""
+    s = q @ W.T.astype(q.dtype)
+    if W_scales is not None:
+        s = s * W_scales[None, :].astype(s.dtype)
+    if valid is not None:
+        s = jnp.where(valid[None, :], s, NEG)
+    return jax.lax.top_k(s, kp)

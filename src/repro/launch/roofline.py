@@ -164,6 +164,27 @@ def summarize(rec: dict, n_chips: int) -> dict:
     }
 
 
+def kernel_roofline(flops: float, hbm_bytes: float,
+                    measured_s: float) -> dict:
+    """Roofline terms for ONE measured kernel launch (the benchmarks' per-row
+    helper, vs :func:`summarize`'s per-step dry-run records).
+
+    ``roofline_frac`` = ideal step time (max of the compute/memory terms at
+    the chip's peaks) / measured wall time — 1.0 means the launch sits ON
+    the roofline.  On the CPU container the fraction is tiny and only
+    meaningful RELATIVELY (same op/shape/backend across runs), which is
+    exactly how the bench-smoke regression gate uses it."""
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm_bytes / HBM_BW
+    ideal = max(t_c, t_m)
+    return {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "dominant": "compute" if t_c >= t_m else "memory",
+        "roofline_frac": min(1.0, ideal / max(measured_s, 1e-12)),
+    }
+
+
 RECOMMEND = {
     "compute": "compute-bound: raise MXU utilization (bf16 everywhere, larger "
                "matmul tiles, drop remat where memory allows)",

@@ -91,13 +91,21 @@ def serve_sharded(retriever, mesh_spec, batches, args):
 
     mesh = make_serving_mesh(mesh_spec)
     sr = retriever.shard(mesh)
-    params = SearchParams(k=args.k)
-    qps, rec = _serve_loop(lambda q, qm: sr.search(q, qm, params), batches, args)
-    traces = sr.trace_count()
-    print(f"[serve] mesh={mesh_spec:>7s} sharded QPS={qps:.0f}  "
-          f"recall@{args.k}={rec:.3f}  jit_traces={traces}  sq8={sr.sq8}")
-    return {"mesh": mesh_spec, "qps": qps, f"recall@{args.k}": rec,
-            "jit_traces": traces}
+    rows = []
+    # flip the one-launch scan both ways: the smoke covers the fused
+    # per-shard first stage AND the legacy 3-launch path (distinct compile
+    # keys; ids must agree — the parity suite asserts bit-identity)
+    for one_launch in (False, True):
+        params = SearchParams(k=args.k, use_one_launch=one_launch)
+        qps, rec = _serve_loop(lambda q, qm: sr.search(q, qm, params),
+                               batches, args)
+        traces = sr.trace_count()
+        print(f"[serve] mesh={mesh_spec:>7s} sharded QPS={qps:.0f}  "
+              f"recall@{args.k}={rec:.3f}  jit_traces={traces}  "
+              f"sq8={sr.sq8}  one_launch={one_launch}")
+        rows.append({"mesh": mesh_spec, "qps": qps, f"recall@{args.k}": rec,
+                     "jit_traces": traces, "one_launch": one_launch})
+    return rows[-1]
 
 
 def serve_online(retriever, args):

@@ -45,8 +45,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns import ivf as _ivf
 from repro.anns import registry
-from repro.anns.base import CorpusView, QueryBatch
+from repro.anns.base import CorpusView, QueryBatch, pad_topk
 from repro.anns.bruteforce import mips_topk
 from repro.checkpoint import manager as ckpt
 from repro.core import indexer, maxsim
@@ -64,9 +65,29 @@ FORMAT = "lemur-retriever-v1"
 # --------------------------------------------------------------------------
 
 def first_stage(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
-    """Pool queries and run the selected backend (or the exact latent scan)."""
+    """Pool queries and run the selected backend (or the exact latent scan).
+
+    One-launch routing happens HERE, not in the backend protocol: the fused
+    first stage consumes the raw query tokens plus ψ (the projection runs
+    inside the kernel), while ``be.search`` only ever sees the pooled
+    latent.  The candidate ids are bit-identical either way (fp32)."""
+    if (params.use_ann and index.backend == "ivf"
+            and getattr(params.backend, "use_one_launch", False)):
+        bp = params.backend
+        nprobe = min(int(bp.nprobe or min(32, index.ann.nlist)),
+                     index.ann.nlist)
+        _, cand = _ivf.search_ivf_one_launch(
+            index.ann, index.psi, q_tokens, q_mask, nprobe, params.k_prime)
+        return cand
     psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
     if not params.use_ann:
+        if params.use_one_launch:
+            # fused dense scan + in-kernel top-k' — never materializes the
+            # (B, m) score matrix; ids match the blocked mips_topk bit for bit
+            m = index.W.shape[0]
+            kk = min(params.k_prime, m)
+            top, cand = ops.mips_topk_fused(psi_q, index.W, None, kk)
+            return pad_topk(top, cand, params.k_prime)[1]
         _, cand = mips_topk(psi_q, index.W, params.k_prime)
         return cand
     be = registry.get_backend(index.backend)
@@ -91,6 +112,26 @@ def search_pipeline(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
                                 index.doc_tokens, index.doc_mask, params.k)
     return maxsim.rerank(q_tokens, q_mask, cand,
                          index.doc_tokens, index.doc_mask, params.k)
+
+
+def launch_plan(resolved: SearchParams) -> dict[str, int]:
+    """Static per-search kernel-launch breakdown for a RESOLVED params.
+
+    The legacy first stage is 3 corpus-scale launches before the rerank
+    (ψ projection → scan → top-k'); the one-launch path collapses them into
+    a single fused kernel.  This is the accounting BENCH rows and
+    ``examples/serve_batched.py`` print, and what :meth:`LemurRetriever.
+    launches` asserts: the one-launch plan has exactly 1 pre-rerank launch.
+    """
+    one = bool(getattr(resolved.backend, "use_one_launch", False)
+               if resolved.use_ann else resolved.use_one_launch)
+    if one:
+        plan = {"one_launch": 1, "rerank": 1}
+    else:
+        plan = {"projection": 1, "scan": 1, "topk": 1, "rerank": 1}
+    pre = sum(v for name, v in plan.items() if name != "rerank")
+    assert not one or pre == 1, plan   # the one-launch contract
+    return plan
 
 
 # --------------------------------------------------------------------------
@@ -344,6 +385,13 @@ class LemurRetriever:
         if params is None:
             return sum(self._trace_counts.values())
         return self._trace_counts.get((self.backend, self.resolve(params)), 0)
+
+    def launches(self, params: SearchParams | None = None) -> dict[str, int]:
+        """Per-search launch breakdown for ``params`` (resolved first) —
+        see :func:`launch_plan`.  Pairs with :meth:`trace_count`: traces say
+        how many XLA programs exist, this says how many corpus-scale kernel
+        launches each search issues."""
+        return launch_plan(self.resolve(params))
 
     def trace_shapes(self) -> dict[tuple, int]:
         """Per-shape compile accounting: ``{(batch, Tq[, d]): n_traces}``

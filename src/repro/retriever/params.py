@@ -38,6 +38,14 @@ class SearchParams:
                                                # gather benchmarkable.  The IVF
                                                # probe-scan twin rides in
                                                # IVFSearchParams.use_fused_gather.
+    use_one_launch: bool | None = None         # fuse the pre-rerank first stage
+                                               # (ψ-pool + scan + top-k') into
+                                               # ONE kernel launch (None =>
+                                               # cfg.use_one_launch).  Governs
+                                               # the exact scan (use_ann=False)
+                                               # and the sharded dense scan; the
+                                               # IVF twin rides in
+                                               # IVFSearchParams.use_one_launch.
 
     def resolve(self, cfg, backend_name: str) -> "SearchParams":
         """Fill every ``None`` from the build config: ``k``/``k_prime`` from
@@ -73,6 +81,9 @@ class SearchParams:
             use_fused_gather=bool(
                 cfg.use_fused_gather if self.use_fused_gather is None
                 else self.use_fused_gather),
+            use_one_launch=bool(
+                cfg.use_one_launch if self.use_one_launch is None
+                else self.use_one_launch),
         )
 
 

@@ -154,7 +154,8 @@ class ShardedLemurRetriever:
         return self._compiled_fn(resolved)(self._state, q_tokens, q_mask)
 
     def _compiled_fn(self, resolved: SearchParams):
-        key = (resolved.k, resolved.k_prime, resolved.use_fused_gather)
+        key = (resolved.k, resolved.k_prime, resolved.use_fused_gather,
+               resolved.use_one_launch)
         fn = self._compiled.get(key)
         if fn is None:
             serve = dist.make_serve_step(
@@ -162,7 +163,8 @@ class ShardedLemurRetriever:
                 self.cfg.replace(k=resolved.k, k_prime=resolved.k_prime),
                 k_prime_local=self._k_prime_local,
                 m_real=self._m_real,
-                use_fused_gather=resolved.use_fused_gather)
+                use_fused_gather=resolved.use_fused_gather,
+                use_one_launch=resolved.use_one_launch)
             m_real = self._m_real
             counts = self._trace_counts
             shapes = self._trace_shapes
@@ -195,7 +197,8 @@ class ShardedLemurRetriever:
             return sum(self._trace_counts.values())
         resolved = self.resolve(params)
         return self._trace_counts.get(
-            (resolved.k, resolved.k_prime, resolved.use_fused_gather), 0)
+            (resolved.k, resolved.k_prime, resolved.use_fused_gather,
+             resolved.use_one_launch), 0)
 
     def trace_shapes(self) -> dict[tuple, int]:
         """Per-shape compile accounting (same contract as the single-device

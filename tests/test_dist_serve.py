@@ -105,6 +105,33 @@ def test_sharded_fused_gather_matches_legacy(run_forced8):
     assert "OK" in out
 
 
+def test_sharded_one_launch_matches_legacy(run_forced8):
+    """The one-launch per-shard first stage (fused dense scan + in-kernel
+    top-k dispatch) returns the same candidate ids as the legacy
+    scan → mask → top_k composition on 8 devices — including the pad-row
+    masking path (m=90 does not divide 8) — with its own jit trace."""
+    out = run_forced8(_BUILD + textwrap.dedent("""
+    r, q, qm = build()
+    legacy = SearchParams(use_ann=False)
+    one = SearchParams(use_ann=False, use_one_launch=True)
+    for sq8 in (False, True):
+        sr = r.shard(MESH8, sq8=sq8)
+        ls, li = sr.search(q, qm, legacy)
+        os_, oi = sr.search(q, qm, one)
+        assert np.array_equal(np.asarray(oi), np.asarray(li)), sq8
+        assert np.array_equal(np.asarray(os_), np.asarray(ls)), sq8
+        assert sr.trace_count(legacy) == 1 and sr.trace_count(one) == 1
+    # fp32 one-launch sharded == local facade legacy path, bit for bit
+    sr = r.shard(MESH8, sq8=False)
+    want_s, want_i = r.search(q, qm, legacy)
+    got_s, got_i = sr.search(q, qm, one)
+    assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_sharded_add_matches_facade(run_forced8):
     """Shard-balanced growth: after add(), sharded search still matches the
     (identically grown) facade bit for bit, and every shard holds the same

@@ -1,0 +1,305 @@
+"""One-launch query kernel: oracle grid + interpret-mode kernel parity.
+
+The contract under test (ISSUE 6 acceptance): fp32 one-launch candidate ids
+are BIT-IDENTICAL to the legacy 3-launch composition (ψ-pool → probe scan →
+flat top-k'), with the legacy flat top-k's stable tie-breaking (earlier flat
+position wins) reproduced by the kernel's carried per-step merge — covering
+engineered score ties, ``-1`` padded cluster slots, k' > #valid candidates,
+cap not a multiple of the scan tile, and B=1.  SQ8 scores match to the
+hi/lo-bf16 dequant tolerance.  All kernel runs are interpret mode (CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.query_fused import mips_topk, query_fused
+
+
+def _psi(rng, d, dp):
+    return {
+        "dense": {
+            "kernel": jnp.asarray(rng.standard_normal((d, dp)) * 0.1,
+                                  jnp.float32),
+            "bias": jnp.asarray(rng.standard_normal(dp) * 0.01, jnp.float32),
+        },
+        "ln": {
+            "scale": jnp.asarray(1 + 0.1 * rng.standard_normal(dp),
+                                 jnp.float32),
+            "bias": jnp.asarray(0.1 * rng.standard_normal(dp), jnp.float32),
+        },
+    }
+
+
+def _setup(rng, B, Tq, d, dp, nlist, cap, n_pad=0, tie_slots=0):
+    psi = _psi(rng, d, dp)
+    qt = jnp.asarray(rng.standard_normal((B, Tq, d)), jnp.float32)
+    qm = jnp.asarray(rng.random((B, Tq)) > 0.3).at[:, 0].set(True)
+    ids = jnp.asarray(rng.integers(0, 10_000, (nlist, cap)), jnp.int32)
+    vecs = jnp.asarray(rng.standard_normal((nlist, cap, dp)), jnp.float32)
+    if n_pad:
+        ids = ids.at[:, cap - n_pad:].set(-1)
+    if tie_slots:
+        # engineered EXACT score ties across clusters: duplicate vector rows
+        # (identical slots dot the same pooled query to the same bits), with
+        # distinct ids — the stable flat top-k must pick the earlier flat
+        # position, and so must the kernel's carried merge
+        for j in range(tie_slots):
+            src = (j % nlist, j % max(cap - n_pad, 1))
+            dst = ((j + 1) % nlist, (2 * j + 1) % max(cap - n_pad, 1))
+            vecs = vecs.at[dst[0], dst[1]].set(vecs[src[0], src[1]])
+    cents = jnp.asarray(rng.standard_normal((nlist, dp)), jnp.float32)
+    return psi, qt, qm, cents, ids, vecs
+
+
+def _probe(psi, qt, qm, cents, nprobe):
+    p = psi["dense"]
+    ln = psi["ln"]
+    psi_q = ref.psi_pool_ref(qt, qm, p["kernel"], p["bias"], ln["scale"],
+                             ln["bias"])
+    _, probe = jax.lax.top_k(psi_q @ cents.T, nprobe)
+    return psi_q, probe
+
+
+# --------------------------------------------------------------------------
+# oracle vs flat jax.lax.top_k (the in-kernel partial top-k grid)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Tq,d,dp,nlist,cap,nprobe,kp,n_pad,ties", [
+    (4, 6, 16, 32, 8, 10, 3, 12, 3, 0),    # -1 pad slots in the strip
+    (4, 6, 16, 32, 8, 10, 3, 12, 0, 6),    # engineered exact score ties
+    (1, 5, 16, 32, 6, 7, 2, 9, 2, 3),      # B=1, cap odd (non-tile multiple)
+    (3, 4, 16, 32, 4, 5, 4, 40, 4, 0),     # k' > #valid candidates
+    (2, 3, 8, 16, 5, 11, 5, 55, 0, 0),     # k' == whole probed strip
+])
+def test_kernel_matches_flat_topk(B, Tq, d, dp, nlist, cap, nprobe, kp,
+                                  n_pad, ties):
+    """Interpret kernel == oracle == legacy flat top-k, ids bit-identical."""
+    rng = np.random.default_rng(B * 100 + cap + n_pad + ties)
+    psi, qt, qm, cents, ids, vecs = _setup(rng, B, Tq, d, dp, nlist, cap,
+                                           n_pad, ties)
+    p, ln = psi["dense"], psi["ln"]
+    psi_q, probe = _probe(psi, qt, qm, cents, nprobe)
+
+    # ground truth: the legacy composition, flat jax.lax.top_k on the strip
+    s = ref.ivf_scan_ref(psi_q, probe, ids, vecs)
+    gids = jnp.take(ids, probe, axis=0)
+    kk = min(kp, nprobe * cap)
+    want_s, pos = jax.lax.top_k(s.reshape(B, -1), kk)
+    want_i = jnp.take_along_axis(gids.reshape(B, -1), pos, axis=1)
+
+    ws, wi = ref.query_fused_ref(qt, qm, p["kernel"], p["bias"], ln["scale"],
+                                 ln["bias"], probe, ids, vecs, kp=kp)
+    assert np.array_equal(np.asarray(wi[:, :kk]), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(ws[:, :kk]), np.asarray(want_s))
+    assert (np.asarray(wi[:, kk:]) == -1).all()
+
+    ks, ki = query_fused(qt, qm, p["kernel"], p["bias"], ln["scale"],
+                         ln["bias"], probe, ids, vecs, kp=kp, interpret=True)
+    assert np.array_equal(np.asarray(ki), np.asarray(wi)), "kernel ids"
+    finite = np.isfinite(np.asarray(ws))
+    np.testing.assert_allclose(np.asarray(ks)[finite],
+                               np.asarray(ws)[finite], rtol=2e-5, atol=2e-5)
+    assert (np.asarray(ks)[~finite] == -np.inf).all()
+
+
+def test_kernel_sq8_interpret_parity():
+    """SQ8 variant: ids bit-identical, scores to the hi/lo-bf16 tolerance."""
+    rng = np.random.default_rng(7)
+    B, Tq, d, dp, nlist, cap, nprobe, kp = 4, 6, 16, 32, 8, 12, 3, 16
+    psi, qt, qm, cents, ids, _ = _setup(rng, B, Tq, d, dp, nlist, cap, 2)
+    codes = jnp.asarray(rng.integers(-127, 128, (nlist, cap, dp)), jnp.int8)
+    scales = jnp.asarray(rng.random((nlist, cap)) + 0.1, jnp.float32)
+    p, ln = psi["dense"], psi["ln"]
+    _, probe = _probe(psi, qt, qm, cents, nprobe)
+    ws, wi = ref.query_fused_ref(qt, qm, p["kernel"], p["bias"], ln["scale"],
+                                 ln["bias"], probe, ids, codes, scales, kp=kp)
+    ks, ki = query_fused(qt, qm, p["kernel"], p["bias"], ln["scale"],
+                         ln["bias"], probe, ids, codes, scales, kp=kp,
+                         interpret=True)
+    assert np.array_equal(np.asarray(ki), np.asarray(wi))
+    finite = np.isfinite(np.asarray(ws))
+    np.testing.assert_allclose(np.asarray(ks)[finite], np.asarray(ws)[finite],
+                               rtol=2 ** -13, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# dense-scan twin (mips_topk)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,m,dp,kp,bm", [
+    (4, 37, 16, 9, 16),     # m not a multiple of the tile
+    (1, 16, 16, 16, 16),    # B=1, k' == m, exact tile
+    (3, 50, 32, 50, 8),     # k' == m over many tiles
+])
+def test_mips_topk_matches_ref(B, m, dp, kp, bm):
+    rng = np.random.default_rng(m + kp)
+    q = jnp.asarray(rng.standard_normal((B, dp)), jnp.float32)
+    W = jnp.asarray(rng.standard_normal((m, dp)), jnp.float32)
+    # duplicate rows -> exact ties; position order must break them
+    W = W.at[m // 2].set(W[m // 3])
+    valid = jnp.asarray(rng.random(m) > 0.2)
+    ts, ti = ref.mips_topk_ref(q, W, None, valid, kp=kp)
+    ks, ki = mips_topk(q, W, None, valid, kp=kp, block_m=bm, interpret=True)
+    assert np.array_equal(np.asarray(ki), np.asarray(ti))
+    # scores: the kernel's per-tile dot_general can reduce in a different
+    # order than the ref's one-shot matmul -> ulp-level drift, ids exact
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(ts), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_mips_topk_sq8_interpret_parity():
+    rng = np.random.default_rng(11)
+    B, m, dp, kp = 3, 41, 16, 12
+    q = jnp.asarray(rng.standard_normal((B, dp)), jnp.float32)
+    codes = jnp.asarray(rng.integers(-127, 128, (m, dp)), jnp.int8)
+    scales = jnp.asarray(rng.random(m) + 0.1, jnp.float32)
+    ts, ti = ref.mips_topk_ref(q, codes, scales, None, kp=kp)
+    ks, ki = mips_topk(q, codes, scales, None, kp=kp, block_m=16,
+                       interpret=True)
+    assert np.array_equal(np.asarray(ki), np.asarray(ti))
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(ts),
+                               rtol=2 ** -13, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# system-level wiring: dispatch parity, compile keys, ladder bound, launches
+# --------------------------------------------------------------------------
+
+def _build_ivf_retriever(m=240, k_prime=64, sq8=False):
+    from repro.core import LemurConfig
+    from repro.data import synthetic
+    from repro.retriever import LemurRetriever
+
+    corpus = synthetic.make_corpus(m=m, d=16, avg_tokens=8, max_tokens=8,
+                                   n_centers=16, seed=0)
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=64, n_train=512, n_ols=256,
+                      epochs=3, k=5, k_prime=k_prime, anns="ivf",
+                      ivf=LemurConfig().ivf.replace(sq8=sq8))
+    r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 6, 4, seed=5))
+    qm = jnp.ones(q.shape[:2], bool)
+    return r, q, qm
+
+
+@pytest.mark.parametrize("sq8", [False, True])
+def test_facade_one_launch_matches_legacy(sq8):
+    """retriever.search with one-launch params == legacy params, ids AND
+    scores bit-identical (same candidate set and order into the rerank);
+    the two spellings get distinct compile keys."""
+    from repro.retriever import SearchParams
+    from repro.retriever.params import IVFSearchParams
+
+    r, q, qm = _build_ivf_retriever(sq8=sq8)
+    legacy = SearchParams()
+    one = SearchParams(backend=IVFSearchParams(use_one_launch=True))
+    ls, li = r.search(q, qm, legacy)
+    os_, oi = r.search(q, qm, one)
+    assert np.array_equal(np.asarray(li), np.asarray(oi))
+    assert np.array_equal(np.asarray(ls), np.asarray(os_))
+    assert r.trace_count(legacy) == 1 and r.trace_count(one) == 1
+
+
+def test_facade_exact_scan_one_launch_matches_legacy():
+    """use_ann=False one-launch (fused dense scan) == blocked mips_topk,
+    including the k' > m pad path."""
+    from repro.core import LemurConfig
+    from repro.data import synthetic
+    from repro.retriever import LemurRetriever, SearchParams
+
+    corpus = synthetic.make_corpus(m=90, d=16, avg_tokens=8, max_tokens=8,
+                                   n_centers=16, seed=0)
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=64, n_train=512, n_ols=256,
+                      epochs=3, k=5, k_prime=120, anns="bruteforce")
+    r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    q = jnp.asarray(synthetic.queries_from_corpus_query(corpus, 4, 4, seed=5))
+    qm = jnp.ones(q.shape[:2], bool)
+    legacy = SearchParams(use_ann=False)
+    one = SearchParams(use_ann=False, use_one_launch=True)
+    ls, li = r.search(q, qm, legacy)
+    os_, oi = r.search(q, qm, one)
+    assert np.array_equal(np.asarray(li), np.asarray(oi))
+    assert np.array_equal(np.asarray(ls), np.asarray(os_))
+
+
+def test_one_launch_spellings_collapse():
+    """Equivalent spellings (explicit False vs default) resolve to ONE
+    compiled fn; the flag itself is part of the compile key."""
+    from repro.retriever import SearchParams
+    from repro.retriever.params import IVFSearchParams
+
+    r, q, qm = _build_ivf_retriever()
+    a = SearchParams()
+    b = SearchParams(backend=IVFSearchParams(use_one_launch=False),
+                     use_one_launch=False)
+    assert r.resolve(a) == r.resolve(b)
+    r.search(q, qm, a)
+    r.search(q, qm, b)
+    assert r.trace_count() == 1
+    one = SearchParams(backend=IVFSearchParams(use_one_launch=True))
+    assert r.resolve(one) != r.resolve(a)
+
+
+def test_launches_breakdown():
+    """launch_plan accounting: legacy = 3 pre-rerank launches, one-launch =
+    exactly 1 (asserted inside launch_plan too)."""
+    from repro.retriever import SearchParams
+    from repro.retriever.params import IVFSearchParams
+
+    r, _, _ = _build_ivf_retriever()
+    legacy = r.launches(SearchParams())
+    one = r.launches(SearchParams(backend=IVFSearchParams(use_one_launch=True)))
+    assert sum(v for k_, v in legacy.items() if k_ != "rerank") == 3
+    assert one == {"one_launch": 1, "rerank": 1}
+    exact_one = r.launches(SearchParams(use_ann=False, use_one_launch=True))
+    assert sum(v for k_, v in exact_one.items() if k_ != "rerank") == 1
+
+
+def test_one_launch_within_ladder_compile_bound():
+    """RetrieverServer over one-launch params: ragged traffic stays within
+    BucketLadder.compile_bound(1) — the fused first stage doesn't leak
+    shape-special compile keys."""
+    from repro.retriever import SearchParams
+    from repro.retriever.params import IVFSearchParams
+    from repro.serving import BucketLadder, RetrieverServer
+
+    r, q, qm = _build_ivf_retriever(k_prime=32)
+    params = SearchParams(backend=IVFSearchParams(use_one_launch=True))
+    ladder = BucketLadder((4, 8), max_batch=4)
+    rng = np.random.default_rng(3)
+    with RetrieverServer(r, ladder=ladder, max_wait_us=500,
+                         default_params=params) as srv:
+        futs = []
+        for i in range(10):
+            tq = int(rng.integers(1, 9))
+            qi = np.asarray(q[i % q.shape[0], :tq])
+            futs.append((qi, srv.submit(qi)))
+        for qi, fut in futs:
+            s, ids = fut.result(timeout=120)
+            want_s, want_i = r.search(qi[None], np.ones((1, len(qi)), bool),
+                                      params)
+            assert np.array_equal(ids, np.asarray(want_i)[0])
+        assert srv.trace_count() <= ladder.compile_bound(1)
+
+
+def test_ops_dispatch_cpu_matches_legacy():
+    """On CPU the ops.fused_query dispatch IS the legacy math (oracle):
+    search_ivf_one_launch returns the same candidate ids bit-for-bit as
+    pool_queries + search_ivf, scores equal to jit-fusion ulps."""
+    from repro.anns.ivf import build_ivf, search_ivf, search_ivf_one_launch
+    from repro.core.model import init_psi, pool_queries
+
+    rng = np.random.default_rng(2)
+    m, d, dp = 500, 16, 32
+    psi = init_psi(jax.random.PRNGKey(0), d, dp)
+    lat = jnp.asarray(rng.standard_normal((m, dp)), jnp.float32)
+    qt = jnp.asarray(rng.standard_normal((5, 6, d)), jnp.float32)
+    qm = jnp.asarray(rng.random((5, 6)) > 0.3).at[:, 0].set(True)
+    for sq8 in (False, True):
+        idx = build_ivf(jax.random.PRNGKey(1), lat, 8, sq8=sq8)
+        want = search_ivf(idx, pool_queries(psi, qt, qm), 3, 40)
+        got = search_ivf_one_launch(idx, psi, qt, qm, 3, 40)
+        assert np.array_equal(np.asarray(want[1]), np.asarray(got[1])), sq8
+        np.testing.assert_allclose(np.asarray(want[0]), np.asarray(got[0]),
+                                   rtol=2e-6, atol=2e-6)

@@ -146,8 +146,10 @@ def test_search_params_hashable_and_resolved(retriever):
     assert resolved.k == r.cfg.k and resolved.k_prime == r.cfg.k_prime
     assert resolved.backend == IVFSearchParams(
         nprobe=r.cfg.ivf.nprobe,
-        use_fused_gather=r.cfg.ivf.use_fused_gather)
+        use_fused_gather=r.cfg.ivf.use_fused_gather,
+        use_one_launch=r.cfg.ivf.use_one_launch)
     assert resolved.use_fused_gather == r.cfg.use_fused_gather
+    assert resolved.use_one_launch == r.cfg.use_one_launch
     # exact-scan params carry no backend knobs (cache key collapses)
     assert r.resolve(SearchParams(use_ann=False)).backend is None
 
@@ -159,7 +161,8 @@ def test_partial_backend_params_fill_from_config(retriever):
         anns="ivf", ivf=IVFBackendConfig(nprobe=48)))
     a = r.resolve(SearchParams(backend=IVFSearchParams()))
     b = r.resolve(SearchParams())
-    assert a.backend == IVFSearchParams(nprobe=48, use_fused_gather=True)
+    assert a.backend == IVFSearchParams(nprobe=48, use_fused_gather=True,
+                                        use_one_launch=False)
     assert a == b
 
 
