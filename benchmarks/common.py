@@ -140,6 +140,54 @@ def save_bench_root(name: str, obj):
     return path
 
 
+def bench_meta(**extra) -> dict:
+    """The per-emission provenance stamp every BENCH_*.json section carries
+    (the BENCH_kernels.json schema): which jax, which device, which seed —
+    so a TPU trajectory is never silently compared against a CPU rerun."""
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "jax_version": jax.__version__,
+        "seed": 0,
+        **extra,
+    }
+
+
+def merge_section(doc: dict, section: str, meta: dict, rows: list[dict],
+                  key_fields=("op", "shape")) -> dict:
+    """Merge freshly measured ``rows`` into ``doc[section]`` with
+    merge-preserve semantics: a row's identity is ``key_fields`` (+ the
+    emitting backend), rows this run did NOT re-measure are preserved
+    verbatim, re-measured identities are replaced, and the section's
+    ``meta`` is restamped.  Returns ``doc`` (mutated) — callers load the
+    committed BENCH_*.json, merge each section they measured, and save."""
+    prev = doc.get(section, {})
+    # pre-merge sections stamped the platform as "backend_platform" — honor
+    # it as the identity fallback so their rows dedupe against re-measures
+    prev_meta = prev.get("meta", {})
+    prev_backend = (prev_meta.get("backend")
+                    or prev_meta.get("backend_platform"))
+
+    def key(r, fallback):
+        return tuple(r.get(f) for f in key_fields) + (
+            r.get("backend", fallback),)
+
+    prev_rows = {key(r, prev_backend): r for r in prev.get("rows", [])}
+    fresh = {key(r, meta.get("backend")) for r in rows}
+    doc[section] = {
+        "meta": meta,
+        "rows": list(rows) + [r for kk, r in prev_rows.items()
+                              if kk not in fresh],
+    }
+    return doc
+
+
+def load_bench_root(name: str) -> dict:
+    """The committed ``BENCH_<name>.json`` (or ``{}`` before first emit)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    return json.loads(path.read_text()) if path.exists() else {}
+
+
 def bench_row(op: str, shape: str, legacy_s: float, fused_s: float,
               gathered_bytes: int, *, parity: bool,
               flops: float | None = None,

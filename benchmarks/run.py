@@ -18,7 +18,14 @@ import argparse
 import sys
 import time
 
-BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels", "serving_online"]
+BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels",
+           "serving_online", "serving_fleet"]
+
+
+def _selected(which, bench: str) -> bool:
+    """Prefix selection per bench NAME: ``serving`` runs both serving
+    benches, ``serving_fleet`` just the fleet one."""
+    return any(bench.startswith(w) for w in which)
 
 
 def _resolve_backends(spec: str | None):
@@ -62,31 +69,35 @@ def main(argv=None) -> None:
     backends = _resolve_backends(args.backend)
 
     t0 = time.time()
-    if any(w.startswith("fig2") for w in which):
+    if _selected(which, "fig2"):
         from benchmarks import fig2_dprime
 
         fig2_dprime.run()
-    if any(w.startswith("fig3") for w in which):
+    if _selected(which, "fig3"):
         from benchmarks import fig3_anns
 
         fig3_anns.run(backends=backends)
-    if any(w.startswith("table2") for w in which):
+    if _selected(which, "table2"):
         from benchmarks import table2_qps
 
         table2_qps.run(backends=backends, mesh=args.mesh,
                        emit_json=args.emit_json)
-    if any(w.startswith("appendix") for w in which):
+    if _selected(which, "appendix_d"):
         from benchmarks import appendix_d_training
 
         appendix_d_training.run()
-    if any(w.startswith("kernel") for w in which):
+    if _selected(which, "kernels"):
         from benchmarks import kernels_bench
 
         kernels_bench.run(emit_json=args.emit_json)
-    if any(w.startswith("serving") for w in which):
+    if _selected(which, "serving_online"):
         from benchmarks import serving_online
 
         serving_online.run(emit_json=args.emit_json)
+    if _selected(which, "serving_fleet"):
+        from benchmarks import serving_fleet
+
+        serving_fleet.run(emit_json=args.emit_json)
     print(f"# total bench time: {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -1,0 +1,336 @@
+"""Fleet serving benchmark: replica scaling + SLO-adaptive overload.
+
+Drives the replicated router (``repro.fleet``) with the same open-loop
+Poisson replay as ``serving_online`` and extends the repo-root
+``BENCH_serving.json`` with two new sections it owns:
+
+* ``"replicated"`` — one row per fleet size (default 1/2/4 replicas), all
+  at the SAME offered load (``overload_factor`` × the canonical 100 QPS
+  trace), so achieved-vs-offered QPS isolates what replication buys:
+
+      {"op": "fleet_replicated", "replicas": n, "p50_ms": ..., "p95_ms": ...,
+       "p99_ms": ..., "qps": ..., "offered_qps": ..., "reject_rate": ...,
+       "n_lost": 0, "parity": true}
+
+* ``"overload"`` — one row for the SLO-adaptive run: capacity is measured
+  (closed-loop saturation burst), the latency target is set from a light
+  calibration phase (``3 × p99_light``), then a 10×-capacity replay must
+  keep the windowed p99 bounded by *observably* walking the rung ladder
+  down (every transition is recorded in the row) while admission control
+  absorbs the excess as typed rejects:
+
+      {"op": "fleet_overload", ..., "capacity_qps": ..., "offered_qps": ...,
+       "target_p99_ms": ..., "final_rung": ..., "transitions": [...],
+       "reject_rate": ..., "n_lost": 0}
+
+Contract gates (SystemExit → CI bench-smoke fails):
+
+* parity — sampled fleet answers bit-identical to a direct
+  ``retriever.search`` of the same ragged query;
+* zero lost requests — every submit resolves with a result or a typed
+  outcome (``Overloaded`` / ``DeadlineExceeded``), never silence;
+* achieved QPS does not degrade as replicas are added, and the largest
+  fleet beats one replica;
+* the overload run downshifts at least once, every down-transition fired
+  on a genuine breach (windowed p99 > target), and the replay-wide p99
+  stays under the queue-depth bound implied by measured capacity;
+* trace counts stay within the bucket-ladder compile bound.
+
+  PYTHONPATH=src python -m benchmarks.serving_fleet                 # default
+  PYTHONPATH=src python -m benchmarks.serving_fleet --m 600 --epochs 4 \\
+      --replicas 1,2 --duration 10                                  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+LADDER = (8, 16, 32)
+MAX_TRACE = 4000  # open-loop arrival cap per phase (overload traces explode)
+
+
+def _capped_trace(rate: float, duration: float, seed: int):
+    from repro.serving import poisson_trace
+
+    at = poisson_trace(rate, duration, seed=seed)
+    if len(at) > MAX_TRACE:
+        print(f"# capping trace at {MAX_TRACE} of {len(at)} arrivals "
+              f"({rate:.0f} qps x {duration:.0f}s)")
+        at = at[:MAX_TRACE]
+    return at
+
+
+def _parity_sample(results, queries, retriever, seed, n=12):
+    """Sampled fleet answers vs direct facade search (typed outcomes and
+    losses are skipped — they have no ids to compare)."""
+    ok_idx = [i for i, r in enumerate(results) if isinstance(r, tuple)]
+    if not ok_idx:
+        return False
+    rng = np.random.default_rng(seed)
+    sample = rng.choice(ok_idx, min(n, len(ok_idx)), replace=False)
+    parity = True
+    for i in sample:
+        q = queries[i % len(queries)]
+        _, want = retriever.search(q[None], np.ones((1, len(q)), bool))
+        parity &= bool(np.array_equal(results[i][1], np.asarray(want)[0]))
+    return parity
+
+
+def _measure_capacity(router, queries, burst: int = 64,
+                      timeout: float = 300.0) -> float:
+    """Closed-loop saturation burst: submit ``burst`` requests back-to-back
+    and wait for all — achieved rate approximates the fleet's micro-batched
+    service capacity (what the overload factor is multiplied against)."""
+    futs = [router.submit(queries[i % len(queries)]) for i in range(burst)]
+    t0 = time.perf_counter()
+    for f in futs:
+        f.result(timeout=timeout)
+    return burst / max(time.perf_counter() - t0, 1e-9)
+
+
+def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
+        duration: float = 10.0, replicas=(1, 2, 4), overload_factor: float = 10.0,
+        max_batch: int = 8, max_wait_us: int = 2000, max_queue_depth: int = 64,
+        backend: str = "ivf", epochs: int = 10, seed: int = 0,
+        emit_json: bool = True) -> dict:
+    import jax
+
+    from repro.core import LemurConfig
+    from repro.data import synthetic
+    from repro.fleet import Router, SLOController, build_rungs, clone_replicas, \
+        warm_replicas
+    from repro.retriever import IVFBackendConfig, LemurRetriever
+    from repro.serving import BucketLadder, ragged_queries, replay
+
+    import os
+
+    corpus = synthetic.make_corpus(m=m, d=d, avg_tokens=12, max_tokens=16,
+                                   seed=seed)
+    cfg = LemurConfig(d=d, d_prime=64, m_pretrain=min(256, m),
+                      n_train=4096, n_ols=1024, epochs=epochs, k=10,
+                      k_prime=min(128, m), anns=backend,
+                      ivf=IVFBackendConfig(nprobe=16))
+    retriever = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(seed))
+    ladder = BucketLadder(LADDER, max_batch=max_batch)
+    queries = ragged_queries(256, d, tq_range=(2, 24), seed=seed + 1)
+    n_cores = len(os.sched_getaffinity(0))
+
+    # ---- replicated scaling rows: same offered load, growing fleets -------
+    # the offered load must saturate a SINGLE replica for replication to be
+    # visible — calibrate against its measured closed-loop capacity, clamped
+    # to the 10-100x band around the canonical trace rate
+    rep_rows = []
+    arrivals = None
+    offered = rate * overload_factor
+    for n in replicas:
+        reps = clone_replicas(retriever, n)
+        warm_replicas(reps, ladder, d)
+        with Router(reps, ladder=ladder, max_wait_us=max_wait_us,
+                    max_queue_depth=max_queue_depth,
+                    stall_timeout_s=60.0) as router:
+            if arrivals is None:
+                cap1 = _measure_capacity(router, queries,
+                                         burst=min(64, max_queue_depth))
+                offered = min(max(overload_factor * rate, 2.5 * cap1),
+                              100.0 * rate)
+                print(f"# replica-1 capacity {cap1:.0f} qps -> offered "
+                      f"{offered:.0f} qps ({n_cores} cores)")
+                arrivals = _capped_trace(offered, duration, seed + 2)
+            results, report = replay(router, queries, arrivals)
+            parity = _parity_sample(results, queries, retriever, seed + 3)
+            rep_rows.append({
+                "op": "fleet_replicated",
+                "shape": (f"m={m},backend={backend},replicas={n},"
+                          f"offered={offered:g}qps,depth={max_queue_depth}"),
+                "replicas": n,
+                **{k: report[k] for k in (
+                    "p50_ms", "p95_ms", "p99_ms", "mean_ms", "qps",
+                    "offered_qps", "n_requests", "n_rejected", "n_lost",
+                    "reject_rate")},
+                "trace_count": router.trace_count(),
+                "compile_bound": router.compile_bound(1),
+                "parity": parity,
+            })
+            common.emit(f"serving_fleet_r{n}_p99",
+                        rep_rows[-1]["p99_ms"] * 1e3,
+                        f"qps={rep_rows[-1]['qps']:.0f}/"
+                        f"{offered:.0f},rej={report['reject_rate']:.2f}")
+
+    # ---- SLO-adaptive overload row ----------------------------------------
+    n_slo = max(r for r in replicas if r <= 2) if any(r <= 2 for r in replicas) \
+        else min(replicas)
+    reps = clone_replicas(retriever, n_slo)
+    rungs = build_rungs(retriever, n_rungs=3)
+    warm_replicas(reps, ladder, d, params_list=rungs)
+
+    # light phase on a plain router calibrates the latency target
+    with Router(reps, ladder=ladder, max_wait_us=max_wait_us,
+                max_queue_depth=max_queue_depth,
+                stall_timeout_s=60.0) as router:
+        light = _capped_trace(rate, min(duration, 4.0), seed + 4)
+        _, light_rep = replay(router, queries, light)
+        p99_light = light_rep["p99_ms"]
+        capacity = _measure_capacity(router, queries,
+                                     burst=min(64, max_queue_depth))
+    target_ms = 3.0 * p99_light
+
+    # queue depth calibrated so a FULL admission queue implies an SLO breach
+    # (wait ~ depth/capacity ~ 2x target): without this, admission control
+    # alone can bound p99 below the target and the controller never engages
+    depth_over = max(int(math.ceil(2.0 * (target_ms / 1e3) * capacity)),
+                     4 * max_batch)
+    slo = SLOController(rungs, target_p99_ms=target_ms, window=64,
+                        min_window=16, eval_every=16)
+    over_rate = overload_factor * capacity
+    over = _capped_trace(over_rate, duration, seed + 5)
+    print(f"# overload: capacity {capacity:.0f} qps, target "
+          f"{target_ms:.1f}ms, depth {depth_over}, offered {over_rate:.0f}")
+    with Router(reps, ladder=ladder, max_wait_us=max_wait_us,
+                max_queue_depth=depth_over, slo=slo,
+                stall_timeout_s=60.0) as router:
+        results, report = replay(router, queries, over)
+        transitions = [{"t": tr.t, "from": tr.from_rung, "to": tr.to_rung,
+                        "p99_ms": tr.p99_ms, "direction": tr.direction}
+                       for tr in slo.transitions]
+        over_row = {
+            "op": "fleet_overload",
+            "shape": (f"m={m},backend={backend},replicas={n_slo},"
+                      f"overload={overload_factor:g}x,depth={max_queue_depth}"),
+            "replicas": n_slo,
+            **{k: report[k] for k in (
+                "p50_ms", "p95_ms", "p99_ms", "qps", "offered_qps",
+                "n_requests", "n_rejected", "n_lost", "reject_rate")},
+            "capacity_qps": capacity,
+            "p99_light_ms": p99_light,
+            "target_p99_ms": target_ms,
+            "n_rungs": len(rungs),
+            "final_rung": slo.rung,
+            "transitions": transitions,
+            "trace_count": router.trace_count(),
+            "compile_bound": router.compile_bound(len(rungs)),
+        }
+        common.emit("serving_fleet_overload_p99", over_row["p99_ms"] * 1e3,
+                    f"rung={slo.rung}/{len(rungs) - 1},"
+                    f"rej={report['reject_rate']:.2f},"
+                    f"downs={sum(t['direction'] == 'down' for t in transitions)}")
+
+    out = {
+        "replicated": {
+            "meta": common.bench_meta(
+                seed=seed, m=m, d=d, offered_qps=offered, n_cores=n_cores,
+                duration_s=duration, ladder=list(LADDER),
+                max_batch=max_batch, max_queue_depth=max_queue_depth,
+                first_stage=backend,
+                note="same Poisson trace replayed against growing fleets; "
+                     "achieved-vs-offered QPS is the scaling contract "
+                     "(strict scaling gated only on multi-core hosts)"),
+            "rows": rep_rows,
+        },
+        "overload": {
+            "meta": common.bench_meta(
+                seed=seed, m=m, d=d, overload_factor=overload_factor,
+                n_cores=n_cores, duration_s=duration, ladder=list(LADDER),
+                max_batch=max_batch, max_queue_depth=depth_over,
+                first_stage=backend,
+                note="capacity-calibrated overload with SLO-adaptive rung "
+                     "ladder; every rung transition is recorded in the row"),
+            "rows": [over_row],
+        },
+    }
+    if emit_json:
+        doc = common.load_bench_root("serving")
+        for sec in ("replicated", "overload"):
+            common.merge_section(doc, sec, out[sec]["meta"], out[sec]["rows"])
+        common.save_bench_root("serving", doc)
+
+    _gate(rep_rows, over_row, target_ms, capacity, depth_over, max_batch,
+          n_cores)
+    return out
+
+
+def _gate(rep_rows, over_row, target_ms, capacity, depth, max_batch,
+          n_cores) -> None:
+    """The fleet serving contract — SystemExit on any violation."""
+    bad = [r["op"] + r["shape"] for r in rep_rows if not r["parity"]]
+    if bad:
+        raise SystemExit(f"fleet parity regression in: {bad}")
+    lost = [r["shape"] for r in rep_rows + [over_row] if r["n_lost"]]
+    if lost:
+        raise SystemExit(f"lost requests (no typed outcome) in: {lost}")
+    for r in rep_rows + [over_row]:
+        if not math.isfinite(r["p99_ms"]):
+            raise SystemExit(f"non-finite p99 in {r['op']}: {r['p99_ms']}")
+        if r["trace_count"] > r["compile_bound"]:
+            raise SystemExit(
+                f"{r['op']}: trace_count {r['trace_count']} exceeded compile "
+                f"bound {r['compile_bound']}")
+    qps = [r["qps"] for r in sorted(rep_rows, key=lambda r: r["replicas"])]
+    if len(qps) > 1:
+        if n_cores >= 2 and qps[-1] <= qps[0]:
+            raise SystemExit(
+                f"replication did not raise achieved QPS: {qps}")
+        # a single-core host cannot serve replicas in parallel — replication
+        # is gated on NON-COLLAPSE there (context switching between worker
+        # threads costs real throughput); the strict scaling contract only
+        # binds where the hardware can express it
+        tol = 0.8 if n_cores >= 2 else 0.6
+        if any(b < tol * a for a, b in zip(qps, qps[1:])):
+            raise SystemExit(f"achieved QPS degraded with replicas: {qps}")
+    downs = [t for t in over_row["transitions"] if t["direction"] == "down"]
+    if not downs:
+        raise SystemExit(
+            "overload replay never downshifted — SLO controller inert "
+            f"(target {target_ms:.1f}ms, transitions "
+            f"{over_row['transitions']})")
+    breach = [t for t in downs if t["p99_ms"] <= t.get("target_ms",
+                                                       target_ms)]
+    if breach:
+        raise SystemExit(f"downshift without a p99 breach: {breach}")
+    # queue-depth latency bound: a request admitted at full depth waits at
+    # most ~(depth + one batch) service intervals at the rate the fleet
+    # ACTUALLY sustained under overload (the closed-loop burst capacity is
+    # optimistic — batching amortizes better there), plus 4x slack for rung
+    # transitions and CPU noise.  An unbounded queue would blow straight
+    # through this: its p99 grows with trace length, not with depth.
+    svc = over_row["qps"] if (math.isfinite(over_row["qps"])
+                              and over_row["qps"] > 0) else capacity
+    bound_ms = 4.0 * 1e3 * (depth + max_batch) / max(svc, 1e-9) \
+        + 4.0 * target_ms
+    if over_row["p99_ms"] > bound_ms:
+        raise SystemExit(
+            f"overload p99 {over_row['p99_ms']:.1f}ms exceeded the "
+            f"queue-depth bound {bound_ms:.1f}ms — admission control or "
+            f"SLO downshift failed to bound latency")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--m", type=int, default=2000)
+    p.add_argument("--d", type=int, default=32)
+    p.add_argument("--rate", type=float, default=100.0,
+                   help="canonical offered load, queries/second")
+    p.add_argument("--duration", type=float, default=10.0)
+    p.add_argument("--replicas", default="1,2,4",
+                   help="comma-separated fleet sizes for the scaling rows")
+    p.add_argument("--overload-factor", type=float, default=10.0)
+    p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--max-wait-us", type=int, default=2000)
+    p.add_argument("--max-queue-depth", type=int, default=64)
+    p.add_argument("--backend", default="ivf")
+    p.add_argument("--epochs", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--no-emit-json", action="store_true")
+    a = p.parse_args()
+    out = run(a.m, d=a.d, rate=a.rate, duration=a.duration,
+              replicas=tuple(int(x) for x in a.replicas.split(",")),
+              overload_factor=a.overload_factor, max_batch=a.max_batch,
+              max_wait_us=a.max_wait_us, max_queue_depth=a.max_queue_depth,
+              backend=a.backend, epochs=a.epochs, seed=a.seed,
+              emit_json=not a.no_emit_json)
+    print(json.dumps({k: v["rows"] for k, v in out.items()}, indent=1))

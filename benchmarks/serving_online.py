@@ -145,14 +145,14 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
                         f"parity={add_parity}")
 
     out = {
-        "meta": {"backend_platform": __import__("jax").default_backend(),
-                 "m": m, "d": d, "rate_qps": rate, "duration_s": duration,
-                 "ladder": list(LADDER), "max_batch": ladder.max_batch,
-                 "max_wait_us": max_wait_us, "first_stage": backend,
-                 "note": "open-loop Poisson replay of ragged single queries "
-                         "through repro.serving.RetrieverServer; percentile "
-                         "rows are the online latency contract future PRs "
-                         "are compared against"},
+        "meta": common.bench_meta(
+            seed=seed, m=m, d=d, rate_qps=rate, duration_s=duration,
+            ladder=list(LADDER), max_batch=ladder.max_batch,
+            max_wait_us=max_wait_us, first_stage=backend,
+            note="open-loop Poisson replay of ragged single queries "
+                 "through repro.serving.RetrieverServer; percentile "
+                 "rows are the online latency contract future PRs "
+                 "are compared against"),
         "rows": rows,
     }
     if emit_json:
@@ -172,12 +172,14 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
 
 
 def _extend_bench_serving(online: dict) -> None:
-    """Merge the online section into the repo-root BENCH_serving.json,
-    preserving the offline fused-vs-legacy rows written by table2_qps."""
-    path = common.REPO_ROOT / "BENCH_serving.json"
-    merged = json.loads(path.read_text()) if path.exists() else {}
-    merged["online"] = online
-    common.save_bench_root("serving", merged)
+    """Merge the online section into the repo-root BENCH_serving.json with
+    merge-preserve semantics (the BENCH_kernels.json fix): the offline
+    fused-vs-legacy rows written by table2_qps are untouched, ``online`` rows
+    this run did not re-measure survive verbatim, and the section meta is
+    restamped with jax/device/seed provenance."""
+    doc = common.load_bench_root("serving")
+    common.merge_section(doc, "online", online["meta"], online["rows"])
+    common.save_bench_root("serving", doc)
 
 
 if __name__ == "__main__":

@@ -172,15 +172,13 @@ def serving_perf(sizes=(4096, 16384), *, batch: int = 32, d: int = 64,
                             "never touches HBM"},
            "rows": rows}
     if emit_json:
-        # preserve the online-latency section owned by serving_online.py:
-        # the two benches extend the same BENCH_serving.json trail
-        import json as _json
-
-        path = common.REPO_ROOT / "BENCH_serving.json"
-        if path.exists():
-            online = _json.loads(path.read_text()).get("online")
-            if online is not None:
-                out["online"] = online
+        # preserve every section owned by the other serving benches
+        # (serving_online.py's "online", serving_fleet.py's "replicated"/
+        # "overload"): this bench owns only the top-level meta + rows
+        prev = common.load_bench_root("serving")
+        for section, body in prev.items():
+            if section not in ("meta", "rows"):
+                out[section] = body
         common.save_bench_root("serving", out)
     bad = [r["op"] for r in rows if not r["parity"]]
     if bad:

@@ -1,0 +1,33 @@
+"""Fleet serving: a replicated router over the online serving runtime.
+
+The production operating point above :mod:`repro.serving`'s single-worker
+``RetrieverServer``:
+
+* :mod:`repro.fleet.replica` — replica factory (``retriever.clone()`` per
+  replica: shared immutable index + OLS solver, private compile caches)
+  and ladder×rung warmup.
+* :mod:`repro.fleet.router` — :class:`Router`: least-outstanding dispatch
+  over N replicas, fleet admission control (typed :class:`Overloaded`),
+  per-request deadlines (typed :class:`DeadlineExceeded`), health
+  monitoring with quarantine + exactly-once re-dispatch, and the
+  snapshot-consistent ``add()`` write barrier.
+* :mod:`repro.fleet.slo` — :class:`SLOController`: windowed-p99 breach →
+  walk ``SearchParams`` down the pre-compiled nprobe/k' rung ladder,
+  hysteretic recovery; :func:`build_rungs` builds the ladder.
+"""
+from repro.fleet.replica import clone_replicas, warm_replicas
+from repro.fleet.router import FleetStats, Router
+from repro.fleet.slo import RungTransition, SLOController, build_rungs
+from repro.serving.server import DeadlineExceeded, Overloaded
+
+__all__ = [
+    "DeadlineExceeded",
+    "FleetStats",
+    "Overloaded",
+    "Router",
+    "RungTransition",
+    "SLOController",
+    "build_rungs",
+    "clone_replicas",
+    "warm_replicas",
+]

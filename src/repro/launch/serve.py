@@ -30,6 +30,16 @@ compiled-fn count against the bucket-ladder bound:
 
   PYTHONPATH=src python -m repro.launch.serve --m 8000 --online \\
       --online-rate 200 --online-duration 10
+
+``--fleet N`` serves the same Poisson replay through ``repro.fleet.Router``
+fronting N replicas (least-outstanding dispatch, per-request deadlines via
+``--fleet-deadline-ms``, admission control via ``--fleet-queue-depth``, and
+— with ``--fleet-slo-ms`` — the SLO controller walking the rung ladder
+under load).  Reports the fleet percentiles, achieved-vs-offered QPS,
+reject rate, and any rung transitions:
+
+  PYTHONPATH=src python -m repro.launch.serve --m 8000 --fleet 2 \\
+      --online-rate 400 --fleet-slo-ms 50
 """
 from __future__ import annotations
 
@@ -141,6 +151,56 @@ def serve_online(retriever, args):
     return report
 
 
+def serve_fleet(retriever, args):
+    """Fleet operating point: the --online Poisson replay through a
+    replicated Router — deadlines, admission control, and (optionally) the
+    SLO-adaptive rung ladder.  Prints the fleet row + any rung transitions."""
+    from repro.fleet import Router, SLOController, build_rungs, \
+        clone_replicas, warm_replicas
+    from repro.serving import BucketLadder, poisson_trace, ragged_queries, \
+        replay
+
+    ladder = BucketLadder(tuple(int(t) for t in args.online_ladder.split(",")),
+                          max_batch=args.online_max_batch)
+    queries = ragged_queries(256, retriever.cfg.d,
+                             tq_range=(2, ladder.tq_ladder[-1]), seed=17)
+    arrivals = poisson_trace(args.online_rate, args.online_duration, seed=18)
+
+    reps = clone_replicas(retriever, args.fleet)
+    slo = None
+    params_list = (None,)
+    if args.fleet_slo_ms is not None:
+        rungs = build_rungs(retriever)
+        slo = SLOController(rungs, target_p99_ms=args.fleet_slo_ms)
+        params_list = rungs
+    warmed = warm_replicas(reps, ladder, retriever.cfg.d,
+                           params_list=params_list)
+    deadline_s = (args.fleet_deadline_ms / 1e3
+                  if args.fleet_deadline_ms is not None else None)
+    with Router(reps, ladder=ladder, max_wait_us=args.online_max_wait_us,
+                max_queue_depth=args.fleet_queue_depth,
+                default_deadline_s=deadline_s, slo=slo) as router:
+        _, report = replay(router, queries, arrivals)
+        bound = router.compile_bound(len(params_list))
+        traces = router.trace_count()
+        print(f"[serve] fleet replicas={args.fleet} "
+              f"rate={args.online_rate:g}qps "
+              f"p50={report['p50_ms']:.2f}ms p99={report['p99_ms']:.2f}ms "
+              f"achieved={report['qps']:.0f}qps "
+              f"rejected={report['n_rejected']} expired={report['n_expired']} "
+              f"lost={report['n_lost']} healthy={router.n_healthy} "
+              f"jit_traces={traces}/{bound} (warmed {warmed})")
+        if slo is not None:
+            for tr in slo.transitions:
+                print(f"[serve]   slo {tr.direction}: rung {tr.from_rung} -> "
+                      f"{tr.to_rung} (p99 {tr.p99_ms:.1f}ms, "
+                      f"target {tr.target_ms:.1f}ms)")
+            print(f"[serve]   slo final rung={slo.rung}/{len(slo.rungs) - 1}")
+        assert traces <= bound, "bucket-ladder compile bound blown"
+        assert report["n_lost"] == 0, "fleet lost requests without an outcome"
+    return report
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--m", type=int, default=8000)
@@ -168,6 +228,19 @@ def main(argv=None):
                    help="comma Tq bucket ladder for --online")
     p.add_argument("--online-max-batch", type=int, default=8)
     p.add_argument("--online-max-wait-us", type=int, default=2000)
+    p.add_argument("--fleet", type=int, default=0, metavar="N",
+                   help="also serve the Poisson replay through a Router "
+                        "fronting N replicas (reuses the --online-* knobs)")
+    p.add_argument("--fleet-queue-depth", type=int, default=128,
+                   help="fleet admission bound: outstanding requests beyond "
+                        "this are rejected with a typed Overloaded")
+    p.add_argument("--fleet-deadline-ms", type=float, default=None,
+                   help="per-request deadline for --fleet; expired requests "
+                        "resolve with a typed DeadlineExceeded")
+    p.add_argument("--fleet-slo-ms", type=float, default=None,
+                   help="attach the SLO controller with this p99 target; "
+                        "sustained breach walks SearchParams down the "
+                        "pre-compiled rung ladder")
     args = p.parse_args(argv)
 
     if args.mesh:
@@ -222,6 +295,9 @@ def main(argv=None):
 
     if args.online:
         serve_online(retriever, args)
+
+    if args.fleet:
+        serve_fleet(retriever, args)
 
 
 if __name__ == "__main__":

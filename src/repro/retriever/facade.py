@@ -293,6 +293,21 @@ class LemurRetriever:
         self._version += 1
         return self
 
+    def clone(self) -> "LemurRetriever":
+        """An independent replica over the SAME built state — zero re-train,
+        zero re-build.  The immutable ``LemurIndex`` and the OLS solver state
+        are shared (both are read-only under search; ``add()`` swaps the
+        index atomically per-replica), compile caches are private, and
+        ``version`` is carried over so a fleet can stamp every replica to a
+        common snapshot numbering.  Because ``fit_docs`` is deterministic
+        given the shared solver, fanning the same ``add()`` out to every
+        clone produces bit-identical W rows — the invariant the fleet write
+        barrier checks."""
+        r = LemurRetriever(self._index, solver_state=self._solver,
+                           x_ols=self._x_ols)
+        r._version = self._version
+        return r
+
     def shard(self, mesh, *, sq8: bool | None = None,
               k_prime_local: int | None = None):
         """Multi-device serving: a :class:`~repro.retriever.sharded.

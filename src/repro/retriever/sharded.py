@@ -208,6 +208,15 @@ class ShardedLemurRetriever:
             out[shape] = out.get(shape, 0) + n
         return out
 
+    def clone(self) -> "ShardedLemurRetriever":
+        """An independent replica over a clone of the base facade (shared
+        immutable index + OLS solver, private compile caches and sharded
+        state) on the SAME mesh — the fleet router's replica factory for
+        multi-device serving."""
+        return ShardedLemurRetriever(self._base.clone(), self._mesh,
+                                     sq8=self._sq8,
+                                     k_prime_local=self._k_prime_local)
+
     # -- growth -------------------------------------------------------------
 
     def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> "ShardedLemurRetriever":

@@ -18,11 +18,18 @@ from repro.serving.replay import (
     replay,
     warm_buckets,
 )
-from repro.serving.server import RetrieverServer, ServerStats
+from repro.serving.server import (
+    DeadlineExceeded,
+    Overloaded,
+    RetrieverServer,
+    ServerStats,
+)
 
 __all__ = [
     "BucketLadder",
     "DEFAULT_TQ_LADDER",
+    "DeadlineExceeded",
+    "Overloaded",
     "RetrieverServer",
     "ServerStats",
     "pad_single",

@@ -21,14 +21,32 @@ facade (or its sharded twin) into an online service:
   the worker then applies ``retriever.add`` atomically between
   micro-batches (the worker is the only thread touching the retriever),
   and every later search sees the grown corpus.
+* **Deadlines.**  ``submit(..., deadline_s=...)`` bounds how long a request
+  may wait for service: a request whose deadline has passed when the worker
+  would admit it to a micro-batch resolves with a typed
+  :class:`DeadlineExceeded` (a ``TimeoutError`` subclass carrying the
+  request id) instead of being served late — expired requests never occupy
+  a micro-batch slot and are never silently dropped.  Deadlines gate batch
+  ADMISSION: a request that expires while its batch is already executing
+  still resolves with its (late) result — XLA calls are not preempted.
+* **Admission control.**  ``max_queue_depth`` bounds the queue: when full,
+  ``submit()`` raises a typed :class:`Overloaded` instead of accepting
+  unbounded latency.  Rejected requests are never enqueued, so they can
+  never consume a micro-batch slot.  ``add()`` is exempt — growth ops must
+  land on every replica for fleet snapshot consistency.
 * **Observability.**  :class:`ServerStats` tracks per-request latency
-  percentiles (p50/p95/p99), QPS over the serving window, micro-batch
-  occupancy and bucket histograms; ``trace_count()``/``trace_shapes()``
-  pass through to the underlying retriever.
+  percentiles (p50/p95/p99) measured from each request's *scheduled arrival*
+  (``t_arrival``, free of coordinated omission under open-loop replay) with
+  the submit-call-relative twins alongside (``submit_p*_ms``), QPS over the
+  serving window, micro-batch occupancy and bucket histograms, and
+  rejected/expired counters; ``trace_count()``/``trace_shapes()`` pass
+  through to the underlying retriever.
 
 The server works over any object with the facade serving surface
 (``search``/``add``/``resolve``/``trace_count``) — both ``LemurRetriever``
-and ``ShardedLemurRetriever``.
+and ``ShardedLemurRetriever``.  ``pause()``/``resume()`` wedge the worker
+without losing queue state — the chaos hook the fleet router's health
+monitor and the drain-ordering tests are built on.
 """
 from __future__ import annotations
 
@@ -44,6 +62,30 @@ from repro.serving.buckets import BucketLadder
 
 
 # --------------------------------------------------------------------------
+# typed serving outcomes
+# --------------------------------------------------------------------------
+
+class DeadlineExceeded(TimeoutError):
+    """A request's deadline expired before it was admitted to a micro-batch.
+
+    Set as the future's exception (never a silent drop), so callers always
+    observe a typed timeout.  ``request_id`` identifies the request."""
+
+    def __init__(self, request_id: int | None = None, waited_s: float = 0.0):
+        self.request_id = request_id
+        self.waited_s = waited_s
+        super().__init__(
+            f"request {request_id} deadline exceeded after {waited_s*1e3:.1f}ms")
+
+
+class Overloaded(RuntimeError):
+    """Admission control rejected a request: the queue (or the fleet) is at
+    its depth bound.  Raised synchronously by ``RetrieverServer.submit`` and
+    set as the future's exception by the fleet ``Router`` — either way the
+    request never consumes a micro-batch slot."""
+
+
+# --------------------------------------------------------------------------
 # stats
 # --------------------------------------------------------------------------
 
@@ -56,19 +98,29 @@ class ServerStats:
 
     def __init__(self, window: int = 100_000):
         self._lock = threading.Lock()
+        # primary latencies: from each request's scheduled ARRIVAL time
+        # (t_arrival; == the submit call unless the submitter passes the
+        # scheduled offset) — the coordinated-omission-free measurement
         self._latencies: collections.deque[float] = collections.deque(
+            maxlen=window)
+        # submit-call-relative twins: the pre-fix optimistic measurement,
+        # kept so replays can assert the two diverge under submit-side stall
+        self._submit_lat: collections.deque[float] = collections.deque(
             maxlen=window)
         self._occupancy = collections.Counter()   # n_real per micro-batch
         self._buckets = collections.Counter()     # (batch_bucket, tq_bucket)
         self._n_requests = 0
         self._n_batches = 0
+        self._n_rejected = 0
+        self._n_expired = 0
         self._t_first: float | None = None
         self._t_last: float | None = None
 
-    def record_batch(self, latencies_s, n_real: int, batch_bucket: int,
-                     tq_bucket: int, t_done: float) -> None:
+    def record_batch(self, latencies_s, submit_latencies_s, n_real: int,
+                     batch_bucket: int, tq_bucket: int, t_done: float) -> None:
         with self._lock:
             self._latencies.extend(latencies_s)
+            self._submit_lat.extend(submit_latencies_s)
             self._n_requests += len(latencies_s)
             self._occupancy[n_real] += 1
             self._buckets[(batch_bucket, tq_bucket)] += 1
@@ -76,6 +128,24 @@ class ServerStats:
             if self._t_first is None:
                 self._t_first = t_done
             self._t_last = t_done
+
+    def record_rejected(self, n: int = 1) -> None:
+        with self._lock:
+            self._n_rejected += n
+
+    def record_expired(self, n: int = 1) -> None:
+        with self._lock:
+            self._n_expired += n
+
+    @property
+    def n_rejected(self) -> int:
+        with self._lock:
+            return self._n_rejected
+
+    @property
+    def n_expired(self) -> int:
+        with self._lock:
+            return self._n_expired
 
     @property
     def n_requests(self) -> int:
@@ -97,7 +167,10 @@ class ServerStats:
 
     def summary(self) -> dict:
         """One JSON-able dict: percentiles, QPS over the serving window,
-        occupancy/bucket histograms."""
+        occupancy/bucket histograms, reject/expiry counters.  ``p*_ms`` are
+        measured from scheduled arrival; ``submit_p*_ms`` from the (possibly
+        delayed) submit call — under open-loop backlog only the former is
+        honest (coordinated omission)."""
         pct = self.percentiles()
         with self._lock:
             n = self._n_requests
@@ -111,11 +184,19 @@ class ServerStats:
             mean_ms = (float(np.mean(np.fromiter(self._latencies,
                                                  np.float64)) * 1e3)
                        if self._latencies else float("nan"))
+            sub = np.fromiter(self._submit_lat, np.float64)
+            sub_pct = ({f"submit_p{q}_ms": float(np.percentile(sub, q) * 1e3)
+                        for q in (50, 95, 99)} if sub.size else
+                       {f"submit_p{q}_ms": float("nan") for q in (50, 95, 99)})
+            n_rejected, n_expired = self._n_rejected, self._n_expired
         return {
             "n_requests": n,
             "n_batches": n_batches,
+            "n_rejected": n_rejected,
+            "n_expired": n_expired,
             "mean_ms": mean_ms,
             **{f"{k}_ms": v for k, v in pct.items()},
+            **sub_pct,
             "qps": n / span if span > 0 else float("nan"),
             "mean_occupancy": n / max(n_batches, 1),
             "occupancy_hist": occ,
@@ -134,7 +215,9 @@ class _Search:
     qm: np.ndarray           # (Tq,) bool
     params: object           # resolved SearchParams (hashable group key)
     future: Future
-    t_submit: float
+    t_submit: float          # when submit() was called
+    t_arrival: float         # scheduled arrival (== t_submit unless passed)
+    deadline: float | None   # absolute perf_counter bound, or None
 
 
 @dataclasses.dataclass
@@ -161,17 +244,21 @@ class RetrieverServer:
     """
 
     def __init__(self, retriever, *, ladder: BucketLadder | None = None,
-                 max_wait_us: int = 2000, default_params=None):
+                 max_wait_us: int = 2000, default_params=None,
+                 max_queue_depth: int | None = None):
         self._retriever = retriever
         self._ladder = ladder or BucketLadder()
         self._max_wait_s = max_wait_us / 1e6
         self._default_params = default_params
+        self._max_queue_depth = max_queue_depth
         self._queue: collections.deque = collections.deque()
         self._cond = threading.Condition()
         self._stats = ServerStats()
         self._rid = 0
         self._stopping = False
         self._drain = True
+        self._paused = False
+        self._progress_t = time.perf_counter()
         self._worker: threading.Thread | None = None
 
     # -- lifecycle ----------------------------------------------------------
@@ -236,6 +323,28 @@ class RetrieverServer:
         with self._cond:
             return len(self._queue)
 
+    @property
+    def progress_time(self) -> float:
+        """perf_counter of the worker's last sign of life: a batch or add
+        completing, or the queue observed empty.  Enqueues also stamp it, so
+        a stall window always starts at the oldest unserved work — the fleet
+        router's health monitor quarantines a replica whose queue is
+        non-empty but whose ``progress_time`` is stale."""
+        return self._progress_t
+
+    def pause(self) -> None:
+        """Wedge the worker at its loop top WITHOUT losing queue state — a
+        chaos/test hook simulating a replica that stops draining.  Queued
+        requests stay queued; ``submit()`` keeps accepting."""
+        with self._cond:
+            self._paused = True
+            self._cond.notify_all()
+
+    def resume(self) -> None:
+        with self._cond:
+            self._paused = False
+            self._cond.notify_all()
+
     def trace_count(self, params=None) -> int:
         return self._retriever.trace_count(params)
 
@@ -247,11 +356,22 @@ class RetrieverServer:
 
     # -- client surface -----------------------------------------------------
 
-    def submit(self, q_tokens, q_mask=None, params=None) -> Future:
+    def submit(self, q_tokens, q_mask=None, params=None, *,
+               deadline_s: float | None = None,
+               deadline_at: float | None = None,
+               t_arrival: float | None = None) -> Future:
         """Enqueue one ragged query — ``q_tokens: (Tq, d)`` (a leading
         singleton batch axis is accepted and squeezed).  Returns a future
         resolving to ``(scores (k,), ids (k,))`` with ``future.request_id``
-        set; FIFO submission order is preserved relative to ``add()``."""
+        set; FIFO submission order is preserved relative to ``add()``.
+
+        ``t_arrival`` is the request's scheduled arrival (perf_counter
+        offset) — open-loop replays pass it so latency is measured from the
+        schedule, not the (possibly delayed) submit call.  ``deadline_s`` is
+        relative to the arrival; ``deadline_at`` (absolute) takes precedence
+        and lets the fleet router preserve a deadline across re-dispatch.
+        Raises :class:`Overloaded` when ``max_queue_depth`` is hit — the
+        rejected request never consumes a micro-batch slot."""
         q = np.asarray(q_tokens, np.float32)
         if q.ndim == 3 and q.shape[0] == 1:
             q = q[0]
@@ -265,21 +385,34 @@ class RetrieverServer:
             raise ValueError(f"mask {qm.shape} does not match query {q.shape}")
         resolved = self._retriever.resolve(
             params if params is not None else self._default_params)
+        now = time.perf_counter()
+        arrival = now if t_arrival is None else float(t_arrival)
+        deadline = (float(deadline_at) if deadline_at is not None
+                    else arrival + deadline_s if deadline_s is not None
+                    else None)
         fut: Future = Future()
         with self._cond:
             if self._stopping:
                 raise RuntimeError("server is stopped")
+            if (self._max_queue_depth is not None
+                    and len(self._queue) >= self._max_queue_depth):
+                self._stats.record_rejected()
+                raise Overloaded(
+                    f"queue depth {len(self._queue)} at bound "
+                    f"{self._max_queue_depth}")
             self._rid += 1
             fut.request_id = self._rid
             self._queue.append(_Search(self._rid, q, qm, resolved, fut,
-                                       time.perf_counter()))
+                                       now, arrival, deadline))
+            self._progress_t = max(self._progress_t, now)
             self._cond.notify_all()
         return fut
 
     def search(self, q_tokens, q_mask=None, params=None,
-               timeout: float | None = 60.0):
+               timeout: float | None = 60.0, **submit_kw):
         """Blocking convenience wrapper: ``submit(...).result(timeout)``."""
-        return self.submit(q_tokens, q_mask, params).result(timeout)
+        return self.submit(q_tokens, q_mask, params,
+                           **submit_kw).result(timeout)
 
     def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> Future:
         """Enqueue streaming growth.  Acts as a FIFO barrier: earlier
@@ -301,9 +434,16 @@ class RetrieverServer:
         while True:
             batch: list[_Search] = []
             add_op: _Add | None = None
+            expired: list[_Search] = []
             with self._cond:
-                while not self._queue and not self._stopping:
-                    self._cond.wait()
+                # wedge while paused (unless a non-drain stop must cancel),
+                # or while idle; an idle queue is a sign of life
+                while ((self._paused
+                        and not (self._stopping and not self._drain))
+                       or (not self._queue and not self._stopping)):
+                    if not self._queue and not self._paused:
+                        self._progress_t = time.perf_counter()
+                    self._cond.wait(timeout=0.05 if self._paused else None)
                 if not self._queue and self._stopping:
                     return
                 if self._stopping and not self._drain:
@@ -311,15 +451,50 @@ class RetrieverServer:
                         op.future.cancel()
                     self._queue.clear()
                     return
-                head = self._queue[0]
-                if isinstance(head, _Add):
-                    add_op = self._queue.popleft()
-                else:
-                    batch = self._collect_batch(head)
+                # deadline sweep: pull expired searches out of the queue now,
+                # resolve them typed once the lock is dropped
+                now = time.perf_counter()
+                expired = [op for op in self._queue
+                           if isinstance(op, _Search)
+                           and op.deadline is not None and now > op.deadline]
+                if expired:
+                    gone = set(map(id, expired))
+                    kept = [op for op in self._queue if id(op) not in gone]
+                    self._queue.clear()
+                    self._queue.extend(kept)
+                if self._queue:
+                    if self._stopping and self._drain:
+                        # drain ordering guarantee: pending add() barriers are
+                        # flushed BEFORE the remaining searches are served, so
+                        # drained results reflect the final snapshot version
+                        adds = [op for op in self._queue
+                                if isinstance(op, _Add)]
+                        if adds and not isinstance(self._queue[0], _Add):
+                            rest = [op for op in self._queue
+                                    if not isinstance(op, _Add)]
+                            self._queue.clear()
+                            self._queue.extend(adds + rest)
+                    head = self._queue[0]
+                    if isinstance(head, _Add):
+                        add_op = self._queue.popleft()
+                    else:
+                        batch = self._collect_batch(head)
+            if expired:
+                self._resolve_expired(expired)
             if add_op is not None:
                 self._apply_add(add_op)
             elif batch:
                 self._run_batch(batch)
+
+    def _resolve_expired(self, expired: list[_Search]) -> None:
+        """Resolve swept requests with a typed :class:`DeadlineExceeded` —
+        never a silent drop.  Called without the lock held."""
+        now = time.perf_counter()
+        self._stats.record_expired(len(expired))
+        for op in expired:
+            if not op.future.cancelled():
+                op.future.set_exception(
+                    DeadlineExceeded(op.rid, now - op.t_arrival))
 
     def _collect_batch(self, head: _Search) -> list[_Search]:
         """Coalesce queue entries sharing head's (Tq bucket, params) group,
@@ -330,9 +505,12 @@ class RetrieverServer:
 
         def matching() -> list[_Search]:
             out = []
+            now = time.perf_counter()
             for op in self._queue:
                 if isinstance(op, _Add):
                     break  # adds are barriers: never batch across one
+                if op.deadline is not None and now > op.deadline:
+                    continue  # expired: swept at loop top, never takes a slot
                 if (self._ladder.tq_bucket(op.q.shape[0]), op.params) == key:
                     out.append(op)
                     if len(out) == self._ladder.max_batch:
@@ -340,7 +518,8 @@ class RetrieverServer:
             return out
 
         batch = matching()
-        while (len(batch) < self._ladder.max_batch and not self._stopping):
+        while (len(batch) < self._ladder.max_batch and not self._stopping
+               and not self._paused):
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
                 break
@@ -353,6 +532,20 @@ class RetrieverServer:
         return batch
 
     def _run_batch(self, batch: list[_Search]) -> None:
+        # last-chance expiry filter: a request whose deadline passed during
+        # collection resolves typed and never occupies a micro-batch slot
+        now = time.perf_counter()
+        stale = [op for op in batch
+                 if op.deadline is not None and now > op.deadline]
+        if stale:
+            self._resolve_expired(stale)
+            gone = set(map(id, stale))
+            batch = [op for op in batch if id(op) not in gone]
+            if not batch:
+                return
+        # a batch entering execution is progress too: without this stamp a
+        # long (e.g. freshly-invalidated-compile) batch looks like a stall
+        self._progress_t = time.perf_counter()
         try:
             q, qm, n_real = self._ladder.pad_batch(
                 [op.q for op in batch], [op.qm for op in batch])
@@ -364,10 +557,12 @@ class RetrieverServer:
                 op.future.set_exception(e)
             return
         t_done = time.perf_counter()
+        self._progress_t = t_done
         # record stats BEFORE resolving any future: a client unblocked by the
         # last result may immediately read/reset the stats window, and this
         # batch must already be in it
-        self._stats.record_batch([t_done - op.t_submit for op in batch],
+        self._stats.record_batch([t_done - op.t_arrival for op in batch],
+                                 [t_done - op.t_submit for op in batch],
                                  n_real, q.shape[0], q.shape[1], t_done)
         version = getattr(self._retriever, "version", None)
         for i, op in enumerate(batch):
@@ -376,12 +571,17 @@ class RetrieverServer:
             op.future.set_result((scores[i], ids[i]))
 
     def _apply_add(self, op: _Add) -> None:
+        self._progress_t = time.perf_counter()
         try:
             self._retriever.add(op.doc_tokens, op.doc_mask, seed=op.seed)
         except Exception as e:  # noqa: BLE001
             op.future.set_exception(e)
             return
+        self._progress_t = time.perf_counter()
+        # which snapshot this barrier produced — the fleet write barrier
+        # asserts every replica lands on the same version
+        op.future.snapshot_version = getattr(self._retriever, "version", None)
         op.future.set_result(self._retriever.m)
 
 
-__all__ = ["RetrieverServer", "ServerStats"]
+__all__ = ["RetrieverServer", "ServerStats", "DeadlineExceeded", "Overloaded"]

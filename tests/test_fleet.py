@@ -1,0 +1,528 @@
+"""Fleet serving conformance (repro.fleet).
+
+The router's contracts, each driven deterministically:
+
+* **Replica cloning** — ``clone()`` shares the built state, answers
+  bit-identically, and isolates growth per clone until fanned out.
+* **Deadlines + admission, all five backends** — an expired request
+  resolves with a typed ``DeadlineExceeded`` (never a silent drop),
+  rejected requests raise/resolve a typed ``Overloaded`` and never consume
+  a micro-batch slot (server ``n_requests`` counts only served requests).
+* **Router parity + exactly-once** — fleet answers are bit-identical to a
+  direct ``retriever.search``; the submit/add interleaving property from
+  ``test_serving_runtime.py`` extends through a 3-replica router with a
+  mid-stream replica kill: no dropped, duplicated, or cross-wired ids.
+* **Write barrier** — ``add()`` resolves only when every replica landed on
+  the same ``snapshot_version``; a paused replica holds the barrier; a
+  quarantined replica is excused.
+* **Health** — a replica that stops draining with outstanding work is
+  quarantined by the monitor and its requests complete elsewhere.
+* **SLO controller** — breach walks one rung down, recovery is hysteretic
+  (``hold`` clean evaluations below ``recover_frac * target``), every
+  logged transition is consistent with the p99 that triggered it, and the
+  rung ladder stays within the pre-compiled bound.
+
+Every wait carries a timeout so a deadlocked router fails, not hangs.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.anns import registry
+from repro.core import LemurConfig
+from repro.data import synthetic
+from repro.retriever import LemurRetriever, SearchParams
+from repro.serving import (
+    BucketLadder,
+    DeadlineExceeded,
+    Overloaded,
+    RetrieverServer,
+)
+from repro.fleet import (
+    Router,
+    SLOController,
+    build_rungs,
+    clone_replicas,
+    warm_replicas,
+)
+
+BACKENDS = registry.list_backends()
+TIMEOUT = 120.0
+
+
+@pytest.fixture(scope="module")
+def base(tiny_corpus):
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=128, n_train=1024,
+                      n_ols=512, epochs=4, k=5, k_prime=60, anns="bruteforce")
+    return LemurRetriever.build(tiny_corpus, cfg, key=jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def small(tiny_corpus):
+    """Tiny fast-growing retriever for interleaving/kill properties (same
+    shape as test_serving_runtime.small)."""
+    import dataclasses as dc
+
+    sub = dc.replace(tiny_corpus,
+                     doc_tokens=tiny_corpus.doc_tokens[:60],
+                     doc_mask=tiny_corpus.doc_mask[:60],
+                     topics=tiny_corpus.topics[:60])
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=48, n_train=512, n_ols=256,
+                      epochs=3, k=3, k_prime=512, anns="bruteforce")
+    return LemurRetriever.build(sub, cfg, key=jax.random.PRNGKey(0)), sub
+
+
+def _ragged_query(tq: int, d: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((tq, d)).astype(np.float32)
+    return q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+
+
+def _direct(r, q: np.ndarray, params):
+    s, ids = r.search(q[None], np.ones((1, q.shape[0]), bool), params)
+    return np.asarray(s)[0], np.asarray(ids)[0]
+
+
+# --------------------------------------------------------------------------
+# replica cloning
+# --------------------------------------------------------------------------
+
+def test_clone_shares_state_and_answers_identically(base):
+    c1, c2 = clone_replicas(base, 2)
+    assert c1 is not base and c1 is not c2
+    assert c1.index is base.index          # shared immutable snapshot
+    assert c1.version == base.version
+    q = _ragged_query(7, base.cfg.d, seed=3)
+    _, want = _direct(base, q, None)
+    for c in (c1, c2):
+        assert np.array_equal(_direct(c, q, None)[1], want)
+
+
+def test_clone_add_is_deterministic_and_isolated(base):
+    c1, c2 = clone_replicas(base, 2)
+    grow = synthetic.make_corpus(m=3, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=77)
+    c1.add(grow.doc_tokens, grow.doc_mask)
+    assert (c1.m, c1.version) == (base.m + 3, 1)
+    assert (c2.m, c2.version) == (base.m, 0), "add leaked across clones"
+    assert base.m == c2.m, "add mutated the source retriever"
+    # fan the same add out to the second clone: bit-identical W rows — the
+    # invariant the fleet write barrier relies on
+    c2.add(grow.doc_tokens, grow.doc_mask)
+    np.testing.assert_array_equal(np.asarray(c1.index.W),
+                                  np.asarray(c2.index.W))
+
+
+# --------------------------------------------------------------------------
+# deadlines + admission control, every backend (satellite)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_deadline_and_admission_typed_outcomes(name, base):
+    r = base.with_backend(name, key=jax.random.PRNGKey(1)).clone()
+    ladder = BucketLadder((8,), 2)
+    q = _ragged_query(6, base.cfg.d, seed=1)
+    with RetrieverServer(r, ladder=ladder, max_wait_us=200,
+                         max_queue_depth=3) as srv:
+        _, want = srv.search(q, timeout=TIMEOUT)     # warm + sanity
+        # -- deadline expiry: typed, never silent -------------------------
+        srv.pause()
+        expired = srv.submit(q, deadline_s=0.05)
+        live = srv.submit(q)
+        time.sleep(0.15)
+        srv.resume()
+        with pytest.raises(DeadlineExceeded) as ei:
+            expired.result(timeout=TIMEOUT)
+        assert ei.value.request_id == expired.request_id
+        assert ei.value.waited_s >= 0.05
+        assert np.array_equal(live.result(timeout=TIMEOUT)[1], want)
+        assert srv.stats.n_expired == 1
+        # -- admission control: typed reject, zero slots consumed ---------
+        srv.pause()
+        accepted = [srv.submit(q) for _ in range(3)]
+        with pytest.raises(Overloaded):
+            srv.submit(q)
+        srv.resume()
+        for f in accepted:
+            assert np.array_equal(f.result(timeout=TIMEOUT)[1], want)
+        assert srv.stats.n_rejected == 1
+    summary = srv.stats.summary()
+    # served = warm + live + 3 accepted; the expired and rejected requests
+    # never occupied a micro-batch slot
+    assert summary["n_requests"] == 5
+    assert summary["n_expired"] == 1 and summary["n_rejected"] == 1
+
+
+def test_expired_request_never_joins_a_batch(base):
+    """An expired request queued BEHIND live ones is swept typed while the
+    live ones coalesce without it."""
+    r = base.clone()
+    ladder = BucketLadder((8,), 4)
+    q = _ragged_query(5, base.cfg.d, seed=2)
+    with RetrieverServer(r, ladder=ladder, max_wait_us=200) as srv:
+        srv.search(q, timeout=TIMEOUT)
+        srv.pause()
+        doomed = srv.submit(q, deadline_s=0.05)
+        live = [srv.submit(q) for _ in range(3)]
+        time.sleep(0.15)
+        srv.resume()
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=TIMEOUT)
+        for f in live:
+            f.result(timeout=TIMEOUT)
+    hist = srv.stats.summary()["occupancy_hist"]
+    assert 4 not in hist, f"expired request joined a batch: {hist}"
+
+
+# --------------------------------------------------------------------------
+# router: parity, least-outstanding dispatch, exactly-once under kill
+# --------------------------------------------------------------------------
+
+def test_router_parity_and_dispatch_balance(base):
+    reps = clone_replicas(base, 3)
+    ladder = BucketLadder((8, 16), 4)
+    warm_replicas(reps, ladder, base.cfg.d)
+    with Router(reps, ladder=ladder, max_wait_us=200,
+                stall_timeout_s=30.0) as router:
+        # pause every replica so outstanding counts accumulate during the
+        # submit burst — least-outstanding dispatch then MUST spread the
+        # requests across all three (with live replicas a fast worker can
+        # legitimately drain each request before the next submit arrives,
+        # which makes the balance assertion timing-dependent)
+        for srv in router.servers:
+            srv.pause()
+        futs, wants = [], []
+        for i in range(24):
+            q = _ragged_query(3 + (i % 10), base.cfg.d, seed=i)
+            futs.append(router.submit(q))
+            wants.append(_direct(base, q, None)[1])
+        for srv in router.servers:
+            srv.resume()
+        served = set()
+        for f, want in zip(futs, wants):
+            _, ids = f.result(timeout=TIMEOUT)
+            assert np.array_equal(ids, want), "fleet ids diverged from direct"
+            served.add(f.replica)
+        rids = [f.request_id for f in futs]
+        assert len(set(rids)) == len(rids)
+        assert served == {0, 1, 2}, (
+            f"least-outstanding dispatch starved replicas: {served}")
+        assert router.stats.n_completed == 24
+
+
+def test_router_interleaving_with_mid_stream_kill(small):
+    """The submit/add interleaving property through a 3-replica router with
+    a replica killed mid-stream: every request id resolves exactly once to
+    its own query's answer, adds stay snapshot-consistent fleet-wide."""
+    built, sub = small
+    reps = clone_replicas(built, 3)
+    addpool = synthetic.make_corpus(m=16, d=16, avg_tokens=8, max_tokens=12,
+                                    n_centers=24, seed=901)
+    rng = np.random.default_rng(5)
+    params = SearchParams(k_prime=512)
+    ladder = BucketLadder((8, 16), max_batch=4)
+    expected: list[tuple[object, int]] = []
+    adds = []
+    n_added = 0
+    with Router(reps, ladder=ladder, max_wait_us=300, default_params=params,
+                max_queue_depth=None, stall_timeout_s=30.0) as router:
+        for step in range(24):
+            if step == 12:
+                router.kill_replica(1)
+            roll = rng.random()
+            if roll < 0.25 and n_added < addpool.m:
+                adds.append(router.add(
+                    addpool.doc_tokens[n_added:n_added + 1],
+                    addpool.doc_mask[n_added:n_added + 1]))
+                n_added += 1
+            elif roll < 0.6 or n_added == 0:
+                j = int(rng.integers(0, 60))
+                q = sub.doc_tokens[j][sub.doc_mask[j]]
+                expected.append((router.submit(np.asarray(q)), j))
+            else:
+                a = int(rng.integers(0, n_added))
+                q = addpool.doc_tokens[a][addpool.doc_mask[a]]
+                expected.append((router.submit(np.asarray(q)), 60 + a))
+        for fut in adds:
+            assert fut.result(timeout=TIMEOUT) <= 60 + n_added
+        assert router.n_healthy == 2
+        assert router.quarantined() == [1]
+        # every healthy replica landed on the same final snapshot
+        versions = {i: reps[i].version for i in (0, 2)}
+        assert set(versions.values()) == {n_added}, versions
+        tail = router.submit(
+            np.asarray(sub.doc_tokens[0][sub.doc_mask[0]]))
+        tail.result(timeout=TIMEOUT)
+        assert tail.snapshot_version == n_added
+    rids = [f.request_id for f, _ in expected]
+    assert len(set(rids)) == len(rids), "duplicate fleet request ids"
+    for fut, j in expected:
+        assert fut.done(), f"request {fut.request_id} dropped"
+        s, ids = fut.result(timeout=0)
+        assert ids[0] == j, (
+            f"request {fut.request_id} cross-wired: top-1 {ids[0]} != {j}")
+
+
+def test_router_deadline_and_admission(base):
+    reps = clone_replicas(base, 2)
+    ladder = BucketLadder((8,), 2)
+    warm_replicas(reps, ladder, base.cfg.d)
+    q = _ragged_query(6, base.cfg.d, seed=4)
+    with Router(reps, ladder=ladder, max_wait_us=200, max_queue_depth=4,
+                stall_timeout_s=30.0) as router:
+        for srv in router.servers:
+            srv.pause()
+        doomed = router.submit(q, deadline_s=0.05)
+        accepted = [router.submit(q) for _ in range(3)]
+        rejected = router.submit(q)          # outstanding == 4 == bound
+        assert rejected.done()
+        with pytest.raises(Overloaded):
+            rejected.result(timeout=0)
+        time.sleep(0.15)
+        for srv in router.servers:
+            srv.resume()
+        with pytest.raises(DeadlineExceeded) as ei:
+            doomed.result(timeout=TIMEOUT)
+        assert ei.value.request_id == doomed.request_id
+        want = _direct(base, q, None)[1]
+        for f in accepted:
+            assert np.array_equal(f.result(timeout=TIMEOUT)[1], want)
+        assert router.stats.n_rejected == 1
+        assert router.stats.n_expired == 1
+
+
+# --------------------------------------------------------------------------
+# write barrier + health
+# --------------------------------------------------------------------------
+
+def test_add_barrier_waits_for_every_replica(base):
+    reps = clone_replicas(base, 3)
+    grow = synthetic.make_corpus(m=2, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=13)
+    with Router(reps, ladder=BucketLadder((8,), 2),
+                stall_timeout_s=30.0) as router:
+        router.servers[2].pause()
+        af = router.add(grow.doc_tokens, grow.doc_mask)
+        # replicas 0/1 apply (first add compiles, so poll rather than sleep);
+        # the paused replica 2 cannot, and the barrier must hold for it
+        t_end = time.perf_counter() + TIMEOUT
+        while ((reps[0].version < 1 or reps[1].version < 1)
+               and time.perf_counter() < t_end):
+            time.sleep(0.01)
+        assert reps[0].version == 1 and reps[1].version == 1
+        assert not af.done(), "barrier resolved before every replica applied"
+        assert reps[2].version == 0
+        router.servers[2].resume()
+        assert af.result(timeout=TIMEOUT) == base.m + 2
+        assert af.snapshot_version == 1
+        assert {r.version for r in reps} == {1}
+        # post-barrier searches observe the new snapshot on EVERY replica
+        q = np.asarray(grow.doc_tokens[0][grow.doc_mask[0]])
+        for _ in range(6):
+            f = router.submit(q, params=SearchParams(use_ann=False,
+                                                     k_prime=base.m + 2))
+            _, ids = f.result(timeout=TIMEOUT)
+            assert ids[0] == base.m and f.snapshot_version == 1
+
+
+def test_add_barrier_excuses_quarantined_replica(base):
+    reps = clone_replicas(base, 3)
+    grow = synthetic.make_corpus(m=2, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=14)
+    with Router(reps, ladder=BucketLadder((8,), 2),
+                stall_timeout_s=30.0) as router:
+        router.servers[1].pause()
+        af = router.add(grow.doc_tokens, grow.doc_mask)
+        time.sleep(0.2)
+        assert not af.done()
+        router.quarantine(1, reason="test")
+        assert af.result(timeout=TIMEOUT) == base.m + 2
+        assert af.snapshot_version == 1
+        assert reps[0].version == reps[2].version == 1
+
+
+def test_stalled_replica_quarantined_and_requests_rehomed(base):
+    reps = clone_replicas(base, 2)
+    ladder = BucketLadder((8,), 2)
+    warm_replicas(reps, ladder, base.cfg.d)
+    q = _ragged_query(6, base.cfg.d, seed=6)
+    with Router(reps, ladder=ladder, max_wait_us=200,
+                stall_timeout_s=0.3, health_interval_s=0.05) as router:
+        for _ in range(4):
+            router.search(q, timeout=TIMEOUT)
+        router.servers[0].pause()
+        futs = [router.submit(q) for _ in range(8)]
+        want = _direct(base, q, None)[1]
+        for f in futs:   # stalled replica's share re-dispatched to replica 1
+            assert np.array_equal(f.result(timeout=TIMEOUT)[1], want)
+        deadline = time.monotonic() + 10
+        while 0 not in router.quarantined() and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert router.quarantined() == [0], router.events()
+        ev = [e for e in router.events() if e["replica"] == 0]
+        assert ev and "no progress" in ev[0]["reason"]
+        assert router.stats.n_redispatched > 0
+        assert router.stats.n_completed == 12
+
+
+# --------------------------------------------------------------------------
+# SLO controller
+# --------------------------------------------------------------------------
+
+def test_build_rungs_walks_nprobe_and_k_prime(base):
+    r = base.with_backend("ivf", key=jax.random.PRNGKey(1))
+    rungs = build_rungs(r, n_rungs=3)
+    assert len(rungs) == 3
+    assert rungs[0] == r.resolve(None)
+    for a, b in zip(rungs, rungs[1:]):
+        assert b.k_prime == max(a.k_prime // 2, max(a.k, 8))
+        assert b.backend.nprobe == max(a.backend.nprobe // 2, 1)
+        assert b.k == a.k, "rungs must not change the response contract"
+    # the ladder saturates at the floors instead of emitting duplicates
+    assert len(build_rungs(r, n_rungs=50)) < 50
+    # backends without an nprobe knob still degrade via k_prime
+    rungs_bf = build_rungs(base, n_rungs=2)
+    assert rungs_bf[1].k_prime == rungs_bf[0].k_prime // 2
+
+
+def test_slo_controller_downshift_and_hysteretic_recovery():
+    rungs = ["full", "half", "quarter"]
+    slo = SLOController(rungs, target_p99_ms=10.0, window=8, min_window=4,
+                        eval_every=4, recover_frac=0.7, hold=3)
+    assert slo.params() == "full"
+    # sustained breach: one rung down per evaluation, never past the floor
+    for _ in range(4):
+        slo.observe(0.050)          # 50ms >> 10ms target
+    assert slo.rung == 1
+    for _ in range(4):
+        slo.observe(0.050)
+    assert slo.rung == 2 and slo.params() == "quarter"
+    for _ in range(8):
+        slo.observe(0.050)
+    assert slo.rung == 2, "stepped past the last rung"
+    # mid-band latencies (between recover_frac*target and target): hold
+    for _ in range(16):
+        slo.observe(0.009)          # 9ms: below target, above 7ms recover
+    assert slo.rung == 2, "recovered without clearing the hysteresis band"
+    # clean latencies: recovery needs `hold` consecutive clean evaluations
+    # over an all-clean window
+    for _ in range(8):
+        slo.observe(0.001)
+    assert slo.rung == 2
+    for _ in range(8):
+        slo.observe(0.001)          # 3rd clean evaluation -> step up
+    assert slo.rung == 1
+    for tr in slo.transitions:
+        if tr.direction == "down":
+            assert tr.p99_ms > tr.target_ms
+        else:
+            assert tr.p99_ms < 0.7 * tr.target_ms
+    downs = [t for t in slo.transitions if t.direction == "down"]
+    ups = [t for t in slo.transitions if t.direction == "up"]
+    assert len(downs) == 2 and len(ups) == 1
+
+
+def test_slo_window_cleared_on_transition():
+    slo = SLOController([0, 1], target_p99_ms=10.0, min_window=4,
+                        eval_every=4)
+    for _ in range(4):
+        slo.observe(0.050)
+    assert slo.rung == 1
+    assert np.isnan(slo.windowed_p99_ms()), (
+        "stale pre-transition samples survived the downshift")
+
+
+def test_router_slo_downshift_under_breach_and_recovery(base):
+    """Fleet integration: a breached target walks dispatch down one rung
+    (observable on future.params), a cleared target walks it back up."""
+    r = base.with_backend("ivf", key=jax.random.PRNGKey(1))
+    reps = clone_replicas(r, 2)
+    rungs = build_rungs(reps[0], n_rungs=2)
+    ladder = BucketLadder((8,), 2)
+    warm_replicas(reps, ladder, base.cfg.d, params_list=rungs)
+    slo = SLOController(rungs, target_p99_ms=1e-6, window=32, min_window=4,
+                        eval_every=4, hold=2)
+    q = _ragged_query(6, base.cfg.d, seed=8)
+    with Router(reps, ladder=ladder, max_wait_us=200, slo=slo,
+                stall_timeout_s=30.0) as router:
+        futs = [router.submit(q) for _ in range(8)]
+        for f in futs:
+            f.result(timeout=TIMEOUT)
+        assert slo.rung == 1, "SLO never downshifted under a breached target"
+        assert futs[0].params == rungs[0]
+        # dispatch now rides the degraded rung, with parity at that rung
+        f = router.submit(q)
+        _, ids = f.result(timeout=TIMEOUT)
+        assert f.params == rungs[1]
+        assert np.array_equal(ids, _direct(r, q, rungs[1])[1])
+        # clear the target: hysteretic recovery back to rung 0
+        slo.target_p99_ms = 1e9
+        for _ in range(16):
+            router.search(q, timeout=TIMEOUT)
+        assert slo.rung == 0
+        assert router.submit(q).params == rungs[0]
+        downs = [t for t in slo.transitions if t.direction == "down"]
+        assert downs and all(t.p99_ms > t.target_ms for t in downs)
+
+
+# --------------------------------------------------------------------------
+# fleet overload: typed rejects, nothing lost
+# --------------------------------------------------------------------------
+
+def test_fleet_overload_every_request_accounted(base):
+    reps = clone_replicas(base, 2)
+    ladder = BucketLadder((8,), 2)
+    warm_replicas(reps, ladder, base.cfg.d)
+    q = _ragged_query(6, base.cfg.d, seed=9)
+    with Router(reps, ladder=ladder, max_wait_us=200, max_queue_depth=6,
+                stall_timeout_s=30.0) as router:
+        for srv in router.servers:
+            srv.pause()
+        futs = [router.submit(q) for _ in range(32)]
+        for srv in router.servers:
+            srv.resume()
+        outcomes = {"ok": 0, "rejected": 0}
+        for f in futs:
+            try:
+                f.result(timeout=TIMEOUT)
+                outcomes["ok"] += 1
+            except Overloaded:
+                outcomes["rejected"] += 1
+        assert outcomes["ok"] + outcomes["rejected"] == 32, "requests lost"
+        assert outcomes["ok"] == 6 and outcomes["rejected"] == 26
+        assert router.stats.n_rejected == 26
+        # rejected requests never reached any replica queue
+        served = sum(s.stats.summary()["n_requests"] for s in router.servers)
+        assert served == 6
+
+
+def test_router_submit_thread_safety(base):
+    """Concurrent submitters: ids stay unique, every future resolves."""
+    reps = clone_replicas(base, 2)
+    ladder = BucketLadder((8,), 4)
+    warm_replicas(reps, ladder, base.cfg.d)
+    with Router(reps, ladder=ladder, max_wait_us=500,
+                stall_timeout_s=30.0) as router:
+        futs: list = []
+        lock = threading.Lock()
+
+        def client(seed):
+            for i in range(8):
+                f = router.submit(_ragged_query(4, base.cfg.d,
+                                                seed=seed * 100 + i))
+                with lock:
+                    futs.append(f)
+
+        threads = [threading.Thread(target=client, args=(s,))
+                   for s in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for f in futs:
+            f.result(timeout=TIMEOUT)
+        rids = [f.request_id for f in futs]
+        assert len(set(rids)) == len(rids) == 32
