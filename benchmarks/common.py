@@ -87,9 +87,10 @@ def _cached_retriever(d_prime: int, query_strategy: str = "corpus-query",
         z = np.load(cache)
         psi = {"dense": {"kernel": jnp.asarray(z["k"]), "bias": jnp.asarray(z["b"])},
                "ln": {"scale": jnp.asarray(z["g"]), "bias": jnp.asarray(z["beta"])}}
-        idx = LemurIndex(cfg, psi, TargetStats(jnp.asarray(z["mean"]), jnp.asarray(z["std"])),
-                         jnp.asarray(z["W"]), jnp.asarray(c.doc_tokens),
-                         jnp.asarray(c.doc_mask), "bruteforce", None)
+        idx = LemurIndex.from_dense(
+            cfg, psi, TargetStats(jnp.asarray(z["mean"]), jnp.asarray(z["std"])),
+            jnp.asarray(z["W"]), jnp.asarray(c.doc_tokens),
+            jnp.asarray(c.doc_mask), "bruteforce", None)
         return LemurRetriever(idx).with_backend(backend, key=jax.random.PRNGKey(3),
                                                 cfg=cfg)
     r = LemurRetriever.build(c, cfg, key=jax.random.PRNGKey(0))

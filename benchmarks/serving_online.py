@@ -23,6 +23,14 @@ bench-smoke job fails):
 * **compile bound** — ``trace_count()`` never exceeds the bucket ladder's
   bound, no matter the trace's shape churn.
 
+The ``"mutation"`` section (same merge-preserve contract) is the paged-
+corpus trail: an add/delete/update churn loop under live traffic gating on
+zero lost requests, monotone snapshot versions, ZERO new traces once the
+pool is warm (the streaming-add bugfix contract), tombstoned docs never
+surfacing — plus an ``add_amortization`` row comparing logical bytes moved
+per added doc on the paged store against the flat ``jnp.concatenate``
+layout it replaced (paged must be O(doc), not O(corpus)).
+
   PYTHONPATH=src python -m benchmarks.serving_online                # default
   PYTHONPATH=src python -m benchmarks.serving_online --m 600 --duration 10 \\
       --rate 50 --epochs 4                                          # CI smoke
@@ -32,6 +40,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import time
 
 import numpy as np
 
@@ -43,7 +52,7 @@ LADDER = (8, 16, 32)
 def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
         duration: float = 10.0, max_batch: int = 8, max_wait_us: int = 2000,
         backend: str = "ivf", epochs: int = 10, seed: int = 0,
-        add_docs: int = 32, parity_sample: int = 16,
+        add_docs: int = 32, parity_sample: int = 16, churn_steps: int = 4,
         emit_json: bool = True) -> dict:
     import jax
 
@@ -80,10 +89,15 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
         rng = np.random.default_rng(seed + 3)
         sample = rng.choice(len(results), min(parity_sample, len(results)),
                             replace=False)
+        # parity references run on a clone: private compile caches, so the
+        # raw ragged-shape reference searches never pollute the server's
+        # trace accounting (compiled fns now SURVIVE mutations, so
+        # srv.trace_count() is cumulative across the whole run)
+        ref = retriever.clone()
         parity = True
         for i in sample:
             q = queries[i % len(queries)]
-            _, want = retriever.search(q[None], np.ones((1, len(q)), bool))
+            _, want = ref.search(q[None], np.ones((1, len(q)), bool))
             parity &= bool(np.array_equal(results[i][1], np.asarray(want)[0]))
 
         bound = ladder.compile_bound(1)
@@ -124,8 +138,10 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
             exact = SearchParams(use_ann=False, k_prime=new_m)
             target = extra.doc_tokens[0][extra.doc_mask[0]]
             _, ids = srv.search(np.asarray(target), params=exact, timeout=300)
-            _, want = retriever.search(target[None],
-                                       np.ones((1, len(target)), bool), exact)
+            # clone AFTER the add so the reference sees the grown snapshot,
+            # again keeping its raw-shape compile out of the server cache
+            _, want = retriever.clone().search(
+                target[None], np.ones((1, len(target)), bool), exact)
             add_parity = (bool(np.array_equal(ids, np.asarray(want)[0]))
                           and new_m == m + add_docs
                           and int(ids[0]) == m)
@@ -144,6 +160,12 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
             common.emit("serving_online_add_p99", rows[-1]["p99_ms"] * 1e3,
                         f"parity={add_parity}")
 
+        mut_rows = []
+        if churn_steps:
+            mut_rows = _mutation_phase(
+                srv, retriever, ladder, m=m, d=d, backend=backend, seed=seed,
+                queries=queries, churn_steps=churn_steps)
+
     out = {
         "meta": common.bench_meta(
             seed=seed, m=m, d=d, rate_qps=rate, duration_s=duration,
@@ -154,11 +176,23 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
                  "rows are the online latency contract future PRs "
                  "are compared against"),
         "rows": rows,
+        "mutation": {
+            "meta": common.bench_meta(
+                seed=seed, m=m, d=d, churn_steps=churn_steps,
+                first_stage=backend,
+                note="paged-corpus mutation trail: add/delete/update churn "
+                     "under the online server (zero lost requests, monotone "
+                     "snapshot versions, zero warm-pool traces, tombstones "
+                     "never surface) + the add-amortization contract (paged "
+                     "bytes-per-added-doc is O(doc); the flat layout's was "
+                     "O(corpus))"),
+            "rows": mut_rows,
+        },
     }
     if emit_json:
         _extend_bench_serving(out)
 
-    bad = [r["op"] for r in rows if not r["parity"]]
+    bad = [r["op"] for r in rows + mut_rows if not r["parity"]]
     if bad:
         raise SystemExit(f"online serving parity regression in: {bad}")
     for r in rows:
@@ -168,7 +202,171 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
             raise SystemExit(
                 f"{r['op']}: trace_count {r['trace_count']} exceeded the "
                 f"bucket-ladder compile bound {r['compile_bound']}")
+    for r in mut_rows:
+        if r["op"] == "mutation_churn":
+            if r["n_lost"]:
+                raise SystemExit(f"mutation churn lost {r['n_lost']} requests")
+            if r["trace_delta"]:
+                raise SystemExit(
+                    f"warm-pool mutation churn issued {r['trace_delta']} new "
+                    "traces (streaming-add bugfix contract: must be 0)")
+        if r["op"] == "add_amortization" and not r["o_doc"]:
+            raise SystemExit(
+                f"paged add moved {r['paged_bytes_per_doc']:.0f} B/doc "
+                f"(budget {r['doc_budget_bytes']} B/doc, flat baseline "
+                f"{r['flat_bytes_per_doc']:.0f} B/doc) — not O(doc)")
     return out
+
+
+def _mutation_phase(srv, retriever, ladder, *, m, d, backend, seed, queries,
+                    churn_steps):
+    """Add/delete/update churn through the live server -> ``mutation`` rows.
+
+    One warm-up round first absorbs any one-time power-of-two capacity
+    growth (page pool, slot table, IVF cluster caps); the measured loop
+    then runs against a warm pool, where the paged-store contract is exact:
+    zero new jit traces, every search resolves, every mutation bumps the
+    snapshot version by exactly one, and tombstoned docs never surface in
+    a post-delete search."""
+    from repro.core.pages import dense_add_bytes
+    from repro.data import synthetic
+    from repro.retriever import SearchParams
+
+    t_mut = time.perf_counter()
+    n_add = 4
+    # exact-scan params: the compiled exact path takes ONLY (ψ, stats, paged
+    # store) as arguments, so its zero-new-traces contract depends on the
+    # page pool alone — an IVF cluster-cap bucket growth (a different,
+    # backend-owned capacity) can't blur the gate this bench enforces
+    churn_params = SearchParams(use_ann=False, k=10,
+                                k_prime=min(64, retriever.m))
+
+    def batch(s):
+        c = synthetic.make_corpus(m=n_add, d=d, avg_tokens=12, max_tokens=16,
+                                  seed=s)
+        return c.doc_tokens, c.doc_mask
+
+    # warm-up: one full add/update/delete round (absorbs any one-time pow2
+    # pool/slot growth), plus one search per Tq rung the loop will hit (the
+    # ladder's per-rung first-trace cost is not what this gate measures)
+    toks, mask = batch(seed + 11)
+    f = srv.add(toks, mask)
+    f.result(timeout=300)
+    warm = np.asarray(f.added_ids)
+    upd = srv.update(warm[:2], toks[:2], mask[:2]).result(timeout=300)
+    srv.delete(np.concatenate([warm[2:], np.asarray(upd)])).result(timeout=300)
+    churn_qs = [queries[i % len(queries)] for i in range(3 * churn_steps)]
+    for bucket in {ladder.tq_bucket(len(q)) for q in churn_qs}:
+        q = next(q for q in churn_qs if ladder.tq_bucket(len(q)) == bucket)
+        srv.search(q, params=churn_params, timeout=300)
+
+    v0 = retriever.version
+    traces0 = srv.trace_count()
+    searches, mut_futs, add_futs = [], [], []
+    deleted: list[int] = []
+    live = np.empty((0,), np.int64)
+    for step in range(churn_steps):
+        toks, mask = batch(seed + 20 + step)
+        fa = srv.add(toks, mask)
+        add_futs.append(fa)
+        mut_futs.append(fa)
+        for i in range(3):
+            q = queries[(step * 3 + i) % len(queries)]
+            searches.append(srv.submit(q, np.ones(len(q), bool),
+                                       churn_params))
+        fa.result(timeout=300)
+        ids = np.asarray(fa.added_ids)
+        # delete two of this step's docs, update one of the previous step's
+        fd = srv.delete(ids[:2])
+        mut_futs.append(fd)
+        deleted.extend(ids[:2].tolist())
+        if live.size:
+            fu = srv.update(live[-1:], toks[:1], mask[:1])
+            mut_futs.append(fu)
+            deleted.append(int(live[-1]))
+            live = live[:-1]
+        live = np.concatenate([live, ids[2:]])
+    for f in mut_futs:
+        f.result(timeout=300)
+    n_lost = 0
+    for f in searches:
+        try:
+            f.result(timeout=300)
+        except Exception:  # noqa: BLE001 — a lost/failed request is the gate
+            n_lost += 1
+    versions = [f.snapshot_version for f in mut_futs]
+    monotone = (versions == sorted(versions)
+                and len(set(versions)) == len(versions)
+                and versions[-1] == v0 + len(mut_futs))
+    # the streaming-add bugfix contract, asserted directly: re-issue the
+    # SAME (params, shape) searches the warm-up compiled — after the churn
+    # loop's mutations they must hit the live compiled fns with ZERO new
+    # traces.  (The loop itself may legitimately compile new power-of-two
+    # BATCH buckets as micro-batches coalesce — that ladder cost is bounded
+    # by compile_bound, not by this gate.)
+    churn_trace_delta = srv.trace_count() - traces0
+    t_pre = srv.trace_count()
+    for bucket in {ladder.tq_bucket(len(q)) for q in churn_qs}:
+        q = next(q for q in churn_qs if ladder.tq_bucket(len(q)) == bucket)
+        srv.search(q, params=churn_params, timeout=300)
+    trace_delta = srv.trace_count() - t_pre
+
+    # tombstones never surface: an exact-scan search over the full slot
+    # capacity after the churn must not return any deleted id
+    from repro.retriever import SearchParams
+
+    exact = SearchParams(use_ann=False, k=10, k_prime=retriever.m)
+    q = queries[0]
+    _, ids_post = srv.search(q, params=exact, timeout=300)
+    ghost = sorted(set(np.asarray(ids_post).ravel().tolist())
+                   & set(deleted))
+
+    # add amortization: logical bytes the paged store moved per added doc
+    # (steady state, warm pool) vs what ONE flat-layout concatenate add
+    # used to write at this corpus size
+    st = retriever.index.store
+    paged_per_doc = (sum(f.mutation_bytes for f in add_futs)
+                     / (n_add * len(add_futs)))
+    flat_per_doc = dense_add_bytes(retriever.m, st.td_max, st.d,
+                                   st.d_prime) / n_add
+    doc_budget = (st.td_max * st.d * 4 + st.pages_per_doc * 4
+                  + st.d_prime * 4 + 8)
+    o_doc = paged_per_doc <= 8 * doc_budget and paged_per_doc < 0.25 * flat_per_doc
+    wall = time.perf_counter() - t_mut
+
+    rows = [
+        {
+            "op": "mutation_churn",
+            "shape": f"m={m},backend={backend},steps={churn_steps}",
+            "n_mutations": len(mut_futs) + 3,     # + the warm-up round
+            "n_requests": len(searches),
+            "n_lost": n_lost,
+            "versions_monotone": monotone,
+            "final_version": versions[-1] if versions else None,
+            "trace_delta": trace_delta,
+            "churn_trace_delta": churn_trace_delta,
+            "trace_count": srv.trace_count(),
+            "n_alive": retriever.n_alive,
+            "m_slots": retriever.m,
+            "wall_s": wall,
+            "parity": monotone and not ghost,
+        },
+        {
+            "op": "add_amortization",
+            "shape": f"m={m},backend={backend},n_add={n_add}",
+            "paged_bytes_per_doc": paged_per_doc,
+            "flat_bytes_per_doc": flat_per_doc,
+            "ratio": paged_per_doc / flat_per_doc,
+            "doc_budget_bytes": doc_budget,
+            "n_adds": len(add_futs),
+            "o_doc": o_doc,
+            "parity": o_doc,
+        },
+    ]
+    common.emit("serving_mutation_churn", wall * 1e6,
+                f"lost={n_lost},trace_delta={trace_delta},"
+                f"bytes_per_doc={paged_per_doc:.0f}/{flat_per_doc:.0f}")
+    return rows
 
 
 def _extend_bench_serving(online: dict) -> None:
@@ -179,6 +377,9 @@ def _extend_bench_serving(online: dict) -> None:
     restamped with jax/device/seed provenance."""
     doc = common.load_bench_root("serving")
     common.merge_section(doc, "online", online["meta"], online["rows"])
+    mut = online.get("mutation", {})
+    if mut.get("rows"):
+        common.merge_section(doc, "mutation", mut["meta"], mut["rows"])
     common.save_bench_root("serving", doc)
 
 
@@ -196,11 +397,15 @@ if __name__ == "__main__":
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--add-docs", type=int, default=32,
                    help="docs streamed in mid-replay (0 disables)")
+    p.add_argument("--churn-steps", type=int, default=4,
+                   help="add/delete/update churn rounds for the mutation "
+                        "smoke (0 disables)")
     p.add_argument("--no-emit-json", action="store_true",
                    help="skip extending the repo-root BENCH_serving.json")
     a = p.parse_args()
     out = run(a.m, d=a.d, rate=a.rate, duration=a.duration,
               max_batch=a.max_batch, max_wait_us=a.max_wait_us,
               backend=a.backend, epochs=a.epochs, seed=a.seed,
-              add_docs=a.add_docs, emit_json=not a.no_emit_json)
-    print(json.dumps(out["rows"], indent=1))
+              add_docs=a.add_docs, churn_steps=a.churn_steps,
+              emit_json=not a.no_emit_json)
+    print(json.dumps(out["rows"] + out["mutation"]["rows"], indent=1))

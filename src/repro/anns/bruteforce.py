@@ -13,13 +13,21 @@ import jax.numpy as jnp
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))
-def mips_topk(q: jax.Array, corpus: jax.Array, k: int, block: int = 8192):
-    """q: (B, d); corpus: (m, d) -> (scores (B, k), ids (B, k))."""
+def mips_topk(q: jax.Array, corpus: jax.Array, k: int, block: int = 8192,
+              *, valid: jax.Array | None = None):
+    """q: (B, d); corpus: (m, d) -> (scores (B, k), ids (B, k)).
+
+    ``valid`` (m,) bool (traced, optional) masks rows to ``-inf`` — how the
+    paged store scans its full slot capacity while dead/unallocated slots
+    can never win (their POSITION ids are kept, like the pad rows')."""
     B = q.shape[0]
     m, d = corpus.shape
     nb = -(-m // block)
     pad = nb * block - m
     cp = jnp.pad(corpus, ((0, pad), (0, 0))).reshape(nb, block, d)
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    vp = jnp.pad(valid, (0, pad)).reshape(nb, block)
 
     init = (
         jnp.full((B, k), -jnp.inf, jnp.float32),
@@ -28,11 +36,10 @@ def mips_topk(q: jax.Array, corpus: jax.Array, k: int, block: int = 8192):
 
     def step(carry, xs):
         top_s, top_i = carry
-        cb, off = xs
+        cb, vb, off = xs
         s = (q @ cb.T).astype(jnp.float32)  # (B, block)
         ids = off + jnp.arange(block, dtype=jnp.int32)
-        valid = ids < m
-        s = jnp.where(valid[None, :], s, -jnp.inf)
+        s = jnp.where(vb[None, :], s, -jnp.inf)
         bs, bi = jax.lax.top_k(s, min(k, block))
         cand_s = jnp.concatenate([top_s, bs], axis=1)
         cand_i = jnp.concatenate([top_i, jnp.take(ids, bi)], axis=1)
@@ -40,5 +47,5 @@ def mips_topk(q: jax.Array, corpus: jax.Array, k: int, block: int = 8192):
         return (ms, jnp.take_along_axis(cand_i, mi, axis=1)), None
 
     offsets = (jnp.arange(nb) * block).astype(jnp.int32)
-    (top_s, top_i), _ = jax.lax.scan(step, init, (cp, offsets))
+    (top_s, top_i), _ = jax.lax.scan(step, init, (cp, vp, offsets))
     return top_s, top_i

@@ -83,10 +83,18 @@ def assign_clusters(vectors: jax.Array, centroids: jax.Array) -> jax.Array:
     return jnp.argmax(vectors @ centroids.T - half[None, :], axis=1)
 
 
-def _pack_lists(vectors, assign: np.ndarray, nlist: int, *, sq8: bool):
-    """Pack vectors into fixed-capacity padded cluster lists (host-side)."""
+def _pack_lists(vectors, assign: np.ndarray, nlist: int, *, sq8: bool,
+                cap_floor: int = 1):
+    """Pack vectors into fixed-capacity padded cluster lists (host-side).
+
+    ``cap`` is bucketed to a power of two (and never below ``cap_floor`` —
+    :func:`extend_ivf` passes the old capacity so adds can only keep or
+    double it): the list shapes are jit-static, so shape-stable adds leave
+    compiled query fns alive instead of retracing per add."""
+    from repro.core.pages import next_pow2
+
     counts = np.bincount(assign, minlength=nlist)
-    cap = int(max(1, counts.max()))
+    cap = max(next_pow2(int(max(1, counts.max()))), int(cap_floor))
     ids = np.full((nlist, cap), -1, np.int32)
     order = np.argsort(assign, kind="stable")
     pos = np.zeros(nlist, np.int64)
@@ -133,7 +141,8 @@ def extend_ivf(index: IVFIndex, new_vectors: jax.Array) -> IVFIndex:
     all_vecs[m_old:] = np.asarray(newv)
     all_assign[m_old:] = assign_new
     ids2, vecs2, scales2, counts2 = _pack_lists(all_vecs, all_assign, nlist,
-                                                sq8=sq8)
+                                                sq8=sq8,
+                                                cap_floor=index.capacity)
     return IVFIndex(index.centroids, ids2, vecs2, scales2, counts2, index.mean)
 
 

@@ -1,9 +1,18 @@
 """LemurIndex: the Fig. 1 pipeline state + v0 free-function shims.
 
 :class:`LemurIndex` is the immutable pytree holding a built LEMUR index
-(cfg, ψ, target stats, OLS W rows, doc tokens, backend name + opaque
-backend state).  The lifecycle around it — build, search, incremental add,
-backend swap, save/load — lives in :class:`repro.retriever.LemurRetriever`
+(cfg, ψ, target stats, the paged corpus store, backend name + opaque
+backend state).  Corpus storage is a :class:`repro.core.pages.PagedStore`
+— fixed-size token pages behind a per-doc page table — so ``add`` /
+``delete`` / ``update`` are page allocations instead of O(N) array
+reallocation, and doc ids are stable slot indices that survive mutation.
+The dense views (``W`` / ``doc_tokens`` / ``doc_mask`` properties) keep
+every v0 consumer working; they materialize from pages on access and are
+host-side only (never call them under jit — the query pipeline reads
+``index.store`` directly).
+
+The lifecycle — build, search, incremental add, delete/update, backend
+swap, save/load — lives in :class:`repro.retriever.LemurRetriever`
 (Retriever API v1); the free functions below (``build_index`` /
 ``attach_backend`` / ``add_docs`` / ``query`` / ``candidates``) are thin
 back-compat shims over that facade and keep the v0 call sites working.
@@ -22,23 +31,57 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import pages
 from repro.core.config import LemurConfig
 from repro.core.model import TargetStats
+from repro.core.pages import PagedStore
 
 
 class LemurIndex(NamedTuple):
     cfg: LemurConfig
     psi: dict                 # feature-encoder params
     stats: TargetStats        # target standardization (App. A)
-    W: jax.Array              # (m, d') latent doc vectors = OLS output layer
-    doc_tokens: jax.Array     # (m, Td, d) for exact rerank
-    doc_mask: jax.Array       # (m, Td)
+    store: PagedStore         # paged corpus: W rows + token pages + tombstones
     backend: str              # registered first-stage backend name
     ann: Any                  # opaque backend state (jax pytree)
 
+    @classmethod
+    def from_dense(cls, cfg, psi, stats, W, doc_tokens, doc_mask, backend,
+                   ann) -> "LemurIndex":
+        """Build from the dense padded layout (same positional order the v1
+        constructor took, so legacy call sites swap constructor for
+        classmethod)."""
+        store, _ = pages.from_dense(W, doc_tokens, doc_mask)
+        return cls(cfg, psi, stats, store, backend, ann)
+
+    # -- host-side dense views (concrete index only; O(corpus) gathers) ----
+
     @property
     def m(self) -> int:
-        return self.W.shape[0]
+        """Slot high-water mark (NOT reduced by delete — ids are stable)."""
+        return int(self.store.n_docs[0])
+
+    @property
+    def n_alive(self) -> int:
+        return int(np.asarray(self.store.alive).sum())
+
+    @property
+    def W(self) -> jax.Array:
+        return self.store.W[: self.m]
+
+    @property
+    def doc_tokens(self) -> jax.Array:
+        return self.dense_view()[0]
+
+    @property
+    def doc_mask(self) -> jax.Array:
+        return self.dense_view()[1]
+
+    def dense_view(self):
+        """(doc_tokens (m, Tm, d), doc_mask (m, Tm)) materialized from
+        pages — deleted slots come back all-masked.  ``Tm`` is the page-
+        rounded token bound (``store.td_max``), not the original ``Td``."""
+        return pages.gather_docs(self.store, jnp.arange(self.m))
 
 
 def _legacy_params(index: LemurIndex, *, k=None, k_prime=None, nprobe=None,

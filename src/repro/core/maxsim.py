@@ -98,6 +98,27 @@ def rerank(q, q_mask, cand_ids, docs, docs_mask, k: int):
     return top, jnp.take_along_axis(cand_ids, idx, axis=1)
 
 
+def rerank_gathered(q, q_mask, cand_ids, cand_docs, cand_mask, k: int):
+    """:func:`rerank` over PRE-GATHERED candidate docs — the legacy-path
+    twin for the paged store, where candidates are materialized from token
+    pages (``pages.gather_docs``) instead of ``jnp.take`` on a dense corpus.
+
+    q: (B, Tq, d); cand_docs: (B, k', Tm, d); cand_mask: (B, k', Tm) ->
+    (topk_scores (B, k), topk_ids (B, k)).  Same NEG/pad semantics as
+    :func:`rerank`; per-token dots and the order-independent max make the
+    scores bit-identical to the dense layout's."""
+    valid = cand_ids >= 0
+    s = jnp.einsum("bqd,bmtd->bmqt", q, cand_docs,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(cand_mask[:, :, None, :], s, NEG)
+    best = jnp.max(s, axis=-1)
+    best = jnp.where(q_mask[:, None, :], best, 0.0)
+    scores = jnp.sum(best, axis=-1)
+    scores = jnp.where(valid, scores, NEG)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(cand_ids, idx, axis=1)
+
+
 def true_topk(q, q_mask, docs, docs_mask, k: int, *, block: int = 1024):
     """Exact MaxSim k-nn (ground truth for recall eval)."""
     scores = maxsim_scores(q, q_mask, docs, docs_mask, block=block)

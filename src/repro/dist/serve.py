@@ -44,24 +44,36 @@ class ShardedRetrievalState(NamedTuple):
 
     With scales present, W / doc_tokens are int8 SQ codes (Glass-style SQ8 —
     the layout repro.kernels.mips_sq8 scans on TPU): 2-4x less resident HBM
-    and per-step traffic than bf16/fp32 (EXPERIMENTS.md §Perf iteration 3)."""
+    and per-step traffic than bf16/fp32 (EXPERIMENTS.md §Perf iteration 3).
+
+    ``row_ids`` / ``row_valid`` (optional — the paged sharded facade sets
+    them) decouple physical rows from external doc ids: rows become SLOTS
+    that mutations rewrite in place (add/delete/update without resharding),
+    ``row_valid=False`` rows are masked out of the latent scan, and the
+    merge maps surviving local rows to external ids through ``row_ids``
+    (``-1`` for free rows).  When absent, row position IS the doc id (the
+    legacy contract; ``m_real`` masks the tail padding)."""
     psi: dict
     W: jax.Array                    # (m, d') latent corpus (fp or int8 codes)
     doc_tokens: jax.Array           # (m, Td, d) token store (fp or int8 codes)
     doc_mask: jax.Array             # (m, Td)
     W_scales: jax.Array | None = None      # (m,) per-row scales (int8 mode)
     doc_scales: jax.Array | None = None    # (m, Td) per-token scales
+    row_ids: jax.Array | None = None       # (m,) int32 external ids, -1 free
+    row_valid: jax.Array | None = None     # (m,) bool occupied-and-alive
 
 
 def state_shardings(mesh: Mesh, state: ShardedRetrievalState | None = None):
     """NamedShardings for a ShardedRetrievalState: ψ replicated, every
     corpus-sized leaf block-sharded over the flattened mesh.  With ``state``
-    given, its ψ tree structure (and scale presence) is mirrored exactly."""
+    given, its ψ tree structure (and scale/row-map presence) is mirrored
+    exactly."""
     corpus = NamedSharding(mesh, P(corpus_axes(mesh)))
     repl = NamedSharding(mesh, P())
     psi_tree = state.psi if state is not None else {
         "dense": {"kernel": 0, "bias": 0}, "ln": {"scale": 0, "bias": 0}}
     has_scales = state is not None and state.W_scales is not None
+    has_rows = state is not None and state.row_ids is not None
     return ShardedRetrievalState(
         psi=jax.tree_util.tree_map(lambda _: repl, psi_tree),
         W=corpus,
@@ -69,12 +81,15 @@ def state_shardings(mesh: Mesh, state: ShardedRetrievalState | None = None):
         doc_mask=corpus,
         W_scales=corpus if has_scales else None,
         doc_scales=corpus if has_scales else None,
+        row_ids=corpus if has_rows else None,
+        row_valid=corpus if has_rows else None,
     )
 
 
 def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
-                    q_tokens, q_mask, *, k: int, k_prime: int,
-                    axes: tuple[str, ...], axis_sizes: tuple[int, ...],
+                    row_ids, row_valid, q_tokens, q_mask, *, k: int,
+                    k_prime: int, axes: tuple[str, ...],
+                    axis_sizes: tuple[int, ...],
                     m_real: int | None = None, use_fused_gather: bool = True,
                     use_one_launch: bool = False):
     """Per-shard body (inside shard_map): local MIPS + local rerank + merge.
@@ -94,7 +109,12 @@ def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
 
     ``m_real``: true corpus size when the leading dim carries padding rows
     (the facade pads m up to the device count) — padded columns are masked
-    out of the latent scan so they can never displace a real candidate."""
+    out of the latent scan so they can never displace a real candidate.
+    ``row_ids``/``row_valid`` (the paged slot contract, see
+    :class:`ShardedRetrievalState`): the scan mask comes from the TRACED
+    ``row_valid`` bits and the merge maps local rows to external ids
+    through ``row_ids`` — free/tombstoned rows score NEG and resolve to
+    ``-1``, so in-place slot mutation never changes shapes."""
     # psi_q: (B, d') pooled queries, already encoded batch-sharded OUTSIDE the
     # corpus shard_map (encoding inside would replicate the psi MLP's (B,Tq,d')
     # intermediates on every corpus shard — §Perf iteration 3)
@@ -105,22 +125,22 @@ def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
     idx = 0
     for ax, size in zip(axes, axis_sizes):
         idx = idx * size + jax.lax.axis_index(ax)
+    valid = row_valid
+    if valid is None and m_real is not None:
+        valid = (idx * m_loc + jnp.arange(m_loc)) < m_real
     if use_one_launch:
         # fused latent scan + in-kernel top-k': the (B, m_loc) score matrix
-        # never exists in HBM.  The pad mask depends on the TRACED shard
-        # index, so it rides into the kernel as an array input (masked rows
-        # keep their position ids at NEG — identical to the legacy branch).
-        valid = None
-        if m_real is not None:
-            valid = (idx * m_loc + jnp.arange(m_loc)) < m_real
+        # never exists in HBM.  The pad mask depends on TRACED state (shard
+        # index / row_valid bits), so it rides into the kernel as an array
+        # input (masked rows keep their position ids at NEG — identical to
+        # the legacy branch).
         _, cand = ops.mips_topk_fused(psi_q, W, W_scales, kp, valid)
     else:
         s = psi_q @ W.T.astype(psi_q.dtype)                     # (B, m_loc)
         if W_scales is not None:
             s = s * W_scales[None, :].astype(s.dtype)
-        if m_real is not None:
-            pad = (idx * m_loc + jnp.arange(m_loc)) >= m_real
-            s = jnp.where(pad[None, :], maxsim.NEG, s)
+        if valid is not None:
+            s = jnp.where(valid[None, :], s, maxsim.NEG)
         _, cand = jax.lax.top_k(s, kp)                          # local candidates
     if use_fused_gather:
         scores, local_ids = ops.fused_rerank(
@@ -144,7 +164,13 @@ def _local_retrieve(psi_q, W, W_scales, doc_tokens, doc_scales, doc_mask,
     else:
         scores, local_ids = maxsim.rerank(q_tokens, q_mask, cand, doc_tokens,
                                           doc_mask, min(k, kp))
-    gids = local_ids + idx * m_loc
+    if row_ids is not None:
+        # slot contract: map surviving local rows to external ids; -1 rerank
+        # pads and free rows (row_ids -1) stay -1
+        safe = jnp.maximum(local_ids, 0)
+        gids = jnp.where(local_ids >= 0, jnp.take(row_ids, safe), -1)
+    else:
+        gids = local_ids + idx * m_loc
     # hierarchical merge: reduce back to top-k after every axis gather
     all_s, all_i = scores, gids
     for ax in axes:
@@ -202,6 +228,7 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
 
     def serve_step(state: ShardedRetrievalState, q_tokens, q_mask):
         sq8 = state.W_scales is not None
+        rows = state.row_ids is not None
         # encode + pool queries batch-sharded (GSPMD), replicate only the
         # pooled (B, d') vectors into the corpus shard_map
         ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -216,7 +243,8 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
             psi_q, NamedSharding(mesh, P())).astype(q_tokens.dtype)
         in_specs = (P(), corpus_spec, corpus_spec if sq8 else P(),
                     corpus_spec, corpus_spec if sq8 else P(), corpus_spec,
-                    P(), P())
+                    corpus_spec if rows else P(),
+                    corpus_spec if rows else P(), P(), P())
         return shard_map(
             body,
             mesh=mesh,
@@ -224,7 +252,8 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
             out_specs=(P(), P()),
             check_vma=False,
         )(psi_q, state.W, state.W_scales, state.doc_tokens,
-          state.doc_scales, state.doc_mask, q_tokens, q_mask)
+          state.doc_scales, state.doc_mask, state.row_ids, state.row_valid,
+          q_tokens, q_mask)
 
     return serve_step
 

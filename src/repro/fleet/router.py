@@ -175,9 +175,10 @@ class _FleetRequest:
 
 
 class _AddBarrier:
-    """Write barrier over one ``add()`` fan-out: resolves the aggregate
-    future only when every armed replica has applied the growth and landed
-    on the same ``snapshot_version``.  ``excuse(i)`` drops a quarantined
+    """Write barrier over one mutation fan-out (``add``/``delete``/
+    ``update``): resolves the aggregate future only when every armed
+    replica has applied the mutation and landed on the same
+    ``snapshot_version``.  ``excuse(i)`` drops a quarantined
     replica from the wait set; a replica whose add fails triggers
     ``on_fail`` (the router quarantines it).  All future resolution and
     the ``on_fail`` hook run OUTSIDE the barrier lock — the router may
@@ -226,7 +227,7 @@ class _AddBarrier:
                 return
             del self._waiting[i]
             if f.cancelled():
-                fail = (i, RuntimeError("replica add cancelled"))
+                fail = (i, RuntimeError("replica mutation cancelled"))
             elif f.exception() is not None:
                 fail = (i, f.exception())
             else:
@@ -250,8 +251,8 @@ class _AddBarrier:
 
     def _finish(self, versions: dict, m) -> None:
         if not versions:
-            self._agg.set_exception(
-                RuntimeError("add failed: no replica completed the barrier"))
+            self._agg.set_exception(RuntimeError(
+                "mutation failed: no replica completed the barrier"))
             return
         vs = set(versions.values())
         if len(vs) != 1:
@@ -486,6 +487,29 @@ class Router:
         stamped on the future); until then no search observes the new docs
         on any replica, and per-replica FIFO barriers mean no search can
         ever observe them on one replica but not another in submit order."""
+        return self._mutate(lambda srv: srv.add(doc_tokens, doc_mask,
+                                                seed=seed))
+
+    def delete(self, doc_ids) -> Future:
+        """Snapshot-consistent tombstone fan-out: every healthy replica
+        deletes the same stable external ids under its FIFO barrier and
+        must land on the same ``snapshot_version``.  Resolves to the
+        surviving live-doc count ``n_alive``."""
+        return self._mutate(lambda srv: srv.delete(doc_ids))
+
+    def update(self, doc_ids, doc_tokens, doc_mask, *, seed: int = 0) -> Future:
+        """Snapshot-consistent replace fan-out (delete+add, ONE version
+        bump per replica).  Resolves to the NEW external ids — identical on
+        every replica because the shared OLS solver makes ``fit_docs``
+        deterministic and slot allocation is deterministic."""
+        return self._mutate(lambda srv: srv.update(doc_ids, doc_tokens,
+                                                   doc_mask, seed=seed))
+
+    def _mutate(self, enqueue) -> Future:
+        """Fan one mutation out to every healthy replica under an
+        :class:`_AddBarrier` (a failed/cancelled replica arm quarantines
+        that replica and is excused — the barrier resolves typed either
+        way, never hangs)."""
         agg: Future = Future()
         barrier = _AddBarrier(agg, self._on_add_fail)
         arms: list[tuple[int, Future]] = []
@@ -498,7 +522,7 @@ class Router:
                 if not self._healthy[i]:
                     continue
                 try:
-                    arms.append((i, srv.add(doc_tokens, doc_mask, seed=seed)))
+                    arms.append((i, enqueue(srv)))
                 except RuntimeError:
                     continue  # raced teardown — health sweep will quarantine
             if not arms:
@@ -635,7 +659,7 @@ class Router:
         return n
 
     def _on_add_fail(self, i: int, exc: BaseException | None) -> None:
-        self.quarantine(i, reason=f"add failed: {exc!r}")
+        self.quarantine(i, reason=f"mutation failed: {exc!r}")
 
     def _monitor_loop(self) -> None:
         while not self._stop_evt.wait(self._health_interval):

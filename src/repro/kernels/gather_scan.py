@@ -39,6 +39,20 @@ VMEM per step (Tq=32, Td=32, d=128): query slab 16 KiB, doc slab 16 KiB
 (int8: 4 KiB + 128 B scales), score tile 4 KiB — the whole working set of
 one candidate fits in registers-adjacent VMEM; the ``(B, k', Td, d)`` HBM
 tensor of the legacy path never exists.
+
+``rerank_paged_scores`` — the paged-corpus twin of the rerank: the corpus
+lives as fixed-size token PAGES behind a per-doc page table
+(``core.pages.PagedStore``), so a candidate's tokens are not one contiguous
+``(Td, d)`` slab.  Grid ``(B, k', pmax)``: the per-candidate page ids are
+scalar-prefetched to SMEM (exactly the paged-KV page-table-in-SMEM idiom),
+step ``(b, c, j)`` DMAs page ``table[cand[b, c], j]``'s ``(page, d)`` tile,
+scores it against the query slab, masks token positions ``>= n_tokens`` to
+``NEG``, and folds a per-query-token running max carried in VMEM scratch
+across the ``pmax`` minor steps (the TPU grid iterates the last dimension
+innermost, so the scratch persists per candidate); the final step applies
+the query mask and writes the single MaxSim score.  Because per-token dots
+are unchanged and max is order-independent, scores are bit-identical to the
+dense-slab kernel's on the same docs.
 """
 from __future__ import annotations
 
@@ -209,3 +223,77 @@ def rerank_gather_scores(q, q_mask, cand_ids, doc_tokens, doc_mask,
         out_shape=jax.ShapeDtypeStruct((B, kp), jnp.float32),
         interpret=interpret,
     )(safe, *args)
+
+
+# --------------------------------------------------------------------------
+# paged-corpus MaxSim rerank (page table fed through SMEM)
+# --------------------------------------------------------------------------
+
+def _rerank_paged_fp_kernel(pt_ref, nt_ref, q_ref, qm_ref, page_ref, out_ref,
+                            acc_ref, *, pmax):
+    # q: (1, Tq, d); page: (1, page, d) — ONE token page, DMA'd by the
+    # index_map from the prefetched page id pt[b, c, j]; acc: (Tq, 1) VMEM
+    # running per-query-token max, carried across the pmax minor grid steps
+    b, c, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full(acc_ref.shape, NEG, jnp.float32)
+
+    _, Tq, d = q_ref.shape
+    _, page, _ = page_ref.shape
+    s = jax.lax.dot_general(
+        q_ref[...].reshape(Tq, d), page_ref[...].reshape(page, d),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (Tq, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (Tq, page), 1)
+    s = jnp.where(pos < nt_ref[b, c], s, NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...],
+                               jnp.max(s, axis=-1, keepdims=True))
+
+    @pl.when(j == pmax - 1)
+    def _flush():
+        best = jnp.where(qm_ref[...].reshape(Tq, 1) > 0, acc_ref[...], 0.0)
+        out_ref[...] = jnp.sum(best).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rerank_paged_scores(q, q_mask, cand_ids, tok_pages, page_table, n_tokens,
+                        *, interpret: bool = False):
+    """Exact MaxSim of each query against ITS OWN candidates, streaming each
+    candidate's token PAGES at the source.
+
+    q: (B, Tq, d); cand_ids: (B, k') int32 (-1 padded — pads/dead slots are
+    clamped for the DMA, score all-NEG here, and must be masked by the
+    caller); tok_pages: (P, page, d) fp32; page_table: (C, pmax) int32 (-1
+    padded); n_tokens: (C,) int32 — returns (B, k') fp32 raw pair scores.
+    The per-candidate page-id strip (B·k'·pmax int32, tiny next to the token
+    pages) is gathered in XLA and scalar-prefetched to SMEM.
+    """
+    B, Tq, d = q.shape
+    kp = cand_ids.shape[1]
+    _, page, _ = tok_pages.shape
+    pmax = page_table.shape[1]
+    safe = jnp.maximum(cand_ids, 0).astype(jnp.int32)
+    pt = jnp.maximum(jnp.take(page_table, safe, axis=0), 0).astype(jnp.int32)
+    nt = jnp.take(n_tokens, safe, axis=0).astype(jnp.int32)
+    nt = jnp.where(cand_ids >= 0, nt, 0)         # (B, k')
+    qm = q_mask.astype(jnp.int8)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, kp, pmax),
+        in_specs=[
+            pl.BlockSpec((1, Tq, d), lambda b, c, j, pt, nt: (b, 0, 0)),
+            pl.BlockSpec((1, Tq), lambda b, c, j, pt, nt: (b, 0)),
+            pl.BlockSpec((1, page, d),
+                         lambda b, c, j, pt, nt: (pt[b, c, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, j, pt, nt: (b, c)),
+        scratch_shapes=[pltpu.VMEM((Tq, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rerank_paged_fp_kernel, pmax=pmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kp), jnp.float32),
+        interpret=interpret,
+    )(pt, nt, q, qm, tok_pages)

@@ -146,6 +146,40 @@ def fused_rerank(q, q_mask, cand_ids, doc_tokens, doc_mask, k: int, *,
     return top, out_ids
 
 
+def fused_rerank_paged(q, q_mask, cand_ids, tok_pages, page_table, n_tokens,
+                       k: int, *, use_kernel: bool | None = None):
+    """Paged-corpus exact MaxSim rerank -> (scores, ids), (B, k).
+
+    The corpus arrives as its paged-store pieces (``core.pages.PagedStore``:
+    token pages + per-doc page table + token counts) instead of dense
+    ``(m, Td, d)`` slabs; candidates' page ids are fed to the kernel through
+    SMEM scalar prefetch.  Same ``-1``-pad contract as :func:`fused_rerank`,
+    and — because per-token dots are unchanged and the token max is
+    order-independent — bit-identical scores to the dense paths on the same
+    docs.  TPU: the scalar-prefetch Pallas kernel
+    (:func:`repro.kernels.gather_scan.rerank_paged_scores`); otherwise the
+    gather-from-pages oracle.  fp32 only (the SQ8 token tier stays on the
+    dense sharded path).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        s = ref.rerank_scores_paged_ref(q, q_mask, cand_ids, tok_pages,
+                                        page_table, n_tokens)
+    else:
+        s = _gs.rerank_paged_scores(q, q_mask, cand_ids, tok_pages,
+                                    page_table, n_tokens,
+                                    interpret=not _on_tpu())
+    s = jnp.where(cand_ids >= 0, s, ref.NEG)
+    kk = min(k, s.shape[1])
+    top, idx = jax.lax.top_k(s, kk)
+    out_ids = jnp.take_along_axis(cand_ids, idx, axis=1)
+    if kk < k:
+        top = jnp.pad(top, ((0, 0), (0, k - kk)), constant_values=ref.NEG)
+        out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return top, out_ids
+
+
 def fused_query(q_tokens, q_mask, psi_params, centroids, ids, vecs,
                 scales=None, *, nprobe: int, kp: int,
                 use_kernel: bool | None = None):

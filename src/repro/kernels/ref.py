@@ -96,6 +96,29 @@ def rerank_scores_ref(q, q_mask, cand_ids, doc_tokens, doc_mask,
     return jnp.sum(best, axis=-1)                       # (B, k')
 
 
+def rerank_scores_paged_ref(q, q_mask, cand_ids, tok_pages, page_table,
+                            n_tokens):
+    """Oracle for :func:`repro.kernels.gather_scan.rerank_paged_scores` —
+    materializes each candidate's tokens FROM PAGES (same gather as
+    ``core.pages.gather_docs``) and contracts the slab.  ``-1``/dead
+    candidates score all-NEG positions here; the caller masks them.
+    q: (B, Tq, d); cand_ids: (B, k'); tok_pages: (P, page, d); page_table:
+    (C, pmax); n_tokens: (C,) -> (B, k') fp32 raw pair scores."""
+    safe = jnp.maximum(cand_ids, 0)
+    table = jnp.take(page_table, safe, axis=0)          # (B, k', pmax)
+    nt = jnp.where(cand_ids >= 0, jnp.take(n_tokens, safe, axis=0), 0)
+    toks = jnp.take(tok_pages, jnp.maximum(table, 0), axis=0)
+    B, kp, pmax, page, d = toks.shape
+    toks = toks.reshape(B, kp, pmax * page, d)
+    cm = jnp.arange(pmax * page, dtype=jnp.int32) < nt[..., None]
+    s = jnp.einsum("bqd,bmtd->bmqt", q, toks.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(cm[:, :, None, :], s, NEG)
+    best = jnp.max(s, axis=-1)                          # (B, k', Tq)
+    best = jnp.where(q_mask[:, None, :], best, 0.0)
+    return jnp.sum(best, axis=-1)                       # (B, k')
+
+
 def psi_pool_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias,
                  eps: float = 1e-5):
     """Pooled query latent: sum_t mask_t * psi(x_t)  (eq. 5).

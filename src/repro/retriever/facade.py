@@ -5,11 +5,22 @@ One object owns the full lifecycle of a LEMUR index (Fig. 1):
     r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
     scores, ids = r.search(q_tokens, q_mask, SearchParams(k=10))
     r.add(new_doc_tokens, new_doc_mask)          # incremental growth (§4.3)
+    r.delete(r.last_added_ids)                   # tombstone + page free
+    r.update([3, 7], new_tokens, new_mask)       # delete+add, ONE version
     r2 = r.with_backend("muvera")                # same reduction, new stage
     sr = r.shard(mesh)                           # multi-device serving
     r.save("my_index/"); r = LemurRetriever.load("my_index/")
 
 Design points:
+
+* **Paged corpus, surviving compile caches.**  The corpus lives in a
+  :class:`repro.core.pages.PagedStore` (fixed-size token pages + per-doc
+  page table + tombstones; stable slot ids).  Compiled query fns take the
+  WHOLE mutable state (ψ, stats, store, backend state) as jit ARGUMENTS —
+  never baked in as closure constants — so a mutation that fits the
+  pre-grown pool changes no shapes and issues ZERO new traces; only a
+  power-of-two capacity-bucket growth retraces.  ``_compiled`` is never
+  cleared on mutation.
 
 * **Build-time vs query-time split.**  ``LemurConfig`` (with its per-backend
   namespaces) is fixed at ``build()``; every query-time knob travels in a
@@ -50,7 +61,7 @@ from repro.anns import registry
 from repro.anns.base import CorpusView, QueryBatch, pad_topk
 from repro.anns.bruteforce import mips_topk
 from repro.checkpoint import manager as ckpt
-from repro.core import indexer, maxsim
+from repro.core import indexer, maxsim, pages
 from repro.core.config import LemurConfig
 from repro.kernels import ops
 from repro.core.index import LemurIndex
@@ -70,7 +81,13 @@ def first_stage(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
     One-launch routing happens HERE, not in the backend protocol: the fused
     first stage consumes the raw query tokens plus ψ (the projection runs
     inside the kernel), while ``be.search`` only ever sees the pooled
-    latent.  The candidate ids are bit-identical either way (fp32)."""
+    latent.  The candidate ids are bit-identical either way (fp32).
+
+    Every path ends in :func:`pages.mask_dead`: first-stage backends are
+    never rebuilt on ``delete()``, so their candidate lists can contain
+    tombstoned slots — the mask turns those into ``-1`` pads, the single
+    choke point that guarantees a deleted doc never surfaces."""
+    store = index.store
     if (params.use_ann and index.backend == "ivf"
             and getattr(params.backend, "use_one_launch", False)):
         bp = params.backend
@@ -78,40 +95,49 @@ def first_stage(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
                      index.ann.nlist)
         _, cand = _ivf.search_ivf_one_launch(
             index.ann, index.psi, q_tokens, q_mask, nprobe, params.k_prime)
-        return cand
+        return pages.mask_dead(store, cand)
     psi_q = pool_queries(index.psi, q_tokens, q_mask)  # (B, d')
     if not params.use_ann:
+        # exact latent scan over the store's full slot CAPACITY — dead and
+        # unallocated slots are masked by the (traced) alive bits, so the
+        # scan shape is jit-static across mutations
+        kk = min(params.k_prime, store.W.shape[0])
         if params.use_one_launch:
             # fused dense scan + in-kernel top-k' — never materializes the
-            # (B, m) score matrix; ids match the blocked mips_topk bit for bit
-            m = index.W.shape[0]
-            kk = min(params.k_prime, m)
-            top, cand = ops.mips_topk_fused(psi_q, index.W, None, kk)
-            return pad_topk(top, cand, params.k_prime)[1]
-        _, cand = mips_topk(psi_q, index.W, params.k_prime)
-        return cand
+            # (B, C) score matrix; ids match the blocked mips_topk bit for bit
+            top, cand = ops.mips_topk_fused(psi_q, store.W, None, kk,
+                                            valid=store.alive)
+        else:
+            top, cand = mips_topk(psi_q, store.W, kk, valid=store.alive)
+        cand = pad_topk(top, cand, params.k_prime)[1]
+        return pages.mask_dead(store, cand)
     be = registry.get_backend(index.backend)
     _, cand = be.search(index.ann, QueryBatch(psi_q, q_tokens, q_mask),
                         params.k_prime, params.backend)
-    return cand
+    return pages.mask_dead(store, cand)
 
 
 def search_pipeline(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
     """pool -> first-stage candidates -> exact MaxSim rerank -> top-k.
 
-    ``-1``-padded first-stage rows are masked inside the rerank — pads can
-    never surface as results.  ``params.use_fused_gather`` (the resolved
-    default) sends the rerank through the gather-at-source kernel path
-    (``kernels.ops.fused_rerank``: candidate token slabs are DMA'd straight
-    into VMEM on TPU instead of materializing the ``(B, k', Td, d)`` gather
-    in HBM); ``False`` keeps the legacy ``maxsim.rerank`` benchmarkable —
-    both return bit-identical ids on fp32."""
+    ``-1``-padded first-stage rows (including tombstoned docs masked by
+    ``first_stage``) score NEG inside the rerank — pads can never surface
+    as results.  ``params.use_fused_gather`` (the resolved default) sends
+    the rerank through the page-fed kernel path
+    (``kernels.ops.fused_rerank_paged``: each candidate's token pages are
+    DMA'd straight into VMEM on TPU, page ids from SMEM, instead of
+    materializing the ``(B, k', Tm, d)`` gather in HBM); ``False`` keeps
+    the legacy materialize-from-pages + ``maxsim.rerank_gathered`` path
+    benchmarkable — both return bit-identical ids on fp32."""
     cand = first_stage(index, q_tokens, q_mask, params)
+    store = index.store
     if params.use_fused_gather:
-        return ops.fused_rerank(q_tokens, q_mask, cand,
-                                index.doc_tokens, index.doc_mask, params.k)
-    return maxsim.rerank(q_tokens, q_mask, cand,
-                         index.doc_tokens, index.doc_mask, params.k)
+        return ops.fused_rerank_paged(q_tokens, q_mask, cand,
+                                      store.tok_pages, store.page_table,
+                                      store.n_tokens, params.k)
+    toks, tmask = pages.gather_docs(store, cand)
+    return maxsim.rerank_gathered(q_tokens, q_mask, cand, toks, tmask,
+                                  params.k)
 
 
 def launch_plan(resolved: SearchParams) -> dict[str, int]:
@@ -155,6 +181,13 @@ class LemurRetriever:
         self._trace_shapes: dict[tuple, int] = {}
         self._resolve_memo: dict[SearchParams | None, SearchParams] = {}
         self._version = 0
+        # page allocator: lazily derived from the store (deterministic —
+        # snapshots/checkpoints never persist it), then threaded through
+        # mutations.  Byte counters feed the add-amortization bench.
+        self._free_pages: list[int] | None = None
+        self._last_added_ids = np.empty((0,), np.int32)
+        self._last_mutation_bytes = 0
+        self._bytes_moved = 0
 
     # -- introspection ------------------------------------------------------
 
@@ -175,11 +208,35 @@ class LemurRetriever:
         return self._index.m
 
     @property
+    def n_alive(self) -> int:
+        """Live (non-tombstoned) docs; ``m`` stays the slot high-water mark
+        because external ids are stable slot indices."""
+        return self._index.n_alive
+
+    @property
     def version(self) -> int:
-        """Snapshot version: bumped by every :meth:`add`.  Serving layers
+        """Snapshot version: bumped by every :meth:`add` / :meth:`delete` /
+        :meth:`update` (update bumps ONCE).  Serving layers
         (``repro.serving``) use it to tell which corpus snapshot answered a
         request."""
         return self._version
+
+    @property
+    def last_added_ids(self) -> np.ndarray:
+        """Slot ids allocated by the most recent :meth:`add`/:meth:`update`."""
+        return self._last_added_ids
+
+    @property
+    def last_mutation_bytes(self) -> int:
+        """Logical bytes the most recent mutation wrote (pages + touched
+        table/W rows + any bucket-growth copy) — O(doc) when the pool has
+        capacity; the add-amortization bench gates on this."""
+        return self._last_mutation_bytes
+
+    @property
+    def bytes_moved(self) -> int:
+        """Cumulative logical mutation bytes since construction."""
+        return self._bytes_moved
 
     def snapshot(self) -> LemurIndex:
         """The current immutable index snapshot.  ``add()`` swaps the whole
@@ -245,8 +302,8 @@ class LemurRetriever:
                        cfg.backend_config(backend))
         if verbose:
             print(f"[build] {backend} index complete ({time.time()-t0:.1f}s)")
-        index = LemurIndex(cfg, phi["psi"], stats, W, doc_tokens, doc_mask,
-                           backend, ann)
+        index = LemurIndex.from_dense(cfg, phi["psi"], stats, W, doc_tokens,
+                                      doc_mask, backend, ann)
         return cls(index, solver_state=solver)
 
     def with_backend(self, backend: str, *, key=None,
@@ -268,12 +325,50 @@ class LemurRetriever:
                               x_ols=self._x_ols)
 
     def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> "LemurRetriever":
-        """Incremental growth: fit new W rows with the frozen-ψ OLS solver
-        and push them into the first-stage backend via its ``add`` hook —
-        ψ and existing rows are never touched (§4.3).  Reuses the build-time
-        solver state when available (also after ``load()``); the corpus-
-        sampling fallback is seeded by the explicit ``seed``.  Mutates this
-        retriever (compiled query fns are invalidated) and returns it."""
+        """Incremental growth: fit new W rows with the frozen-ψ OLS solver,
+        push them into the first-stage backend via its ``add`` hook — ψ and
+        existing rows are never touched (§4.3) — and allocate token PAGES
+        for the new docs (slots ``[m, m+n)``: stable ids).  Reuses the
+        build-time solver state when available (also after ``load()``); the
+        corpus-sampling fallback is seeded by the explicit ``seed``.
+
+        Compiled query fns are NOT invalidated: they take the store/backend
+        state as jit arguments, so an add that fits the pre-grown pool
+        issues zero new traces (only a power-of-two capacity-bucket growth
+        retraces).  Mutates this retriever and returns it; the new slot ids
+        are in :attr:`last_added_ids`."""
+        self._mutate_add(doc_tokens, doc_mask, seed)
+        self._version += 1
+        return self
+
+    def delete(self, doc_ids) -> "LemurRetriever":
+        """Tombstone docs and return their pages to the free list.  Ids of
+        surviving docs are unchanged (slots are never reused); the
+        first-stage backends are NOT rebuilt — their stale candidates are
+        masked out after every first stage (``pages.mask_dead``), so a
+        deleted doc can never surface.  Raises ``ValueError`` on unknown or
+        already-deleted ids.  Mutates this retriever and returns it."""
+        self._mutate_delete(doc_ids)
+        self._version += 1
+        return self
+
+    def update(self, doc_ids, doc_tokens, doc_mask, *,
+               seed: int = 0) -> np.ndarray:
+        """Replace docs: delete ``doc_ids`` + add the new contents under ONE
+        snapshot version bump.  The replacement docs get NEW slot ids
+        (returned; also in :attr:`last_added_ids`) — an updated doc is a
+        new document as far as stable external ids are concerned."""
+        self._mutate_delete(doc_ids)
+        ids = self._mutate_add(doc_tokens, doc_mask, seed)
+        self._version += 1
+        return ids
+
+    def _free(self) -> list[int]:
+        if self._free_pages is None:
+            self._free_pages = pages.free_list(self._index.store)
+        return self._free_pages
+
+    def _mutate_add(self, doc_tokens, doc_mask, seed: int) -> np.ndarray:
         idx = self._index
         doc_tokens = jnp.asarray(doc_tokens)
         doc_mask = jnp.asarray(doc_mask)
@@ -281,17 +376,23 @@ class LemurRetriever:
         w_new = indexer.fit_docs(solver, doc_tokens, doc_mask, idx.stats)
         be = registry.get_backend(idx.backend)
         ann = be.add(idx.ann, CorpusView(w_new, doc_tokens, doc_mask))
-        self._index = idx._replace(
-            W=jnp.concatenate([idx.W, w_new], axis=0),
-            doc_tokens=jnp.concatenate([idx.doc_tokens, doc_tokens], axis=0),
-            doc_mask=jnp.concatenate([idx.doc_mask, doc_mask], axis=0),
-            ann=ann,
-        )
-        self._compiled.clear()
-        self._trace_counts.clear()
-        self._trace_shapes.clear()
-        self._version += 1
-        return self
+        store, free, ids, moved = pages.add_docs(
+            idx.store, self._free(), w_new, doc_tokens, doc_mask)
+        self._free_pages = free
+        self._index = idx._replace(store=store, ann=ann)
+        self._last_added_ids = ids
+        self._last_mutation_bytes = moved
+        self._bytes_moved += moved
+        return ids
+
+    def _mutate_delete(self, doc_ids) -> None:
+        idx = self._index
+        store, free, moved = pages.delete_docs(idx.store, self._free(),
+                                               doc_ids)
+        self._free_pages = free
+        self._index = idx._replace(store=store)
+        self._last_mutation_bytes = moved
+        self._bytes_moved += moved
 
     def clone(self) -> "LemurRetriever":
         """An independent replica over the SAME built state — zero re-train,
@@ -376,23 +477,38 @@ class LemurRetriever:
 
     def _compiled_fn(self, resolved: SearchParams):
         key = (self.backend, resolved)
-        fn = self._compiled.get(key)
-        if fn is None:
-            idx = self._index
+        run = self._compiled.get(key)
+        if run is None:
             counts = self._trace_counts
             shapes = self._trace_shapes
+            cfg, backend = self.cfg, self.backend
 
-            def run(q, qm):
+            def pipeline(psi, stats, store, ann, q, qm):
                 # trace-time only: bucket-aware compile accounting — each
                 # (backend, params, q-shape) cache entry is observable, so
                 # serving layers can assert their shape-ladder compile bound
                 counts[key] = counts.get(key, 0) + 1
                 skey = key + (tuple(q.shape),)
                 shapes[skey] = shapes.get(skey, 0) + 1
+                idx = LemurIndex(cfg, psi, stats, store, backend, ann)
                 return search_pipeline(idx, q, qm, resolved)
 
-            fn = self._compiled[key] = jax.jit(run)
-        return fn
+            jitted = jax.jit(pipeline)
+            use_ann = bool(resolved.use_ann)
+
+            # the WHOLE mutable state rides in as jit arguments — mutations
+            # that keep shapes (pool has capacity) hit the compiled program
+            # with zero retraces; only a pow2 bucket growth traces again.
+            # Exact-scan params drop the (unused) backend state from the
+            # arguments so a backend whose state grows per add (e.g.
+            # bruteforce's concatenated W view) cannot retrace them.
+            def run(q, qm):
+                i = self._index
+                return jitted(i.psi, i.stats, i.store,
+                              i.ann if use_ann else None, q, qm)
+
+            self._compiled[key] = run
+        return run
 
     def trace_count(self, params: SearchParams | None = None) -> int:
         """jit traces so far: for one resolved SearchParams, or in total.
@@ -422,18 +538,29 @@ class LemurRetriever:
 
     def save(self, directory) -> pathlib.Path:
         """Persist everything needed to serve (and grow) this retriever:
-        cfg, ψ, target stats, W, doc tokens/mask, the backend name + its
-        opaque packed state, and the OLS training tokens when available.
+        cfg, ψ, target stats, the PAGED store (token pages, page table,
+        token counts, W, alive tombstones, doc count), the backend name +
+        its opaque packed state, and the OLS training tokens when available.
+        The ``alive`` mask is load-bearing: tombstoned slots keep zeroed W
+        rows, and without it they would resurface as zero-score docs after
+        a reload.  The page free list is NOT persisted — it is derived
+        deterministically from the page table on first mutation.
         Uses the checkpoint manager's atomic manifest+shards layout."""
         idx = self._index
+        st = idx.store
         be = registry.get_backend(idx.backend)
         ann_arrays, ann_meta = be.pack_state(idx.ann)
         tree = {
             "psi": idx.psi,
             "stats": {"mean": idx.stats.mean, "std": idx.stats.std},
-            "W": idx.W,
-            "doc_tokens": idx.doc_tokens,
-            "doc_mask": idx.doc_mask,
+            "pages": {
+                "tok_pages": st.tok_pages,
+                "page_table": st.page_table,
+                "n_tokens": st.n_tokens,
+                "W": st.W,
+                "alive": st.alive,
+                "n_docs": st.n_docs,
+            },
             "ann": dict(ann_arrays),
         }
         if self._x_ols is not None:
@@ -464,10 +591,19 @@ class LemurRetriever:
         backend = extra["backend"]
         be = registry.get_backend(backend)
         ann = be.unpack_state(tree["ann"], extra.get("ann_meta", {}))
-        index = LemurIndex(cfg, tree["psi"],
-                           TargetStats(tree["stats"]["mean"], tree["stats"]["std"]),
-                           tree["W"], tree["doc_tokens"], tree["doc_mask"],
-                           backend, ann)
+        stats = TargetStats(tree["stats"]["mean"], tree["stats"]["std"])
+        if "pages" in tree:
+            p = tree["pages"]
+            store = pages.PagedStore(
+                p["tok_pages"], p["page_table"], p["n_tokens"], p["W"],
+                jnp.asarray(p["alive"], bool),
+                jnp.asarray(p["n_docs"], jnp.int32))
+            index = LemurIndex(cfg, tree["psi"], stats, store, backend, ann)
+        else:
+            # legacy dense checkpoint (pre-paged format): migrate on load
+            index = LemurIndex.from_dense(cfg, tree["psi"], stats, tree["W"],
+                                          tree["doc_tokens"],
+                                          tree["doc_mask"], backend, ann)
         x_ols = tree.get("solver", {}).get("x_ols")
         return cls(index, x_ols=x_ols)
 

@@ -6,6 +6,8 @@ Obtained via :meth:`repro.retriever.LemurRetriever.shard`::
     sr = r.shard(mesh)                       # corpus block-sharded over mesh
     scores, ids = sr.search(q, qm, SearchParams(k=10))
     sr.add(new_tokens, new_mask)             # shard-balanced growth
+    sr.delete(sr.base.last_added_ids)        # in-place slot eviction
+    sr.update([3, 7], new_tokens[:2], new_mask[:2])
     sr.save("idx/"); sr = ShardedLemurRetriever.load("idx/", mesh)
 
 It mirrors the single-device facade's surface (``search`` / ``add`` /
@@ -18,25 +20,35 @@ cross the wire in the hierarchical merge.
 Design points:
 
 * **State build.**  ``ShardedRetrievalState`` is materialized from any
-  built retriever: the corpus is padded up to a device-count multiple
-  (padded rows are masked out of the latent scan by ``m_real`` and can
-  never surface), then either kept fp (bit-identical to the local facade's
-  exact-scan search when k' covers the corpus) or scalar-quantized to SQ8
-  codes + per-row/per-token scales (``sq8=True``; 2-4x less resident HBM
-  per shard, scores exact w.r.t. the quantized representation).  The
-  default follows the build config's ``cfg.ivf.sq8`` knob.
+  built retriever as a SLOT POOL: every shard owns a power-of-two bucket of
+  ``rows_per_shard`` physical rows, ``row_ids``/``row_valid`` map rows to
+  the base facade's stable external slot ids (free rows are ``-1`` and
+  masked out of the latent scan), and rows are either kept fp
+  (bit-identical to the local facade's exact-scan search when k' covers
+  the corpus) or scalar-quantized to SQ8 codes + per-row/per-token scales
+  (``sq8=True``; 2-4x less resident HBM per shard, scores exact w.r.t. the
+  quantized representation — per-row quantization means in-place row
+  writes requantize ONLY the touched rows, exactly).  The default follows
+  the build config's ``cfg.ivf.sq8`` knob.
 
 * **Compilation contract.**  Like the single-device facade: exactly one
   compiled serve step per (mesh, resolved ``SearchParams``, batch shape),
-  observable via :meth:`trace_count`.  The first-stage backend and
-  ``use_ann`` are ignored here — the sharded first stage IS the per-shard
-  exact latent scan (the paper's k' budget becomes the per-shard
+  observable via :meth:`trace_count`.  The sharded state rides into the
+  compiled step as a jit ARGUMENT, so in-capacity mutations (add into free
+  rows, delete, update) keep every leaf shape and issue ZERO new traces —
+  only a bucket-growing rebuild re-specializes.  The first-stage backend
+  and ``use_ann`` are ignored here — the sharded first stage IS the
+  per-shard exact latent scan (the paper's k' budget becomes the per-shard
   ``k_prime_local`` oversample, see ``dist.serve.default_k_prime_local``).
 
-* **Shard-balanced growth.**  ``add()`` fits new W rows with the base
-  retriever's frozen-ψ OLS solver, then re-pads and re-distributes the
-  grown corpus so every shard again owns exactly ``ceil(m/n)`` rows — ids
-  keep the original numbering, so results stay comparable across growth.
+* **Shard-balanced mutation.**  ``add()`` fits new W rows with the base
+  retriever's frozen-ψ OLS solver, then writes them into free rows of the
+  LEAST-occupied shards (in-place ``.at[rows].set`` — no resharding, no
+  O(corpus) copy while the pool has capacity).  ``delete()`` evicts rows
+  in place (scan-masked + token-masked, so a deleted doc can never
+  surface) and returns them to the per-shard free lists; ``update()`` is
+  delete+add under the base facade's single version bump.  External ids
+  keep the base facade's stable numbering throughout.
 """
 from __future__ import annotations
 
@@ -44,10 +56,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import dist
 from repro.anns.quantization import sq8_quant
-from repro.core import maxsim
+from repro.core import maxsim, pages
 from repro.core.config import LemurConfig
 from repro.retriever.facade import LemurRetriever
 from repro.retriever.params import SearchParams
@@ -67,7 +80,11 @@ class ShardedLemurRetriever:
         self._trace_counts: dict[tuple, int] = {}
         self._trace_shapes: dict[tuple, int] = {}
         self._state: dist.ShardedRetrievalState | None = None
-        self._m_real = 0
+        # slot-pool allocator mirrors (host side): external id -> physical
+        # row, and per-shard LIFO free-row lists for balanced placement
+        self._row_of: dict[int, int] = {}
+        self._free_rows: list[list[int]] = []
+        self._rows_per_shard = 0
         self._rebuild_state()
 
     # -- introspection ------------------------------------------------------
@@ -86,7 +103,22 @@ class ShardedLemurRetriever:
 
     @property
     def m(self) -> int:
-        return self._m_real
+        """Slot high-water mark of the base facade (stable external ids)."""
+        return self._base.m
+
+    @property
+    def n_alive(self) -> int:
+        return self._base.n_alive
+
+    @property
+    def rows_per_shard(self) -> int:
+        """Physical slot-pool rows each shard owns (pow2 bucket)."""
+        return self._rows_per_shard
+
+    @property
+    def last_added_ids(self) -> np.ndarray:
+        """External ids allocated by the most recent add/update (base's)."""
+        return self._base.last_added_ids
 
     @property
     def sq8(self) -> bool:
@@ -94,7 +126,8 @@ class ShardedLemurRetriever:
 
     @property
     def version(self) -> int:
-        """Snapshot version of the underlying facade (bumped per add)."""
+        """Snapshot version of the underlying facade (bumped per
+        add/delete/update; update bumps ONCE)."""
         return self._base.version
 
     @property
@@ -109,29 +142,48 @@ class ShardedLemurRetriever:
     # -- state build --------------------------------------------------------
 
     def _rebuild_state(self) -> None:
-        """Materialize the sharded serving state from the base index: pad the
-        corpus to a device-count multiple (block-balanced placement), then
-        quantize (SQ8) or keep fp, and place per ``dist.state_shardings``."""
+        """Materialize the sharded slot pool from the base index: every shard
+        owns a pow2 bucket of ``rows_per_shard`` rows (block-balanced
+        placement; slot i lands on row i, so a fresh pool reproduces the
+        legacy block layout), dead/unused rows are free (``row_ids=-1``,
+        scan-masked), then quantize (SQ8) or keep fp and place per
+        ``dist.state_shardings``.  Only runs at construction and when a
+        mutation outgrows the pool (rows or token width)."""
         idx = self._base.index
+        st = idx.store
         n = dist.n_corpus_shards(self._mesh)
-        self._m_real = idx.m
-        pad = (-idx.m) % n
-        W = jnp.asarray(idx.W, jnp.float32)
-        docs = jnp.asarray(idx.doc_tokens)
-        mask = jnp.asarray(idx.doc_mask)
+        m = idx.m
+        rps = max(1, pages.next_pow2(-(-m // n) if m else 1))
+        total = n * rps
+        docs, mask = pages.gather_docs(st, jnp.arange(m, dtype=jnp.int32))
+        W = jnp.asarray(st.W[:m], jnp.float32)
+        alive = np.asarray(st.alive[:m])
+        pad = total - m
         if pad:
             W = jnp.pad(W, ((0, pad), (0, 0)))
             docs = jnp.pad(docs, ((0, pad), (0, 0), (0, 0)))
             mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        row_ids = np.full(total, -1, np.int32)
+        row_ids[:m][alive] = np.arange(m, dtype=np.int32)[alive]
+        row_valid = row_ids >= 0
+        self._rows_per_shard = rps
+        self._row_of = {int(i): int(i) for i in np.flatnonzero(alive)}
+        free = np.flatnonzero(~row_valid)
+        self._free_rows = [
+            sorted(free[(free >= s * rps) & (free < (s + 1) * rps)].tolist(),
+                   reverse=True)
+            for s in range(n)]
+        extra = {"row_ids": jnp.asarray(row_ids),
+                 "row_valid": jnp.asarray(row_valid)}
         if self._sq8:
             W, w_scales = sq8_quant(W)
             docs, doc_scales = sq8_quant(docs)
             state = dist.ShardedRetrievalState(
                 psi=idx.psi, W=W, doc_tokens=docs, doc_mask=mask,
-                W_scales=w_scales, doc_scales=doc_scales)
+                W_scales=w_scales, doc_scales=doc_scales, **extra)
         else:
             state = dist.ShardedRetrievalState(
-                psi=idx.psi, W=W, doc_tokens=docs, doc_mask=mask)
+                psi=idx.psi, W=W, doc_tokens=docs, doc_mask=mask, **extra)
         self._state = jax.device_put(
             state, dist.state_shardings(self._mesh, state))
 
@@ -162,10 +214,8 @@ class ShardedLemurRetriever:
                 self._mesh,
                 self.cfg.replace(k=resolved.k, k_prime=resolved.k_prime),
                 k_prime_local=self._k_prime_local,
-                m_real=self._m_real,
                 use_fused_gather=resolved.use_fused_gather,
                 use_one_launch=resolved.use_one_launch)
-            m_real = self._m_real
             counts = self._trace_counts
             shapes = self._trace_shapes
 
@@ -174,9 +224,10 @@ class ShardedLemurRetriever:
                 skey = key + (tuple(q.shape),)
                 shapes[skey] = shapes.get(skey, 0) + 1
                 scores, ids = serve(state, q, qm)
-                valid = ids < m_real  # pads arrive id >= m_real, score NEG-ish
+                # free/tombstoned rows arrive id -1 (the row_ids map), score
+                # NEG-ish — pin their scores so they sort last deterministically
+                valid = ids >= 0
                 scores = jnp.where(valid, scores, maxsim.NEG)
-                ids = jnp.where(valid, ids, -1)
                 if scores.shape[1] < resolved.k:
                     # k exceeds the (padded) corpus: keep the facade's (B, k)
                     # pad-to-k contract instead of the merge's narrower width
@@ -217,20 +268,94 @@ class ShardedLemurRetriever:
                                      sq8=self._sq8,
                                      k_prime_local=self._k_prime_local)
 
-    # -- growth -------------------------------------------------------------
+    # -- mutation -----------------------------------------------------------
 
     def add(self, doc_tokens, doc_mask, *, seed: int = 0) -> "ShardedLemurRetriever":
         """Incremental growth (§4.3) with shard-balanced placement: new W
-        rows come from the base facade's frozen-ψ OLS solver, then the grown
-        corpus is re-padded and re-block-sharded so every device again owns
-        ``ceil(m/n)`` rows.  Compiled serve steps are invalidated (the
-        corpus shape and the ``m_real`` pad mask changed)."""
+        rows come from the base facade's frozen-ψ OLS solver, then the new
+        docs are written IN PLACE into free rows of the least-occupied
+        shards.  While the pool has rows (and the token width fits), no
+        leaf changes shape — compiled serve steps survive with zero new
+        traces; an outgrown pool triggers one bucket-doubling rebuild."""
         self._base.add(doc_tokens, doc_mask, seed=seed)
-        self._rebuild_state()
-        self._compiled.clear()
-        self._trace_counts.clear()
-        self._trace_shapes.clear()
+        self._place(self._base.last_added_ids)
         return self
+
+    def delete(self, doc_ids) -> "ShardedLemurRetriever":
+        """Tombstone docs: evict their rows in place (scan mask off, tokens
+        masked — a deleted doc can never surface) and return the rows to
+        the per-shard free lists.  Surviving ids are unchanged."""
+        self._base.delete(doc_ids)
+        self._evict(doc_ids)
+        return self
+
+    def update(self, doc_ids, doc_tokens, doc_mask, *,
+               seed: int = 0) -> np.ndarray:
+        """Replace docs under ONE version bump (the base facade's
+        delete+add); returns the NEW external ids."""
+        ids = self._base.update(doc_ids, doc_tokens, doc_mask, seed=seed)
+        self._evict(doc_ids)
+        self._place(ids)
+        return ids
+
+    def _evict(self, doc_ids) -> None:
+        rows = np.asarray([self._row_of.pop(int(i))
+                           for i in np.asarray(doc_ids).reshape(-1)],
+                          np.int64)
+        st = self._state
+        state = st._replace(
+            W=st.W.at[rows].set(jnp.zeros((), st.W.dtype)),
+            doc_mask=st.doc_mask.at[rows].set(False),
+            row_ids=st.row_ids.at[rows].set(-1),
+            row_valid=st.row_valid.at[rows].set(False),
+        )
+        self._state = jax.device_put(
+            state, dist.state_shardings(self._mesh, state))
+        for r in rows.tolist():
+            self._free_rows[r // self._rows_per_shard].append(r)
+
+    def _place(self, new_ids) -> None:
+        ids = np.asarray(new_ids, np.int32).reshape(-1)
+        if not ids.size:
+            return
+        st = self._state
+        store = self._base.index.store
+        if (store.td_max > st.doc_tokens.shape[1]
+                or ids.size > sum(len(f) for f in self._free_rows)):
+            self._rebuild_state()
+            return
+        rows = []
+        for _ in ids:
+            s = max(range(len(self._free_rows)),
+                    key=lambda i: len(self._free_rows[i]))
+            rows.append(self._free_rows[s].pop())
+        rows_np = np.asarray(rows, np.int64)
+        jids = jnp.asarray(ids)
+        toks, tmask = pages.gather_docs(store, jids)
+        w = jnp.take(store.W, jids, axis=0).astype(jnp.float32)
+        wide = st.doc_tokens.shape[1] - toks.shape[1]
+        if wide:
+            toks = jnp.pad(toks, ((0, 0), (0, wide), (0, 0)))
+            tmask = jnp.pad(tmask, ((0, 0), (0, wide)))
+        upd = {"doc_mask": st.doc_mask.at[rows_np].set(tmask),
+               "row_ids": st.row_ids.at[rows_np].set(jids),
+               "row_valid": st.row_valid.at[rows_np].set(True)}
+        if self._sq8:
+            # per-row/per-token quantization: requantizing ONLY the new rows
+            # is exactly what quantizing the whole array would produce
+            w, ws = sq8_quant(w)
+            toks, ts = sq8_quant(toks)
+            upd.update(W_scales=st.W_scales.at[rows_np].set(ws),
+                       doc_scales=st.doc_scales.at[rows_np].set(ts))
+        state = st._replace(
+            W=st.W.at[rows_np].set(w.astype(st.W.dtype)),
+            doc_tokens=st.doc_tokens.at[rows_np].set(
+                toks.astype(st.doc_tokens.dtype)),
+            **upd)
+        self._state = jax.device_put(
+            state, dist.state_shardings(self._mesh, state))
+        for i, r in zip(ids.tolist(), rows):
+            self._row_of[int(i)] = r
 
     # -- persistence --------------------------------------------------------
 

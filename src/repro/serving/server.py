@@ -16,11 +16,13 @@ facade (or its sharded twin) into an online service:
   token rows are exact no-ops; padded batch rows are sliced away).
   Returned top-k ids are bit-identical to a direct ``retriever.search()``
   of the raw ragged query; scores match to float-reduction tolerance.
-* **Streaming add.**  ``add()`` enqueues a growth op that acts as a queue
-  barrier: searches submitted before it complete against the old snapshot,
-  the worker then applies ``retriever.add`` atomically between
-  micro-batches (the worker is the only thread touching the retriever),
-  and every later search sees the grown corpus.
+* **Streaming mutation.**  ``add()`` / ``delete()`` / ``update()`` enqueue
+  corpus mutations that act as queue barriers: searches submitted before
+  one complete against the old snapshot, the worker then applies the
+  retriever mutation atomically between micro-batches (the worker is the
+  only thread touching the retriever), and every later search sees the
+  mutated corpus.  Every barrier future resolves — drained, failed typed,
+  or cancelled on a non-drain stop — never leaked.
 * **Deadlines.**  ``submit(..., deadline_s=...)`` bounds how long a request
   may wait for service: a request whose deadline has passed when the worker
   would admit it to a micro-batch resolves with a typed
@@ -221,11 +223,17 @@ class _Search:
 
 
 @dataclasses.dataclass
-class _Add:
-    doc_tokens: np.ndarray
-    doc_mask: np.ndarray
-    seed: int
+class _Mutation:
+    """A FIFO-barrier corpus mutation: ``add``, ``delete``, or ``update``.
+    All three share the same queue semantics — searches submitted earlier
+    run against the old snapshot, the worker applies the mutation atomically
+    between micro-batches, later searches see the new corpus."""
+    kind: str                            # "add" | "delete" | "update"
     future: Future
+    doc_tokens: np.ndarray | None = None
+    doc_mask: np.ndarray | None = None
+    doc_ids: np.ndarray | None = None
+    seed: int = 0
 
 
 # --------------------------------------------------------------------------
@@ -418,22 +426,62 @@ class RetrieverServer:
         """Enqueue streaming growth.  Acts as a FIFO barrier: earlier
         searches run against the old snapshot, the swap happens atomically
         between micro-batches, later searches see the new docs.  The future
-        resolves to the grown corpus size ``m``."""
-        fut: Future = Future()
-        op = _Add(np.asarray(doc_tokens), np.asarray(doc_mask), seed, fut)
+        resolves to the grown corpus size ``m`` (and carries
+        ``added_ids`` + ``snapshot_version``)."""
+        return self._enqueue_mutation(_Mutation(
+            "add", Future(), doc_tokens=np.asarray(doc_tokens),
+            doc_mask=np.asarray(doc_mask), seed=seed))
+
+    def delete(self, doc_ids) -> Future:
+        """Enqueue a tombstone delete (same FIFO-barrier semantics as
+        :meth:`add`).  The future resolves to the surviving live-doc count
+        ``n_alive``; unknown/already-deleted ids resolve it with the
+        retriever's ``ValueError``."""
+        return self._enqueue_mutation(_Mutation(
+            "delete", Future(), doc_ids=np.asarray(doc_ids, np.int32)))
+
+    def update(self, doc_ids, doc_tokens, doc_mask, *, seed: int = 0) -> Future:
+        """Enqueue a replace (delete+add under ONE snapshot version — the
+        facade's ``update``).  The future resolves to the NEW external ids
+        of the replacement docs."""
+        return self._enqueue_mutation(_Mutation(
+            "update", Future(), doc_tokens=np.asarray(doc_tokens),
+            doc_mask=np.asarray(doc_mask),
+            doc_ids=np.asarray(doc_ids, np.int32), seed=seed))
+
+    def _enqueue_mutation(self, op: _Mutation) -> Future:
         with self._cond:
             if self._stopping:
                 raise RuntimeError("server is stopped")
             self._queue.append(op)
             self._cond.notify_all()
-        return fut
+        return op.future
 
     # -- worker -------------------------------------------------------------
 
     def _serve_loop(self) -> None:
+        # the finally clause is the no-leak guarantee: HOWEVER the worker
+        # exits (drain, cancel, or an unexpected crash), every future still
+        # in the queue resolves — cancelled on a non-drain stop, failed with
+        # the worker's exception on a crash — so a caller blocked on
+        # ``.result(timeout=...)`` always observes a typed outcome, never a
+        # hang until timeout
+        try:
+            self._serve_loop_inner()
+        except BaseException as e:  # noqa: BLE001 — resolve then re-raise
+            with self._cond:
+                pending = list(self._queue)
+                self._queue.clear()
+            for op in pending:
+                if not op.future.done():
+                    op.future.set_exception(
+                        RuntimeError(f"server worker died: {e!r}"))
+            raise
+
+    def _serve_loop_inner(self) -> None:
         while True:
             batch: list[_Search] = []
-            add_op: _Add | None = None
+            mut_op: _Mutation | None = None
             expired: list[_Search] = []
             with self._cond:
                 # wedge while paused (unless a non-drain stop must cancel),
@@ -447,6 +495,11 @@ class RetrieverServer:
                 if not self._queue and self._stopping:
                     return
                 if self._stopping and not self._drain:
+                    # cancel-don't-leak: every queued future (searches AND
+                    # mutation barriers) resolves with CancelledError to its
+                    # waiters — Future.cancel() on a pending future always
+                    # succeeds here because the worker (sole executor) is
+                    # the one abandoning it
                     for op in self._queue:
                         op.future.cancel()
                     self._queue.clear()
@@ -464,25 +517,26 @@ class RetrieverServer:
                     self._queue.extend(kept)
                 if self._queue:
                     if self._stopping and self._drain:
-                        # drain ordering guarantee: pending add() barriers are
-                        # flushed BEFORE the remaining searches are served, so
-                        # drained results reflect the final snapshot version
-                        adds = [op for op in self._queue
-                                if isinstance(op, _Add)]
-                        if adds and not isinstance(self._queue[0], _Add):
+                        # drain ordering guarantee: pending mutation barriers
+                        # are flushed BEFORE the remaining searches are
+                        # served, so drained results reflect the final
+                        # snapshot version
+                        muts = [op for op in self._queue
+                                if isinstance(op, _Mutation)]
+                        if muts and not isinstance(self._queue[0], _Mutation):
                             rest = [op for op in self._queue
-                                    if not isinstance(op, _Add)]
+                                    if not isinstance(op, _Mutation)]
                             self._queue.clear()
-                            self._queue.extend(adds + rest)
+                            self._queue.extend(muts + rest)
                     head = self._queue[0]
-                    if isinstance(head, _Add):
-                        add_op = self._queue.popleft()
+                    if isinstance(head, _Mutation):
+                        mut_op = self._queue.popleft()
                     else:
                         batch = self._collect_batch(head)
             if expired:
                 self._resolve_expired(expired)
-            if add_op is not None:
-                self._apply_add(add_op)
+            if mut_op is not None:
+                self._apply_mutation(mut_op)
             elif batch:
                 self._run_batch(batch)
 
@@ -507,8 +561,8 @@ class RetrieverServer:
             out = []
             now = time.perf_counter()
             for op in self._queue:
-                if isinstance(op, _Add):
-                    break  # adds are barriers: never batch across one
+                if isinstance(op, _Mutation):
+                    break  # mutations are barriers: never batch across one
                 if op.deadline is not None and now > op.deadline:
                     continue  # expired: swept at loop top, never takes a slot
                 if (self._ladder.tq_bucket(op.q.shape[0]), op.params) == key:
@@ -570,18 +624,32 @@ class RetrieverServer:
             op.future.snapshot_version = version
             op.future.set_result((scores[i], ids[i]))
 
-    def _apply_add(self, op: _Add) -> None:
+    def _apply_mutation(self, op: _Mutation) -> None:
         self._progress_t = time.perf_counter()
+        r = self._retriever
         try:
-            self._retriever.add(op.doc_tokens, op.doc_mask, seed=op.seed)
+            if op.kind == "add":
+                r.add(op.doc_tokens, op.doc_mask, seed=op.seed)
+                result = r.m
+                op.future.added_ids = np.asarray(
+                    getattr(r, "last_added_ids", np.empty(0, np.int32)))
+            elif op.kind == "delete":
+                r.delete(op.doc_ids)
+                result = r.n_alive
+            else:  # update
+                result = np.asarray(r.update(op.doc_ids, op.doc_tokens,
+                                             op.doc_mask, seed=op.seed))
         except Exception as e:  # noqa: BLE001
             op.future.set_exception(e)
             return
         self._progress_t = time.perf_counter()
         # which snapshot this barrier produced — the fleet write barrier
-        # asserts every replica lands on the same version
-        op.future.snapshot_version = getattr(self._retriever, "version", None)
-        op.future.set_result(self._retriever.m)
+        # asserts every replica lands on the same version — and what the
+        # mutation logically wrote (the add-amortization bench reads it off
+        # the future so churn needn't serialize on the worker)
+        op.future.snapshot_version = getattr(r, "version", None)
+        op.future.mutation_bytes = getattr(r, "last_mutation_bytes", 0)
+        op.future.set_result(result)
 
 
 __all__ = ["RetrieverServer", "ServerStats", "DeadlineExceeded", "Overloaded"]

@@ -155,6 +155,69 @@ def test_sharded_add_matches_facade(run_forced8):
     assert "OK" in out
 
 
+def test_sharded_mutation_matches_facade(run_forced8):
+    """Interleaved add/delete/update on the slot-pool sharded facade: an
+    in-capacity mutation is an in-place row write (ZERO new traces for the
+    already-compiled serve step), tombstoned ids never surface, and the
+    mutated 8-device search stays bit-identical to an identically mutated
+    single-device facade."""
+    out = run_forced8(_BUILD + textwrap.dedent("""
+    r, q, qm = build()
+    rl = r.clone()                    # independent local twin (shared solver
+    sr = r.shard(MESH8, sq8=False)    # => bit-identical fitted W rows)
+    params = SearchParams(use_ann=False)
+    sr.search(q, qm, params)
+    assert sr.trace_count() == 1
+    extra = synthetic.make_corpus(m=12, d=16, avg_tokens=8, max_tokens=8,
+                                  n_centers=16, seed=9)
+    for t in (sr, rl):
+        t.add(extra.doc_tokens, extra.doc_mask)
+        t.delete(t.last_added_ids[:6])
+        t.update([3, 7], extra.doc_tokens[6:8], extra.doc_mask[6:8])
+    assert sr.m == rl.m == 104 and sr.n_alive == rl.n_alive == 96
+    assert sr.version == rl.version == 3     # update bumps ONCE
+    # pool had free rows + token width fits => in-place writes, no retrace
+    _, ids = sr.search(q, qm, params)
+    assert sr.trace_count() == 1, "in-capacity mutation retraced the serve step"
+    gone = set(range(90, 96)) | {3, 7}
+    assert not (set(np.asarray(ids).ravel().tolist()) & gone)
+    # full-coverage exact parity vs the identically mutated local facade
+    full = SearchParams(use_ann=False, k_prime=sr.m)
+    want_s, want_i = rl.search(q, qm, full)
+    got_s, got_i = sr.search(q, qm, full)
+    assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_mutation_sq8_single_vs_8dev(run_forced8):
+    """The same churn under SQ8: both meshes quantize the in-place row
+    writes identically, so 1-device and 8-device search stay bit-identical
+    and deleted ids never surface from the quantized scan either."""
+    out = run_forced8(_BUILD + textwrap.dedent("""
+    r, q, qm = build()
+    extra = synthetic.make_corpus(m=12, d=16, avg_tokens=8, max_tokens=8,
+                                  n_centers=16, seed=9)
+    res = []
+    for mesh in (MESH1, MESH8):
+        sr = r.clone().shard(mesh, sq8=True)
+        sr.add(extra.doc_tokens, extra.doc_mask)
+        sr.delete(sr.last_added_ids[:6])
+        sr.update([3, 7], extra.doc_tokens[6:8], extra.doc_mask[6:8])
+        res.append(sr.search(q, qm, SearchParams(use_ann=False,
+                                                 k_prime=sr.m)))
+    (s1, i1), (s8, i8) = res
+    assert np.array_equal(np.asarray(i1), np.asarray(i8))
+    assert np.array_equal(np.asarray(s1), np.asarray(s8))
+    gone = set(range(90, 96)) | {3, 7}
+    assert not (set(np.asarray(i8).ravel().tolist()) & gone)
+    print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_sharded_k_exceeds_corpus_pads_to_k(run_forced8):
     """k > m on a corpus smaller than the device count: search must keep
     the facade's (B, k) shape, padding with (NEG, -1) — not return the

@@ -344,6 +344,63 @@ def test_add_barrier_excuses_quarantined_replica(base):
         assert reps[0].version == reps[2].version == 1
 
 
+def test_router_delete_update_barrier_end_to_end(base):
+    """The generalized write barrier, happy path: delete() and update()
+    fan out to every replica, hold until all apply, land the fleet on one
+    snapshot version, and post-barrier searches on EVERY replica see the
+    replacement doc under its new id — never the tombstoned ones."""
+    reps = clone_replicas(base, 3)
+    grow = synthetic.make_corpus(m=4, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=23)
+    repl = synthetic.make_corpus(m=1, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=24)
+    with Router(reps, ladder=BucketLadder((8, 16), 2),
+                stall_timeout_s=30.0) as router:
+        af = router.add(grow.doc_tokens, grow.doc_mask)
+        assert af.result(timeout=TIMEOUT) == base.m + 4
+        # clones share the OLS solver => bit-identical adds => same ids
+        ids = np.arange(base.m, base.m + 4)
+        df = router.delete(ids[:2].tolist())
+        assert df.result(timeout=TIMEOUT) == base.m + 2   # fleet n_alive
+        assert df.snapshot_version == 2
+        uf = router.update([int(ids[2])], repl.doc_tokens, repl.doc_mask)
+        new = np.asarray(uf.result(timeout=TIMEOUT))
+        assert new.tolist() == [base.m + 4]               # fresh slot id
+        assert uf.snapshot_version == 3                   # ONE bump
+        assert {r.version for r in reps} == {3}
+        assert {r.n_alive for r in reps} == {base.m + 2}
+        q3 = np.asarray(repl.doc_tokens[0][repl.doc_mask[0]])
+        full = SearchParams(use_ann=False, k_prime=base.m + 5)
+        for _ in range(6):
+            f = router.submit(q3, params=full)
+            _, got = f.result(timeout=TIMEOUT)
+            assert got[0] == base.m + 4 and f.snapshot_version == 3
+            assert int(ids[2]) not in got and int(ids[0]) not in got
+
+
+def test_router_stop_without_drain_resolves_mutation_barriers(base):
+    """The no-leak bugfix through the fleet layer: a non-drain router stop
+    cancels every replica's queued mutation, and each pending fleet barrier
+    (add, delete, update) resolves with a TYPED error — a caller blocked on
+    ``result(timeout=...)`` never hangs, and no replica applied anything."""
+    reps = clone_replicas(base, 2)
+    grow = synthetic.make_corpus(m=2, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=21)
+    router = Router(reps, ladder=BucketLadder((8,), 2),
+                    stall_timeout_s=30.0).start()
+    for srv in router.servers:
+        srv.pause()                 # wedge both workers: barriers stay queued
+    af = router.add(grow.doc_tokens, grow.doc_mask)
+    df = router.delete([0])
+    uf = router.update([1], grow.doc_tokens[:1], grow.doc_mask[:1])
+    assert not af.done() and not df.done() and not uf.done()
+    router.stop(drain=False, timeout=TIMEOUT)
+    for f in (af, df, uf):
+        with pytest.raises(RuntimeError, match="no replica completed"):
+            f.result(timeout=5.0)   # resolves promptly, typed — not a hang
+    assert {r.version for r in reps} == {0}, "cancelled mutation applied"
+
+
 def test_stalled_replica_quarantined_and_requests_rehomed(base):
     reps = clone_replicas(base, 2)
     ladder = BucketLadder((8,), 2)

@@ -121,17 +121,182 @@ def test_one_trace_per_search_params(retriever, queries):
     assert r.trace_count(params) == 2
 
 
-def test_add_invalidates_compiled_fns(retriever, queries, tiny_corpus):
+def test_add_preserves_compiled_fns(retriever, queries, tiny_corpus):
+    """The streaming-add bugfix contract: compiled query fns take the
+    mutable state (paged store + backend state) as jit ARGUMENTS, so an add
+    that fits the pre-grown pool changes no shapes and issues ZERO new
+    traces — the compile cache SURVIVES the mutation."""
+    q, qm = queries
+    exact = SearchParams(k=5, use_ann=False)
+    for name in ("bruteforce", "ivf"):
+        r = retriever.with_backend(name, key=jax.random.PRNGKey(1))
+        r.search(q, qm, exact)
+        m0 = r.m
+        assert r.trace_count(exact) == 1
+        r.add(tiny_corpus.doc_tokens[:15], tiny_corpus.doc_mask[:15])
+        assert r.m == m0 + 15
+        _, ids = r.search(q, qm, exact)  # grown corpus, SAME compiled fn
+        assert r.trace_count(exact) == 1, "in-capacity add retraced"
+        assert int(jnp.max(ids)) < r.m
+    # the ANN path survives too: IVF cluster-list capacity is pow2-bucketed
+    # with a never-shrink floor, so an in-capacity add keeps list shapes
+    r = retriever.with_backend("ivf", key=jax.random.PRNGKey(1))
+    ann = SearchParams(k=5)
+    r.search(q, qm, ann)
+    r.add(tiny_corpus.doc_tokens[:15], tiny_corpus.doc_mask[:15])
+    _, ids = r.search(q, qm, ann)
+    assert r.trace_count(ann) == 1, "in-capacity add retraced the IVF path"
+    assert int(jnp.max(ids)) < r.m
+
+
+def test_delete_update_lifecycle(retriever, queries, tiny_corpus):
+    """delete() tombstones (stable surviving ids, deleted ids never
+    surface), update() replaces under ONE version bump with NEW ids."""
     q, qm = queries
     r = retriever.with_backend("bruteforce")
-    params = SearchParams(k=5)
-    r.search(q, qm, params)
+    params = SearchParams(k=10, use_ann=False)
+    m0, v0 = r.m, r.version
+    r.add(tiny_corpus.doc_tokens[:8], tiny_corpus.doc_mask[:8])
+    added = r.last_added_ids
+    np.testing.assert_array_equal(added, np.arange(m0, m0 + 8))
+    r.delete(added)
+    assert r.m == m0 + 8 and r.n_alive == m0  # slots never reused
+    assert r.version == v0 + 2
+    _, ids = r.search(q, qm, params)
+    assert not np.isin(np.asarray(ids), np.asarray(added)).any()
+    # unknown / double deletes are typed errors
+    with pytest.raises(ValueError):
+        r.delete(added[:1])
+    with pytest.raises(ValueError):
+        r.delete([r.m + 5])
+    new_ids = r.update([0, 1], tiny_corpus.doc_tokens[:2],
+                       tiny_corpus.doc_mask[:2])
+    assert r.version == v0 + 3  # ONE bump for delete+add
+    np.testing.assert_array_equal(new_ids, np.arange(m0 + 8, m0 + 10))
+    _, ids = r.search(q, qm, params)
+    assert not np.isin(np.asarray(ids), [0, 1]).any()
+
+
+# --------------------------------------------------------------------------
+# paged corpus: doc-id stability, tombstone masking, rebuild parity
+# --------------------------------------------------------------------------
+
+def _churn(r, corpus):
+    """One interleaved add/delete/update round; returns the set of ids that
+    must never surface again."""
     m0 = r.m
-    r.add(tiny_corpus.doc_tokens[:15], tiny_corpus.doc_mask[:15])
-    assert r.m == m0 + 15
-    _, ids = r.search(q, qm, params)  # must run over the grown corpus
-    assert r.trace_count(params) == 1  # fresh cache: one new trace
-    assert int(jnp.max(ids)) < r.m
+    r.add(corpus.doc_tokens[:12], corpus.doc_mask[:12])
+    added = r.last_added_ids
+    np.testing.assert_array_equal(added, np.arange(m0, m0 + 12))
+    r.delete(added[:6])
+    upd = [3, 9, int(added[6])]
+    r.update(upd, corpus.doc_tokens[20:23], corpus.doc_mask[20:23])
+    return set(added[:6].tolist()) | set(upd)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_tombstones_never_surface_any_backend(name, retriever, queries,
+                                              tiny_corpus):
+    """Backends are never rebuilt on delete — their stale candidates are
+    masked after every first stage — so across all five backends, both
+    gather paths (fused page-fed kernel dispatch and legacy materialize-
+    from-pages), and both the ANN and exact-scan routes, a deleted or
+    replaced doc id can never surface."""
+    q, qm = queries
+    r = retriever.with_backend(name, key=jax.random.PRNGKey(7))
+    dead = _churn(r, tiny_corpus)
+    for fused in (True, False):
+        for params in (SearchParams(k=10, use_fused_gather=fused),
+                       SearchParams(k=10, use_ann=False, k_prime=r.m,
+                                    use_fused_gather=fused)):
+            _, ids = r.search(q, qm, params)
+            ids = np.asarray(ids)
+            hit = set(ids.ravel().tolist()) & dead
+            assert not hit, f"tombstoned ids surfaced (fused={fused}): {hit}"
+            assert ids.max() < r.m
+
+
+def test_tombstones_never_surface_sq8(tiny_corpus, queries):
+    """Same contract under the SQ8 first-stage tier (cfg.ivf.sq8)."""
+    q, qm = queries
+    cfg = LemurConfig(d=16, d_prime=64, m_pretrain=128, n_train=1024,
+                      n_ols=512, epochs=4, k=10, k_prime=60, anns="ivf",
+                      ivf=IVFBackendConfig(sq8=True, nprobe=32))
+    r = LemurRetriever.build(tiny_corpus, cfg, key=jax.random.PRNGKey(0))
+    dead = _churn(r, tiny_corpus)
+    for fused in (True, False):
+        _, ids = r.search(q, qm, SearchParams(k=10, use_fused_gather=fused))
+        hit = set(np.asarray(ids).ravel().tolist()) & dead
+        assert not hit, f"tombstoned ids surfaced (sq8, fused={fused}): {hit}"
+
+
+def test_ids_refer_to_same_documents_across_churn(retriever, tiny_corpus):
+    """Stable external ids: a doc keeps answering to the SAME id across
+    unrelated add/delete/update churn (slots are never reused)."""
+    r = retriever.with_backend("bruteforce")
+
+    def top1(doc_id):
+        toks = tiny_corpus.doc_tokens[doc_id][tiny_corpus.doc_mask[doc_id]]
+        params = SearchParams(k=1, use_ann=False, k_prime=r.m)
+        _, ids = r.search(toks[None], np.ones((1, len(toks)), bool), params)
+        return int(np.asarray(ids)[0, 0])
+
+    probes = [5, 17, 40]
+    assert [top1(i) for i in probes] == probes
+    _churn(r, tiny_corpus)          # touches ids 3/9 + its own adds, not 5/17/40
+    assert [top1(i) for i in probes] == probes
+
+
+def test_surviving_ids_bit_identical_to_rebuild(retriever, queries,
+                                                tiny_corpus):
+    """The acceptance criterion: after interleaved add/delete/update, the
+    exact-scan search over the mutated paged store returns bit-identical
+    scores — and ids referring to the same documents — as a from-scratch
+    dense rebuild over only the surviving docs (same ψ/stats/W rows, ids
+    mapped through the survivor order)."""
+    from repro.core import pages
+    from repro.core.index import LemurIndex
+
+    q, qm = queries
+    r = retriever.with_backend("bruteforce")
+    _churn(r, tiny_corpus)
+    st = r.index.store
+    alive = np.flatnonzero(np.asarray(st.alive)[: r.m])
+    toks, mask = pages.gather_docs(st, jnp.asarray(alive))
+    idx2 = LemurIndex.from_dense(r.cfg, r.index.psi, r.index.stats,
+                                 jnp.take(st.W, jnp.asarray(alive), axis=0),
+                                 toks, mask, "bruteforce", None)
+    r2 = LemurRetriever(idx2)
+    assert r2.m == r.n_alive
+    s1, i1 = r.search(q, qm, SearchParams(k=10, use_ann=False, k_prime=r.m))
+    s2, i2 = r2.search(q, qm, SearchParams(k=10, use_ann=False,
+                                           k_prime=r2.m))
+    np.testing.assert_array_equal(alive[np.asarray(i2)], np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s1))
+
+
+def test_save_load_preserves_tombstones(retriever, queries, tiny_corpus,
+                                        tmp_path):
+    """The persisted ``alive`` mask is load-bearing: a reloaded retriever
+    keeps its tombstones (deleted docs never resurface as zero-score rows),
+    its slot high-water mark, and its stable id numbering for further
+    growth."""
+    q, qm = queries
+    r = retriever.with_backend("bruteforce")
+    dead = _churn(r, tiny_corpus)
+    r.save(tmp_path / "mutated")
+    r2 = LemurRetriever.load(tmp_path / "mutated")
+    assert r2.m == r.m and r2.n_alive == r.n_alive
+    params = SearchParams(k=10, use_ann=False, k_prime=r.m)
+    s1, i1 = r.search(q, qm, params)
+    s2, i2 = r2.search(q, qm, params)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s1))
+    assert not (set(np.asarray(i2).ravel().tolist()) & dead)
+    # growth after reload continues the stable numbering (slots, not holes)
+    r2.add(tiny_corpus.doc_tokens[:2], tiny_corpus.doc_mask[:2])
+    np.testing.assert_array_equal(r2.last_added_ids,
+                                  np.arange(r.m, r.m + 2))
 
 
 # --------------------------------------------------------------------------
@@ -239,7 +404,7 @@ def test_legacy_free_functions_are_facade_shims(retriever, queries):
 def test_with_backend_shares_reduction(retriever):
     r2 = retriever.with_backend("dessert", key=jax.random.PRNGKey(2))
     assert r2.backend == "dessert" and r2.cfg.anns == "dessert"
-    assert r2.index.W is retriever.index.W  # ψ/W never re-trained
+    assert r2.index.store is retriever.index.store  # ψ/W never re-trained
     assert retriever.backend == "bruteforce"  # original untouched
 
 

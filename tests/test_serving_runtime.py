@@ -21,6 +21,10 @@ Three contracts, hardened across every registered first-stage backend:
 Every blocking wait carries an explicit timeout so a deadlocked
 micro-batcher fails the test instead of hanging the suite.
 """
+import concurrent.futures as cf
+import threading
+import time
+
 import jax
 import numpy as np
 import pytest
@@ -356,6 +360,52 @@ def test_replay_latency_measured_from_scheduled_arrival(base):
     assert rep["p50_ms"] > rep["submit_p50_ms"], rep
 
 
+def test_server_delete_update_fifo_visibility(base):
+    """delete()/update() through the server are FIFO barriers like add():
+    a search queued BEFORE a delete answers from the pre-delete snapshot,
+    one queued after can never surface the tombstoned doc, and an update's
+    replacement is immediately retrievable under its NEW id."""
+    from repro.data import synthetic
+
+    r = base.clone()
+    grow = synthetic.make_corpus(m=4, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=77)
+    repl = synthetic.make_corpus(m=1, d=16, avg_tokens=8, max_tokens=12,
+                                 n_centers=24, seed=78)
+    m0 = base.m
+    with RetrieverServer(r, ladder=BucketLadder((8, 16), 2),
+                         max_wait_us=200) as srv:
+        af = srv.add(grow.doc_tokens, grow.doc_mask)
+        assert af.result(timeout=TIMEOUT) == m0 + 4
+        ids = np.asarray(af.added_ids)
+        full = SearchParams(use_ann=False, k_prime=r.m)
+        q0 = np.asarray(grow.doc_tokens[0][grow.doc_mask[0]])
+        _, got = srv.search(q0, params=full, timeout=TIMEOUT)
+        assert got[0] == ids[0]
+        # wedge the worker so the queue orders deterministically:
+        # search -> delete -> search, then drain
+        srv.pause()
+        before = srv.submit(q0, params=full)
+        df = srv.delete(ids[:2])
+        after = srv.submit(q0, params=full)
+        srv.resume()
+        assert df.result(timeout=TIMEOUT) == m0 + 2      # n_alive
+        assert df.snapshot_version == 2
+        _, got = before.result(timeout=TIMEOUT)
+        assert got[0] == ids[0] and before.snapshot_version == 1
+        _, got = after.result(timeout=TIMEOUT)
+        assert ids[0] not in got and after.snapshot_version == 2
+        # update: replacement lands under a FRESH slot id, old id is gone
+        uf = srv.update([int(ids[2])], repl.doc_tokens, repl.doc_mask)
+        new = np.asarray(uf.result(timeout=TIMEOUT))
+        assert new.tolist() == [m0 + 4] and uf.snapshot_version == 3
+        full2 = SearchParams(use_ann=False, k_prime=r.m)
+        q3 = np.asarray(repl.doc_tokens[0][repl.doc_mask[0]])
+        _, got = srv.search(q3, params=full2, timeout=TIMEOUT)
+        assert got[0] == new[0] and int(ids[2]) not in got
+    assert r.m == m0 + 5 and r.n_alive == m0 + 2
+
+
 def test_server_stop_without_drain_cancels(base):
     r = LemurRetriever(base.index)
     srv = RetrieverServer(r, ladder=BucketLadder((8,), 2),
@@ -368,3 +418,41 @@ def test_server_stop_without_drain_cancels(base):
     assert "lost" not in states, states
     with pytest.raises(RuntimeError):
         srv.submit(_ragged_query(4, base.cfg.d, seed=0))
+
+
+def test_stop_without_drain_resolves_blocked_mutation_barrier(base,
+                                                              tiny_corpus):
+    """The no-leak bugfix (ISSUE 8): a caller already BLOCKED on
+    ``add().result(timeout=...)`` when the server is stopped without drain
+    observes a typed ``CancelledError`` promptly — every pending mutation
+    barrier future (add, delete, update) is cancelled, never leaked — and
+    the abandoned mutations were never applied to the retriever."""
+    r = LemurRetriever(base.index)
+    srv = RetrieverServer(r, ladder=BucketLadder((8,), 2),
+                          max_wait_us=500_000).start()
+    srv.pause()                    # wedge the worker: the barriers queue up
+    m0, v0 = r.m, r.version
+    fa = srv.add(tiny_corpus.doc_tokens[:3], tiny_corpus.doc_mask[:3])
+    fd = srv.delete([0])
+    fu = srv.update([1], tiny_corpus.doc_tokens[:1],
+                    tiny_corpus.doc_mask[:1])
+    outcome: dict = {}
+
+    def blocked_caller():
+        try:
+            outcome["kind"] = ("result", fa.result(timeout=TIMEOUT))
+        except cf.CancelledError:
+            outcome["kind"] = "cancelled"
+        except Exception as e:  # noqa: BLE001 — the test asserts the type
+            outcome["kind"] = repr(e)
+
+    th = threading.Thread(target=blocked_caller, daemon=True)
+    th.start()
+    time.sleep(0.05)               # let the caller actually block
+    assert srv.stop(drain=False, timeout=TIMEOUT)
+    th.join(timeout=5.0)
+    assert not th.is_alive(), "caller blocked on add().result() hung"
+    assert outcome["kind"] == "cancelled"
+    for f in (fa, fd, fu):
+        assert f.done() and f.cancelled(), "mutation barrier future leaked"
+    assert r.m == m0 and r.version == v0, "cancelled mutation was applied"
