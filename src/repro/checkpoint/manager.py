@@ -49,30 +49,51 @@ def _leaf_dict(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
-def save(directory: str | os.PathLike, step: int, tree: Any, *,
-         extra: dict | None = None) -> pathlib.Path:
-    """Synchronous checkpoint save.  Returns the committed step directory."""
+def _fsync_file(path: pathlib.Path) -> None:
+    with open(path, "rb") as f:
+        os.fsync(f.fileno())
+
+
+def _write_step(directory: str | os.PathLike, step: int,
+                leaves: dict[str, np.ndarray], *,
+                extra: dict | None = None) -> pathlib.Path:
+    """The one crash-safe write path (sync and async saves both use it).
+
+    Ordering is the whole contract: shard npz AND manifest are written and
+    fsync'd BEFORE the ``_COMMITTED`` marker (itself fsync'd), all inside a
+    ``.tmp`` staging dir that is renamed into place LAST.  A crash at any
+    point leaves either the previous committed step intact (restore ignores
+    dirs without the marker; ``.tmp`` names never match the step regex) or
+    the new step fully durable — never a torn checkpoint."""
     d = pathlib.Path(directory) / f"step_{step:08d}"
     tmp = d.with_suffix(".tmp")
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    leaves = _leaf_dict(tree)
     manifest = {
         "step": step,
         "time": time.time(),
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in leaves.items()},
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in leaves.items()},
         "extra": extra or {},
     }
-    np.savez(tmp / "shard_00000.npz", **{k.replace("/", "__"): v for k, v in leaves.items()})
+    np.savez(tmp / "shard_00000.npz",
+             **{k.replace("/", "__"): v for k, v in leaves.items()})
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-    with open(tmp / "shard_00000.npz", "rb") as f:
-        os.fsync(f.fileno())
+    _fsync_file(tmp / "shard_00000.npz")
+    _fsync_file(tmp / "manifest.json")
     (tmp / "_COMMITTED").write_text("ok")
+    _fsync_file(tmp / "_COMMITTED")
     if d.exists():
         shutil.rmtree(d)
     tmp.rename(d)
     return d
+
+
+def save(directory: str | os.PathLike, step: int, tree: Any, *,
+         extra: dict | None = None) -> pathlib.Path:
+    """Synchronous checkpoint save.  Returns the committed step directory."""
+    return _write_step(directory, step, _leaf_dict(tree), extra=extra)
 
 
 def latest_step(directory: str | os.PathLike) -> int | None:
@@ -143,25 +164,10 @@ class CheckpointManager:
 
         def work():
             try:
-                d = self.directory / f"step_{step:08d}"
-                tmp = d.with_suffix(".tmp")
-                if tmp.exists():
-                    shutil.rmtree(tmp)
-                tmp.mkdir(parents=True)
-                manifest = {
-                    "step": step,
-                    "time": time.time(),
-                    "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                               for k, v in host.items()},
-                    "extra": extra or {},
-                }
-                np.savez(tmp / "shard_00000.npz",
-                         **{k.replace("/", "__"): v for k, v in host.items()})
-                (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-                (tmp / "_COMMITTED").write_text("ok")
-                if d.exists():
-                    shutil.rmtree(d)
-                tmp.rename(d)
+                # same crash-safe ordering as the sync path — the async
+                # worker used to skip every fsync, so a host crash after
+                # "commit" could still lose or tear the step
+                _write_step(self.directory, step, host, extra=extra)
                 self._prune()
             except Exception as e:  # noqa: BLE001
                 self._error = e

@@ -168,6 +168,41 @@ def from_dense(W, doc_tokens, doc_mask, *, page: int = TOKENS_PER_PAGE,
     return store, moved
 
 
+# --------------------------------------------------------------------------
+# mutation taps (observability seam for the index lifecycle)
+# --------------------------------------------------------------------------
+
+_MUTATION_TAPS: list = []
+
+
+def register_mutation_tap(fn) -> None:
+    """Subscribe ``fn(kind, ids, **payload)`` to every store mutation.
+
+    ``kind`` is ``"add"`` (payload: ``doc_tokens``, ``doc_mask``, ``w`` —
+    host numpy views of the NEW docs only) or ``"delete"`` (ids only).
+    Taps run synchronously on the mutating thread AFTER the store is
+    updated; they must be cheap and must never raise (exceptions are
+    swallowed so a broken observer cannot corrupt a mutation barrier).
+    This is the reservoir feed for ``lifecycle.DriftMonitor``."""
+    if fn not in _MUTATION_TAPS:
+        _MUTATION_TAPS.append(fn)
+
+
+def unregister_mutation_tap(fn) -> None:
+    try:
+        _MUTATION_TAPS.remove(fn)
+    except ValueError:
+        pass
+
+
+def _notify_taps(kind: str, ids, **payload) -> None:
+    for fn in list(_MUTATION_TAPS):
+        try:
+            fn(kind, ids, **payload)
+        except Exception:
+            pass
+
+
 def free_list(store: PagedStore) -> list[int]:
     """Ascending free page ids: the complement of the referenced pages.
     Deterministic, so snapshots/checkpoints never persist the allocator."""
@@ -253,6 +288,9 @@ def add_docs(store: PagedStore, free_pages: list[int], w_new, doc_tokens,
     # O(doc), never O(corpus) — the property the serving bench gates on.
     moved += (chunks.nbytes + table_rows.nbytes + counts.nbytes
               + n * store.d_prime * _ITEM + n + _ITEM)
+    if _MUTATION_TAPS:
+        _notify_taps("add", ids, doc_tokens=dt, doc_mask=dm,
+                     w=np.asarray(w_new, np.float32))
     return store, free_pages, ids, moved
 
 
@@ -288,6 +326,8 @@ def delete_docs(store: PagedStore, free_pages: list[int], doc_ids):
     )
     moved = int(ids.size) * (store.pages_per_doc * _ITEM + _ITEM
                              + store.d_prime * _ITEM + 1)
+    if _MUTATION_TAPS:
+        _notify_taps("delete", ids.astype(np.int32))
     return store, free_pages, moved
 
 

@@ -191,6 +191,12 @@ class _AddBarrier:
         self._on_fail = on_fail
         self._waiting: dict[int, Future] = {}
         self._versions: dict[int, int | None] = {}
+        # typed rejections (exc.preserves_replica_state): the replica
+        # REFUSED the mutation and provably kept its last-good snapshot —
+        # e.g. ``CorruptIndexError`` from warm-swap validation.  Not a
+        # replica failure: no quarantine, the aggregate carries the
+        # rejection instead.
+        self._rejections: dict[int, BaseException] = {}
         self._m: int | None = None
         self._sealed = False
         self.done = False
@@ -215,6 +221,7 @@ class _AddBarrier:
                 return
             self._waiting.pop(i, None)
             self._versions.pop(i, None)
+            self._rejections.pop(i, None)
             fire = self._ready_locked()
         if fire is not None:
             self._finish(*fire)
@@ -229,7 +236,12 @@ class _AddBarrier:
             if f.cancelled():
                 fail = (i, RuntimeError("replica mutation cancelled"))
             elif f.exception() is not None:
-                fail = (i, f.exception())
+                exc = f.exception()
+                if getattr(exc, "preserves_replica_state", False):
+                    self._rejections[i] = exc
+                    fire = self._ready_locked()
+                else:
+                    fail = (i, exc)
             else:
                 self._versions[i] = getattr(f, "snapshot_version", None)
                 self._m = f.result()
@@ -246,10 +258,22 @@ class _AddBarrier:
     def _ready_locked(self):
         if self._sealed and not self._waiting and not self.done:
             self.done = True
-            return dict(self._versions), self._m
+            return dict(self._versions), self._m, dict(self._rejections)
         return None
 
-    def _finish(self, versions: dict, m) -> None:
+    def _finish(self, versions: dict, m, rejections: dict) -> None:
+        if rejections and not versions:
+            # every surviving replica typed-rejected with state intact —
+            # deterministic transforms land here (e.g. SwapAborted); the
+            # fleet is still fully healthy on the last-good snapshot
+            self._agg.set_exception(next(iter(rejections.values())))
+            return
+        if rejections:
+            # some replicas applied, some rejected: genuine divergence
+            self._agg.set_exception(RuntimeError(
+                f"mutation divergence: replicas {sorted(rejections)} "
+                f"rejected while {sorted(versions)} applied"))
+            return
         if not versions:
             self._agg.set_exception(RuntimeError(
                 "mutation failed: no replica completed the barrier"))
@@ -287,7 +311,8 @@ class Router:
                  default_deadline_s: float | None = None,
                  default_params=None, slo=None,
                  stall_timeout_s: float = 1.0,
-                 health_interval_s: float = 0.05):
+                 health_interval_s: float = 0.05,
+                 event_log_size: int = 4096):
         if not replicas:
             raise ValueError("need at least one replica")
         self._ladder = ladder or BucketLadder()
@@ -309,7 +334,11 @@ class Router:
         self._inflight: list[dict[int, _FleetRequest]] = [
             {} for _ in replicas]
         self._barriers: list[_AddBarrier] = []
-        self._events: list[dict] = []
+        # bounded audit ring: a long-running fleet must not grow without
+        # limit; truncation is observable via ``events_dropped``
+        self._events: collections.deque[dict] = collections.deque(
+            maxlen=int(event_log_size))
+        self._events_dropped = 0
         self._stats = FleetStats()
         self._rid = 0
         self._stopping = False
@@ -388,6 +417,19 @@ class Router:
     def events(self) -> list[dict]:
         with self._lock:
             return list(self._events)
+
+    @property
+    def events_dropped(self) -> int:
+        """Audit-ring truncations: events evicted from the bounded
+        ``events()`` buffer since construction."""
+        with self._lock:
+            return self._events_dropped
+
+    def _record_event(self, **ev) -> None:
+        # callers hold self._lock (RLock makes double-entry safe anyway)
+        if len(self._events) == self._events.maxlen:
+            self._events_dropped += 1
+        self._events.append(ev)
 
     def pending(self) -> int:
         with self._lock:
@@ -505,6 +547,19 @@ class Router:
         return self._mutate(lambda srv: srv.update(doc_ids, doc_tokens,
                                                    doc_mask, seed=seed))
 
+    def apply(self, fn) -> Future:
+        """Snapshot-consistent generic transform fan-out — the warm-swap
+        path.  ``fn(retriever)`` runs inside every healthy replica's FIFO
+        mutation barrier (``RetrieverServer.apply``); the fleet barrier then
+        requires all replicas to land on the same ``snapshot_version``,
+        which a deterministic transform (e.g. ``install_refresh`` of one
+        shared ``RefreshResult``) guarantees.  A replica that fails its arm
+        is quarantined and excused; if validation rejects the transform on
+        every replica identically (e.g. ``CorruptIndexError``), the
+        aggregate future carries that exception and every replica keeps its
+        last-good snapshot."""
+        return self._mutate(lambda srv: srv.apply(fn))
+
     def _mutate(self, enqueue) -> Future:
         """Fan one mutation out to every healthy replica under an
         :class:`_AddBarrier` (a failed/cancelled replica arm quarantines
@@ -554,9 +609,9 @@ class Router:
                 self._inflight[i].pop(req.rid, None)
                 self._outstanding[i] -= 1
                 self._healthy[i] = False
-                self._events.append({"t": time.perf_counter(),
-                                     "event": "quarantine", "replica": i,
-                                     "reason": "submit refused"})
+                self._record_event(t=time.perf_counter(),
+                                   event="quarantine", replica=i,
+                                   reason="submit refused")
                 continue
             req.current = rep_fut
             rep_fut.add_done_callback(
@@ -629,9 +684,9 @@ class Router:
             if not self._healthy[i]:
                 return 0
             self._healthy[i] = False
-            self._events.append({"t": time.perf_counter(),
-                                 "event": "quarantine", "replica": i,
-                                 "reason": reason})
+            self._record_event(t=time.perf_counter(),
+                               event="quarantine", replica=i,
+                               reason=reason)
             log.warning("quarantining replica %d: %s", i, reason)
             reqs = [r for r in self._inflight[i].values() if not r.resolved]
             self._inflight[i].clear()

@@ -114,6 +114,7 @@ class SLOController:
         self._since_eval = 0
         self._clear_streak = 0
         self._transitions: list[RungTransition] = []
+        self._n_floor_breaches = 0
 
     # -- read side -----------------------------------------------------------
 
@@ -141,6 +142,17 @@ class SLOController:
             lat = np.fromiter(self._window, np.float64)
         return float(np.percentile(lat, 99) * 1e3) if lat.size else float("nan")
 
+    @property
+    def n_floor_breaches(self) -> int:
+        """Evaluations that breached the target while already at the floor
+        rung — nothing left to shed; the fleet needs more replicas, not a
+        cheaper operating point.  These must NOT clear the window or record
+        a transition: the window keeps accumulating so the moment load
+        drops, recovery hysteresis starts from real samples instead of an
+        empty window."""
+        with self._lock:
+            return self._n_floor_breaches
+
     # -- write side ----------------------------------------------------------
 
     def observe(self, latency_s: float, t: float = 0.0) -> int:
@@ -155,8 +167,16 @@ class SLOController:
             self._since_eval = 0
             p99 = float(np.percentile(
                 np.fromiter(self._window, np.float64), 99) * 1e3)
-            if p99 > self.target_p99_ms and self._rung < len(self._rungs) - 1:
-                self._step(self._rung + 1, p99, t)
+            if p99 > self.target_p99_ms:
+                if self._rung < len(self._rungs) - 1:
+                    self._step(self._rung + 1, p99, t)
+                else:
+                    # breach at the floor: no rung left to shed.  Do NOT
+                    # clear the window and do NOT record a transition —
+                    # recovery hysteresis must judge real samples the
+                    # moment load drops (see n_floor_breaches)
+                    self._n_floor_breaches += 1
+                    self._clear_streak = 0
             elif p99 < self._recover_frac * self.target_p99_ms and self._rung > 0:
                 self._clear_streak += 1
                 if self._clear_streak >= self._hold:
@@ -167,6 +187,8 @@ class SLOController:
 
     def _step(self, to_rung: int, p99_ms: float, t: float) -> None:
         # lock held by observe()
+        if to_rung == self._rung:
+            return  # guard: a same-rung "step" would spuriously clear state
         tr = RungTransition(t, self._rung, to_rung, p99_ms, self.target_p99_ms)
         self._transitions.append(tr)
         log.info("SLO %s: rung %d -> %d (windowed p99 %.1fms, target %.1fms)",

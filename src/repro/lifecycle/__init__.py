@@ -1,0 +1,41 @@
+"""Learned-index lifecycle: drift detection, background refresh, warm swap.
+
+LEMUR's first stage is a *trained* reduction — a mutable corpus silently
+degrades it.  This package closes the loop:
+
+    from repro.lifecycle import DriftMonitor, LifecycleManager
+
+    with RetrieverServer(r, ladder=ladder) as srv:
+        with LifecycleManager(srv, seed=0) as mgr:   # monitors, refreshes,
+            ...                                      # and warm-swaps alone
+
+See :mod:`repro.lifecycle.manager` for the event taxonomy and
+``tests/test_lifecycle_chaos.py`` for the fault-injection proof.
+"""
+from repro.lifecycle.chaos import ChaosError, ChaosInjector
+from repro.lifecycle.drift import DriftMonitor, DriftReport
+from repro.lifecycle.events import (DriftDetected, EventLog, LifecycleEvent,
+                                    RefreshCompleted, RefreshFailed,
+                                    RefreshStarted, SwapAborted,
+                                    SwapCompleted)
+from repro.lifecycle.manager import LifecycleManager
+from repro.lifecycle.refresh import RefreshResult, Refresher, build_refresh
+
+__all__ = [
+    "ChaosError",
+    "ChaosInjector",
+    "DriftDetected",
+    "DriftMonitor",
+    "DriftReport",
+    "EventLog",
+    "LifecycleEvent",
+    "LifecycleManager",
+    "RefreshCompleted",
+    "RefreshFailed",
+    "RefreshResult",
+    "RefreshStarted",
+    "Refresher",
+    "SwapAborted",
+    "SwapCompleted",
+    "build_refresh",
+]

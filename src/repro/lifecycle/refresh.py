@@ -1,0 +1,160 @@
+"""Background index refresh: re-fit the learned reduction on the live corpus.
+
+``build_refresh`` is a *pure function of one index snapshot* — it reads the
+immutable ``LemurIndex`` NamedTuple (safe from any thread while serving
+continues to mutate the retriever) and produces everything a warm swap
+installs:
+
+1. **re-sampled OLS probes** — ``x_ols`` drawn from the tokens of the docs
+   that are alive NOW, not the build-time training tokens, so the Gram
+   matrix reflects the drifted distribution;
+2. **re-fit latent map** — ``W`` rows for every alive slot in ``[0, m0)``
+   via the blocked OLS solve with frozen ψ and frozen target stats.  Dead
+   slots get zero rows (never fed through the solver: a tombstone's NEG
+   mask values would poison the fp32 normal equations) — which is exactly
+   what the slot-numbering invariant needs anyway;
+3. **re-clustered first stage** — a from-scratch ``be.build`` over the
+   re-fit latent rows, so IVF centroids move to where the corpus actually
+   is instead of extending the frozen build-time quantizer forever.
+
+ψ itself stays frozen: per §4.3 the MLP is pre-trained on a sample and the
+OLS output layer does the corpus-specific work, so refit+recluster recovers
+almost all drift-lost recall at a tiny fraction of a full rebuild.
+
+Determinism: given the same snapshot and ``seed``, the result is
+bit-identical — which is why a fleet can install one ``RefreshResult`` on
+every replica and still pass the barrier's same-snapshot-version check.
+
+Failure injection: ``chaos.check()`` runs at each phase boundary; any
+exception escapes with ``e.lifecycle_phase`` set so the manager can emit a
+typed ``RefreshFailed(phase=...)``.  An exception leaves the retriever and
+its served snapshot completely untouched.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..anns import registry
+from ..anns.base import CorpusView
+from ..core import indexer, pages
+
+
+class RefreshResult(NamedTuple):
+    """Everything ``LemurRetriever.install_refresh`` needs.  ``m0`` is the
+    slot high-water mark the rebuild covered; docs added after the snapshot
+    are caught up at install time with the new solver."""
+    backend: str
+    version: int           # snapshot version the rebuild started from
+    m0: int
+    W: Any                 # (m0, d_prime) re-fit latent rows, dead slots zero
+    ann: Any               # freshly built first-stage state over those rows
+    solver: dict           # new OLS solver state {"chol", "feats", "x_ols"}
+    seed: int
+    wall_s: float
+
+
+def build_refresh(retriever, *, seed: int = 0, chaos=None) -> RefreshResult:
+    """Rebuild the learned first stage from ``retriever``'s current snapshot.
+
+    Runs anywhere (worker thread included): only reads the immutable
+    snapshot.  Raises ``ValueError`` if the snapshot has no alive docs."""
+    t0 = time.perf_counter()
+    base = getattr(retriever, "_base", retriever)   # sharded -> facade
+    idx = base.snapshot()
+    version = int(base.version)
+    cfg, psi, stats = idx.cfg, idx.psi, idx.stats
+    m0 = idx.m
+    phase = "snapshot"
+    try:
+        alive = np.flatnonzero(np.asarray(idx.store.alive)[:m0])
+        if alive.size == 0:
+            raise ValueError("refresh: snapshot has no alive docs")
+        alive = jnp.asarray(alive.astype(np.int32))
+        # one dense materialization of [0, m0), reused by every phase below
+        toks, mask = pages.gather_docs(idx.store, jnp.arange(m0))
+
+        phase = "solver"
+        if chaos is not None:
+            chaos.check("refresh:solver")
+        a_toks, a_mask = toks[alive], mask[alive]
+        flat = np.asarray(a_toks).reshape(-1, idx.store.d)
+        ok = np.flatnonzero(np.asarray(a_mask).reshape(-1))
+        rng = np.random.default_rng(seed)
+        pick = rng.choice(ok, size=min(cfg.n_ols, ok.size), replace=False)
+        x_ols = jnp.asarray(flat[pick])
+        solver = indexer.ols_solver_state(psi, x_ols, cfg)
+
+        phase = "refit"
+        if chaos is not None:
+            chaos.check("refresh:refit")
+        w_alive = indexer.fit_output_layer_ols(psi, x_ols, a_toks, a_mask,
+                                               cfg, stats,
+                                               solver_state=solver)
+        W = jnp.zeros((m0, cfg.d_prime), idx.store.W.dtype).at[alive].set(
+            w_alive)
+
+        phase = "recluster"
+        if chaos is not None:
+            chaos.check("refresh:recluster")
+        be = registry.get_backend(idx.backend)
+        ann = be.build(jax.random.PRNGKey(seed), CorpusView(W, toks, mask),
+                       cfg.backend_config(idx.backend))
+    except Exception as e:
+        e.lifecycle_phase = phase
+        raise
+    result = RefreshResult(idx.backend, version, m0, W, ann, solver,
+                           seed, time.perf_counter() - t0)
+    if chaos is not None:
+        result = chaos.maybe_corrupt(result)
+    return result
+
+
+class Refresher:
+    """Run one ``build_refresh`` on a daemon worker thread.
+
+    Serving never blocks: the thread only reads an immutable snapshot.
+    ``result(timeout)`` joins and returns the :class:`RefreshResult`,
+    re-raising whatever the rebuild raised (with ``lifecycle_phase`` set).
+    """
+
+    def __init__(self, retriever, *, seed: int = 0, chaos=None):
+        self._retriever = retriever
+        self._seed = seed
+        self._chaos = chaos
+        self._result: RefreshResult | None = None
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="lemur-refresher")
+
+    def _run(self) -> None:
+        try:
+            self._result = build_refresh(self._retriever, seed=self._seed,
+                                         chaos=self._chaos)
+        except BaseException as e:
+            self._error = e
+
+    def start(self) -> "Refresher":
+        self._thread.start()
+        return self
+
+    def running(self) -> bool:
+        return self._thread.is_alive()
+
+    def result(self, timeout: float | None = None) -> RefreshResult:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("refresh still running")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+
+__all__ = ["RefreshResult", "Refresher", "build_refresh"]

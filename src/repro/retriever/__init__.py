@@ -17,11 +17,12 @@ from repro.anns.params import (
     TokenPruningBackendConfig,
     TokenPruningSearchParams,
 )
-from repro.retriever.facade import LemurRetriever
+from repro.retriever.facade import CorruptIndexError, LemurRetriever
 from repro.retriever.params import SearchParams
 from repro.retriever.sharded import ShardedLemurRetriever
 
 __all__ = [
+    "CorruptIndexError",
     "LemurRetriever",
     "ShardedLemurRetriever",
     "SearchParams",

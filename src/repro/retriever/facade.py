@@ -71,6 +71,17 @@ from repro.retriever.params import SearchParams
 FORMAT = "lemur-retriever-v1"
 
 
+class CorruptIndexError(ValueError):
+    """A rebuilt index failed install-time validation in
+    :meth:`LemurRetriever.install_refresh` — the last-good snapshot is left
+    fully installed.  Serving layers treat this as ``SwapAborted``, never as
+    a torn state.  ``preserves_replica_state`` tells the fleet write barrier
+    this is a typed rejection with the replica intact, not a replica
+    failure — no quarantine."""
+
+    preserves_replica_state = True
+
+
 # --------------------------------------------------------------------------
 # pure query pipeline (jit-able; params must be fully resolved)
 # --------------------------------------------------------------------------
@@ -408,6 +419,101 @@ class LemurRetriever:
                            x_ols=self._x_ols)
         r._version = self._version
         return r
+
+    def install_refresh(self, refresh) -> "LemurRetriever":
+        """Warm-swap a background rebuild (``lifecycle.build_refresh``) in.
+
+        Three stages, atomic from any reader's point of view:
+
+        1. **validate** — backend match, W shape/finiteness, solver keys,
+           and a probe search through the rebuilt first stage (latent
+           backends) checking candidate ids stay in ``[0, m0)``.  Any
+           failure raises :class:`CorruptIndexError` BEFORE anything is
+           touched: the last-good snapshot keeps serving.
+        2. **catch up** — docs added since the rebuild snapshotted
+           (slots ``[m0, m_now)``) get W rows fit with the NEW solver and
+           are appended to the rebuilt backend in slot order (dead slots as
+           zero rows, preserving the slot-numbering invariant); rows the
+           rebuild covered but that were deleted meanwhile are re-zeroed.
+        3. **swap** — one atomic ``LemurIndex`` replace + ONE version bump.
+           Readers holding the old snapshot keep it; compiled query fns
+           survive (state is a jit argument — only a shape change retraces).
+
+        Deterministic given the same ``RefreshResult`` and mutation history,
+        so fanning one result out to every fleet replica lands the same
+        post-swap snapshot version with bit-identical search results — the
+        invariant the fleet write barrier checks.  Mutates this retriever
+        and returns it; meant to run inside a server mutation barrier
+        (``RetrieverServer.apply`` / ``Router.apply``)."""
+        idx = self._index
+
+        # -- 1. validate (raise BEFORE touching anything) ------------------
+        def bad(msg: str) -> CorruptIndexError:
+            return CorruptIndexError(f"install_refresh rejected: {msg}")
+
+        if getattr(refresh, "backend", None) != idx.backend:
+            raise bad(f"backend {getattr(refresh, 'backend', None)!r} != "
+                      f"{idx.backend!r}")
+        m_now = self.m
+        m0 = int(refresh.m0)
+        if not 0 < m0 <= m_now:
+            raise bad(f"m0={m0} outside (0, {m_now}]")
+        W_new = jnp.asarray(refresh.W)
+        if W_new.shape != (m0, idx.cfg.d_prime):
+            raise bad(f"W shape {W_new.shape} != {(m0, idx.cfg.d_prime)}")
+        if not bool(jnp.isfinite(W_new).all()):
+            raise bad("non-finite values in refit W")
+        solver = refresh.solver
+        if not (isinstance(solver, dict)
+                and {"chol", "feats", "x_ols"} <= set(solver)):
+            raise bad("solver state missing chol/feats/x_ols")
+        # chol is a cho_factor (factor, lower) pair — validate the factor
+        if not bool(jnp.isfinite(jnp.asarray(solver["chol"][0])).all()):
+            raise bad("non-finite OLS Gram factor")
+        be = registry.get_backend(idx.backend)
+        if be.representation == "latent":
+            try:
+                _, cand = be.search(
+                    refresh.ann, QueryBatch(W_new[:1], None, None),
+                    min(8, m0),
+                    be.default_params(idx.cfg.backend_config(idx.backend)))
+                cand = np.asarray(cand)
+            except Exception as e:
+                raise bad(f"probe search through rebuilt backend failed: "
+                          f"{e}") from e
+            if cand.size == 0 or (cand >= m0).any() or (cand < -1).any():
+                raise bad("rebuilt backend emits out-of-range candidate ids")
+
+        # -- 2. catch up slots [m0, m_now) with the NEW solver -------------
+        alive_now = np.asarray(idx.store.alive)
+        W2 = idx.store.W.at[:m0].set(
+            jnp.where(jnp.asarray(alive_now[:m0])[:, None], W_new, 0.0))
+        ann = refresh.ann
+        caught = 0
+        if m_now > m0:
+            catch = jnp.arange(m0, m_now, dtype=jnp.int32)
+            toks_c, mask_c = pages.gather_docs(idx.store, catch)
+            alive_c = np.flatnonzero(alive_now[m0:m_now])
+            w_c = jnp.zeros((m_now - m0, idx.cfg.d_prime),
+                            idx.store.W.dtype)
+            if alive_c.size:
+                sub = jnp.asarray(alive_c.astype(np.int32))
+                w_fit = indexer.fit_docs(solver, toks_c[sub], mask_c[sub],
+                                         idx.stats)
+                w_c = w_c.at[sub].set(w_fit)
+                caught = int(alive_c.size)
+            # append ALL slots in order (dead as zero rows): backend
+            # numbering must equal slot numbering, mask_dead does the rest
+            ann = be.add(ann, CorpusView(w_c, toks_c, mask_c))
+            W2 = W2.at[m0:m_now].set(w_c)
+
+        # -- 3. atomic swap + ONE version bump -----------------------------
+        self._index = idx._replace(store=idx.store._replace(W=W2), ann=ann)
+        self._solver = solver
+        self._x_ols = solver["x_ols"]
+        self._version += 1
+        self._last_refresh_caught_up = caught
+        return self
 
     def shard(self, mesh, *, sq8: bool | None = None,
               k_prime_local: int | None = None):

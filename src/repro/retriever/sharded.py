@@ -298,6 +298,17 @@ class ShardedLemurRetriever:
         self._place(ids)
         return ids
 
+    def install_refresh(self, refresh) -> "ShardedLemurRetriever":
+        """Warm-swap a background rebuild: delegate validation + catch-up +
+        atomic swap to the base facade (raises ``CorruptIndexError`` with
+        this sharded state untouched), then rebuild the sharded slot pool
+        from the new index — the refit W rows must reach the devices, so the
+        one-bucket re-place is unavoidable and billed to the swap, never to
+        serving."""
+        self._base.install_refresh(refresh)
+        self._rebuild_state()
+        return self
+
     def _evict(self, doc_ids) -> None:
         rows = np.asarray([self._row_of.pop(int(i))
                            for i in np.asarray(doc_ids).reshape(-1)],

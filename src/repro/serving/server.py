@@ -57,6 +57,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
+from typing import Any
 
 import numpy as np
 
@@ -224,16 +225,18 @@ class _Search:
 
 @dataclasses.dataclass
 class _Mutation:
-    """A FIFO-barrier corpus mutation: ``add``, ``delete``, or ``update``.
-    All three share the same queue semantics — searches submitted earlier
-    run against the old snapshot, the worker applies the mutation atomically
-    between micro-batches, later searches see the new corpus."""
-    kind: str                            # "add" | "delete" | "update"
+    """A FIFO-barrier corpus mutation: ``add``, ``delete``, ``update``, or a
+    generic ``apply``.  All share the same queue semantics — searches
+    submitted earlier run against the old snapshot, the worker applies the
+    mutation atomically between micro-batches, later searches see the new
+    corpus."""
+    kind: str                            # "add" | "delete" | "update" | "apply"
     future: Future
     doc_tokens: np.ndarray | None = None
     doc_mask: np.ndarray | None = None
     doc_ids: np.ndarray | None = None
     seed: int = 0
+    fn: Any = None                       # "apply": fn(retriever) -> result
 
 
 # --------------------------------------------------------------------------
@@ -449,6 +452,19 @@ class RetrieverServer:
             doc_mask=np.asarray(doc_mask),
             doc_ids=np.asarray(doc_ids, np.int32), seed=seed))
 
+    def apply(self, fn) -> Future:
+        """Enqueue a generic retriever transform behind the same FIFO
+        barrier as :meth:`add`: ``fn(retriever)`` runs atomically between
+        micro-batches on the worker thread — earlier searches resolve
+        against the old snapshot, later ones see whatever ``fn`` installed.
+        This is the warm-swap entry point (``lifecycle`` passes
+        ``lambda r: r.install_refresh(result)``); if ``fn`` raises (e.g.
+        ``CorruptIndexError`` from install validation) the retriever is
+        whatever ``fn`` left behind — install validation guarantees that is
+        the untouched last-good snapshot — and the future carries the
+        exception."""
+        return self._enqueue_mutation(_Mutation("apply", Future(), fn=fn))
+
     def _enqueue_mutation(self, op: _Mutation) -> Future:
         with self._cond:
             if self._stopping:
@@ -636,6 +652,8 @@ class RetrieverServer:
             elif op.kind == "delete":
                 r.delete(op.doc_ids)
                 result = r.n_alive
+            elif op.kind == "apply":
+                result = op.fn(r)
             else:  # update
                 result = np.asarray(r.update(op.doc_ids, op.doc_tokens,
                                              op.doc_mask, seed=op.seed))

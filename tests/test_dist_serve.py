@@ -330,3 +330,66 @@ def test_online_server_sharded_parity(run_forced8):
     print("OK")
     """))
     assert "OK" in out
+
+
+def test_sharded_warm_swap_parity_and_barrier(run_forced8):
+    """Lifecycle warm swap on 8 devices: ``build_refresh`` from the sharded
+    snapshot is bit-identical to an identically mutated local twin's, the
+    install lands through the RetrieverServer FIFO barrier with searches in
+    flight (earlier futures stamped with the pre-swap version and answered
+    by the old snapshot, later ones by the refit index), and the post-swap
+    8-device search matches the locally refreshed facade bit for bit."""
+    out = run_forced8(_BUILD + textwrap.dedent("""
+    from repro.lifecycle import build_refresh
+    from repro.serving import BucketLadder, RetrieverServer
+
+    r, q, qm = build()
+    rl = r.clone()                    # independent local twin
+    sr = r.shard(MESH8, sq8=False)
+    extra = synthetic.make_corpus(m=14, d=16, avg_tokens=8, max_tokens=8,
+                                  n_centers=16, seed=9)
+    for t in (sr, rl):
+        t.add(extra.doc_tokens, extra.doc_mask)
+        t.delete([1, 5, 90])
+    # same snapshot + same seed => bit-identical refresh artifacts
+    res_s = build_refresh(sr, seed=7)
+    res_l = build_refresh(rl, seed=7)
+    assert res_s.m0 == res_l.m0 == 104
+    assert np.array_equal(np.asarray(res_s.W), np.asarray(res_l.W))
+    params = SearchParams(use_ann=False, k_prime=sr.m)
+    qs = [np.asarray(q[i, :4]) for i in range(3)]
+    ones = np.ones((1, 4), bool)
+    pre = [sr.search(qi[None], ones, params) for qi in qs]
+    rl.install_refresh(res_l)
+    post = [rl.search(qi[None], ones, params) for qi in qs]
+    v0 = sr.version
+    with RetrieverServer(sr, ladder=BucketLadder((4,), max_batch=2),
+                         max_wait_us=200, default_params=params) as srv:
+        srv.pause()                   # freeze the worker: strict FIFO order
+        bef = [srv.submit(qi) for qi in qs]
+        swap = srv.apply(lambda t, res=res_s: t.install_refresh(res))
+        aft = [srv.submit(qi) for qi in qs]
+        srv.resume()
+        for fut, (ws, wi) in zip(bef, pre):
+            s, ids = fut.result(timeout=300)
+            assert fut.snapshot_version == v0
+            assert np.array_equal(ids, np.asarray(wi)[0])
+            np.testing.assert_allclose(s, np.asarray(ws)[0],
+                                       rtol=1e-5, atol=1e-6)
+        swap.result(timeout=300)
+        assert swap.snapshot_version == v0 + 1
+        for fut, (ws, wi) in zip(aft, post):
+            s, ids = fut.result(timeout=300)
+            assert fut.snapshot_version == v0 + 1
+            assert np.array_equal(ids, np.asarray(wi)[0])
+            np.testing.assert_allclose(s, np.asarray(ws)[0],
+                                       rtol=1e-5, atol=1e-6)
+    assert sr.version == rl.version == v0 + 1
+    # full-coverage exact parity vs the locally refreshed facade
+    want_s, want_i = rl.search(q, qm, params)
+    got_s, got_i = sr.search(q, qm, params)
+    assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("OK")
+    """))
+    assert "OK" in out

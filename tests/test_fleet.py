@@ -583,3 +583,82 @@ def test_router_submit_thread_safety(base):
             f.result(timeout=TIMEOUT)
         rids = [f.request_id for f in futs]
         assert len(set(rids)) == len(rids) == 32
+
+
+# --------------------------------------------------------------------------
+# bounded observability state (a long-lived fleet must not leak)
+# --------------------------------------------------------------------------
+
+def test_router_event_log_bounded_with_dropped_counter(base):
+    reps = clone_replicas(base, 1)
+    with Router(reps, ladder=BucketLadder((8,), 2), stall_timeout_s=30.0,
+                event_log_size=4) as router:
+        assert router.events_dropped == 0
+        with router._lock:
+            for i in range(9):
+                router._record_event(t=float(i), event="test", seq=i)
+        evs = router.events()
+        assert len(evs) == 4, "event ring exceeded its bound"
+        assert [e["seq"] for e in evs] == [5, 6, 7, 8], "ring kept oldest"
+        assert router.events_dropped == 5
+
+
+def test_fleet_stats_latency_windows_bounded():
+    from repro.fleet.router import FleetStats
+
+    st = FleetStats(window=8)
+    for i in range(100):
+        st.record_completed(0.001 * (i + 1), 0.001 * (i + 1), float(i))
+    s = st.summary()
+    assert s["n_requests"] == 100           # counters stay exact totals
+    # percentile state only ever sees the window tail
+    assert st._lat.maxlen == 8 and len(st._lat) == 8
+    assert st._submit_lat.maxlen == 8 and len(st._submit_lat) == 8
+
+
+# --------------------------------------------------------------------------
+# SLO floor-rung edge: breach with nothing left to shed
+# --------------------------------------------------------------------------
+
+def test_slo_floor_breach_no_spurious_transition_and_recovery():
+    """A sustained breach AT the floor rung must not clear the window or
+    record same-rung transitions — and once load drops, the normal
+    recovery hysteresis must still engage from real samples."""
+    slo = SLOController([0, 1], target_p99_ms=10.0, window=8, min_window=4,
+                        eval_every=4, recover_frac=0.7, hold=2)
+    for _ in range(4):
+        slo.observe(0.050)
+    assert slo.rung == 1                    # at the floor now
+    n_tr = len(slo.transitions)
+    for _ in range(40):
+        slo.observe(0.050)                  # sustained breach at the floor
+    assert slo.rung == 1
+    assert len(slo.transitions) == n_tr, (
+        "breach at the floor recorded a spurious transition")
+    assert slo.n_floor_breaches == 10       # every evaluation counted
+    assert not np.isnan(slo.windowed_p99_ms()), (
+        "floor breach cleared the latency window")
+    # load drops: recovery must work exactly as from any other rung
+    for _ in range(16):
+        slo.observe(0.001)
+    assert slo.rung == 0, "recovery hysteresis broken after floor breaches"
+
+
+def test_slo_floor_breach_resets_clear_streak():
+    """A breach evaluation at the floor interrupts a recovery streak: the
+    controller must demand `hold` CONSECUTIVE clean evaluations again."""
+    slo = SLOController([0, 1], target_p99_ms=10.0, window=4, min_window=4,
+                        eval_every=4, recover_frac=0.7, hold=2)
+    for _ in range(4):
+        slo.observe(0.050)
+    assert slo.rung == 1
+    for _ in range(4):
+        slo.observe(0.001)                  # clean eval #1 (streak 1/2)
+    for _ in range(4):
+        slo.observe(0.050)                  # breach at floor: streak reset
+    for _ in range(4):
+        slo.observe(0.001)                  # clean again: streak 1/2 only
+    assert slo.rung == 1, "recovered without `hold` consecutive clean evals"
+    for _ in range(4):
+        slo.observe(0.001)                  # streak 2/2
+    assert slo.rung == 0
