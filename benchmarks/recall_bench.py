@@ -1,0 +1,220 @@
+"""Recall-regression trail for the compressed corpus tier.
+
+Component-level (no ψ training — this isolates the STORAGE tier): an exact
+MaxSim scan over the corpus tokens as each tier stores them, scored against
+the unpooled-fp32 exact scan as the oracle.  Tiers:
+
+====================  ====================================================
+``fp32``              dense fp32 tokens (the oracle representation)
+``sq8``               per-token symmetric int8 (d + 4 scale bytes / token)
+``residual-4bit``     codec: centroid id + packed 4-bit/dim residual
+``residual-2bit``     codec: centroid id + packed 2-bit/dim residual
+====================  ====================================================
+
+each crossed with constant-space token-pooling budgets
+(``pages.pool_tokens``; budget 0 = keep every token).  Every row carries
+two recall columns against the unpooled-fp32 oracle's top-10:
+
+* ``recall_at_10`` — overlap of the tier's top-10 with the oracle's
+  (exact final-ranking agreement — strict, shows the codec's cost);
+* ``recall_at_100`` — the FAISS-style 10-in-100: fraction of the oracle
+  top-10 surviving in the tier's top-100.  This is the operational metric
+  for a storage tier that feeds a k'-budget rerank — what matters is that
+  the true winners stay inside the candidate budget, not that tail
+  margins at rank ~100 agree.
+
+plus a bytes-per-doc column measured from the ACTUAL encoded arrays
+(valid-token payload + the codec tables amortized over the corpus), so
+the compression ratios are real, not formula-derived.
+
+``BENCH_recall.json`` (merge-preserve, ``--emit-json``) is the committed
+recall trajectory.  Three SystemExit gates make it a regression TRAIL:
+
+* **ratchet** — a re-measured (op, shape, backend) row's recall may not
+  drop more than ``REPRO_RECALL_TOL`` (default 0.02) below the committed
+  row;
+* **codec floor** — residual-4bit recall@100 must stay within 5% of SQ8's
+  (relative, unpooled);
+* **compression floor** — residual-4bit at the pooled budget must be
+  >= 8x smaller per doc than unpooled fp32.
+
+``--self-test-gate`` proves the ratchet actually fires: it fabricates an
+impossible committed baseline, asserts the gate trips, and writes nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.anns import quantization as quant
+from repro.core import maxsim, pages
+from repro.data import synthetic
+
+SECTION = "recall_tiers"
+BUDGETS = (0, 8)
+RECALL_TOL = float(os.environ.get("REPRO_RECALL_TOL", "0.02"))
+
+
+def _recall(ids: np.ndarray, oracle: np.ndarray) -> float:
+    """Fraction of each query's ``oracle`` ids found in its ``ids`` row."""
+    hits = [np.intersect1d(a, b[b >= 0]).size / max((b >= 0).sum(), 1)
+            for a, b in zip(ids, oracle)]
+    return float(np.mean(hits))
+
+
+def _tier_encode(tier: str, toks, mask, *, seed: int = 0):
+    """Encode ``(m, T, d)`` tokens as ``tier`` stores them.
+
+    Returns ``(decoded (m, T, d) fp32, payload_bytes, table_bytes)`` —
+    payload counts only the VALID tokens' encoded bytes (page padding is a
+    pool-sizing artifact, not a property of the codec), tables are the
+    tier's corpus-amortized side arrays (codec centroids/cuts/values)."""
+    m = toks.shape[0]
+    flat = np.asarray(toks)[np.asarray(mask)]
+    if tier == "fp32":
+        return np.asarray(toks, np.float32), flat.nbytes, 0
+    if tier == "sq8":
+        codes, scales = quant.sq8_quant(jnp.asarray(toks))
+        dec = np.asarray(quant.sq8_dequant(codes, scales))
+        payload = (np.asarray(codes)[np.asarray(mask)].nbytes
+                   + np.asarray(scales)[np.asarray(mask)].nbytes)
+        return dec, payload, 0
+    bits = {"residual-4bit": 4, "residual-2bit": 2}[tier]
+    codec = quant.train_residual_codec(
+        jax.random.PRNGKey(seed), jnp.asarray(flat), bits=bits, ncent=256)
+    cid, packed = quant.residual_encode(codec, jnp.asarray(toks, jnp.float32))
+    dec = np.asarray(quant.residual_decode(codec, cid, packed))
+    payload = (np.asarray(cid)[np.asarray(mask)].nbytes
+               + np.asarray(packed)[np.asarray(mask)].nbytes)
+    tables = sum(int(np.asarray(x).nbytes) for x in codec)
+    return dec, payload, tables
+
+
+def measure(m: int, n_queries: int, seed: int = 0) -> list[dict]:
+    c = synthetic.make_corpus(m=m, d=common.D, avg_tokens=common.AVG_T,
+                              max_tokens=common.MAX_T, n_centers=96,
+                              topic_strength=1.6, seed=seed)
+    q = jnp.asarray(synthetic.queries_from_corpus_query(
+        c, n_queries, common.Q_TOKENS, encoder_noise=0.15, seed=99))
+    qm = jnp.ones(q.shape[:2], bool)
+    toks0 = np.asarray(c.doc_tokens, np.float32)
+    mask0 = np.asarray(c.doc_mask, bool)
+    _, oracle10 = maxsim.true_topk(q, qm, jnp.asarray(toks0),
+                                   jnp.asarray(mask0), min(10, m))
+    oracle10 = np.asarray(oracle10)
+
+    rows = []
+    for budget in BUDGETS:
+        toks, mask = pages.pool_tokens(toks0, mask0, budget)
+        for tier in ("fp32", "sq8", "residual-4bit", "residual-2bit"):
+            dec, payload, tables = _tier_encode(tier, toks, mask, seed=seed)
+            dm = jnp.asarray(mask)
+            row = {"op": "recall", "shape": f"{tier}@pool{budget}",
+                   "tier": tier, "budget": int(budget), "m": int(m),
+                   "bytes_per_doc": (payload + tables) / m,
+                   "backend": jax.default_backend()}
+            for k in (10, 100):
+                _, ids = maxsim.true_topk(q, qm, jnp.asarray(dec), dm,
+                                          min(k, m))
+                row[f"recall_at_{k}"] = _recall(np.asarray(ids), oracle10)
+            rows.append(row)
+            common.emit(f"recall_{tier}_pool{budget}",
+                        row["bytes_per_doc"],
+                        f"r@10={row['recall_at_10']:.3f},"
+                        f"r@100={row['recall_at_100']:.3f},"
+                        f"B/doc={row['bytes_per_doc']:.0f}")
+    return rows
+
+
+def _by_shape(rows: list[dict]) -> dict[str, dict]:
+    return {r["shape"]: r for r in rows}
+
+
+def ratchet_violations(fresh: list[dict], committed: dict,
+                       tol: float = RECALL_TOL) -> list[str]:
+    """Recall drops vs the committed section, keyed (op, shape, backend)."""
+    prev = {(r.get("op"), r.get("shape"), r.get("backend")): r
+            for r in committed.get(SECTION, {}).get("rows", [])}
+    out = []
+    for r in fresh:
+        old = prev.get((r["op"], r["shape"], r["backend"]))
+        if old is None:
+            continue
+        for col in ("recall_at_10", "recall_at_100"):
+            if col in old and r[col] < old[col] - tol:
+                out.append(f"{r['shape']}: {col} {r[col]:.3f} < committed "
+                           f"{old[col]:.3f} - {tol}")
+    return out
+
+
+def acceptance_violations(fresh: list[dict]) -> list[str]:
+    """The codec-floor and compression-floor gates (fresh rows only)."""
+    by = _by_shape(fresh)
+    out = []
+    res4, sq8 = by["residual-4bit@pool0"], by["sq8@pool0"]
+    if res4["recall_at_100"] < 0.95 * sq8["recall_at_100"]:
+        out.append(f"codec floor: residual-4bit r@100 "
+                   f"{res4['recall_at_100']:.3f} < 0.95 * sq8 "
+                   f"{sq8['recall_at_100']:.3f}")
+    pooled = by[f"residual-4bit@pool{BUDGETS[1]}"]
+    ratio = by["fp32@pool0"]["bytes_per_doc"] / pooled["bytes_per_doc"]
+    if ratio < 8.0:
+        out.append(f"compression floor: fp32/residual-4bit-pooled bytes "
+                   f"ratio {ratio:.1f}x < 8x")
+    return out
+
+
+def run(m: int = 2000, n_queries: int = 64, *, emit_json: bool = False,
+        self_test_gate: bool = False) -> list[dict]:
+    rows = measure(m, n_queries)
+
+    if self_test_gate:
+        # fabricate a committed baseline no honest run can reach and prove
+        # the ratchet trips on it; nothing is written
+        fake = {SECTION: {"rows": [dict(r, recall_at_10=1.5, recall_at_100=1.5)
+                                   for r in rows]}}
+        if not ratchet_violations(rows, fake):
+            raise SystemExit("recall gate self-test FAILED: ratchet did not "
+                             "fire on an impossible committed baseline")
+        print("# recall gate self-test: ratchet fired as expected",
+              file=sys.stderr)
+        return rows
+
+    committed = common.load_bench_root("recall")
+    violations = (ratchet_violations(rows, committed)
+                  + acceptance_violations(rows))
+    doc = committed
+    common.merge_section(doc, SECTION,
+                         common.bench_meta(m=m, n_queries=n_queries,
+                                           budgets=list(BUDGETS),
+                                           recall_tol=RECALL_TOL), rows)
+    common.save_json("recall", doc)
+    if emit_json:
+        common.save_bench_root("recall", doc)
+    if violations:
+        raise SystemExit("recall gate violations:\n  "
+                         + "\n  ".join(violations))
+    return rows
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    p.add_argument("--m", type=int, default=2000)
+    p.add_argument("--queries", type=int, default=64)
+    p.add_argument("--emit-json", action="store_true",
+                   help="write the committed BENCH_recall.json trajectory")
+    p.add_argument("--self-test-gate", action="store_true",
+                   help="prove the recall ratchet fires (writes nothing)")
+    args = p.parse_args(argv)
+    run(args.m, args.queries, emit_json=args.emit_json,
+        self_test_gate=args.self_test_gate)
+
+
+if __name__ == "__main__":
+    main()

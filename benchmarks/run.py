@@ -19,7 +19,7 @@ import sys
 import time
 
 BENCHES = ["fig2", "fig3", "table2", "appendix_d", "kernels",
-           "serving_online", "serving_fleet"]
+           "serving_online", "serving_fleet", "recall"]
 
 
 def _selected(which, bench: str) -> bool:
@@ -98,6 +98,10 @@ def main(argv=None) -> None:
         from benchmarks import serving_fleet
 
         serving_fleet.run(emit_json=args.emit_json)
+    if _selected(which, "recall"):
+        from benchmarks import recall_bench
+
+        recall_bench.run(emit_json=args.emit_json)
     print(f"# total bench time: {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -165,6 +165,10 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
             mut_rows = _mutation_phase(
                 srv, retriever, ladder, m=m, d=d, backend=backend, seed=seed,
                 queries=queries, churn_steps=churn_steps)
+    if churn_steps:
+        mut_rows += _residual_churn_phase(
+            retriever.snapshot(), m=m, d=d, backend=backend, seed=seed,
+            churn_steps=churn_steps)
 
     life_rows = []
     if lifecycle:
@@ -192,7 +196,10 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
                      "snapshot versions, zero warm-pool traces, tombstones "
                      "never surface) + the add-amortization contract (paged "
                      "bytes-per-added-doc is O(doc); the flat layout's was "
-                     "O(corpus))"),
+                     "O(corpus)) + the compressed-tier churn contract "
+                     "(residual-codec store: zero warm-pool traces, ids "
+                     "bit-identical to a from-scratch compressed rebuild "
+                     "over the survivors)"),
             "rows": mut_rows,
         },
         "lifecycle": {
@@ -230,6 +237,16 @@ def run(m: int = 2000, *, d: int = 32, rate: float = 100.0,
                 raise SystemExit(
                     f"warm-pool mutation churn issued {r['trace_delta']} new "
                     "traces (streaming-add bugfix contract: must be 0)")
+        if r["op"] == "mutation_churn_residual":
+            if r["trace_delta"]:
+                raise SystemExit(
+                    f"residual-tier churn issued {r['trace_delta']} new "
+                    "traces on a warm pool (codec leaves ride jit as "
+                    "arguments: must be 0)")
+            if not r["rebuild_identical"]:
+                raise SystemExit(
+                    "residual-tier churn diverged from the from-scratch "
+                    "compressed rebuild over the survivors")
         if r["op"] == "add_amortization" and not r["o_doc"]:
             raise SystemExit(
                 f"paged add moved {r['paged_bytes_per_doc']:.0f} B/doc "
@@ -409,6 +426,145 @@ def _mutation_phase(srv, retriever, ladder, *, m, d, backend, seed, queries,
                 f"lost={n_lost},trace_delta={trace_delta},"
                 f"bytes_per_doc={paged_per_doc:.0f}/{flat_per_doc:.0f}")
     return rows
+
+
+def _residual_churn_phase(snap, *, m, d, backend, seed, churn_steps):
+    """Add/delete/update churn on the COMPRESSED (residual-codec) tier.
+
+    Re-encodes the served snapshot's live corpus into a residual-4bit store
+    with a constant-space pooling budget, then runs the same facade-level
+    churn loop the fp32 phase ran through the server, gating on the
+    compressed-store mutation contract:
+
+    * zero new jit traces once the pool is warm and adds stay in capacity
+      (the codec leaves ride jit as arguments, so mutating the compressed
+      pools must not retrace);
+    * every mutation bumps the snapshot version by exactly one;
+    * post-churn search ids are BIT-IDENTICAL to a from-scratch compressed
+      rebuild over the survivors' (pooled) tokens with the same codec —
+      i.e. the in-place page mutations and the one-shot ``from_dense``
+      encode are the same function of the surviving corpus."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.anns.quantization import train_residual_codec
+    from repro.core import pages
+    from repro.data import synthetic
+    from repro.retriever import LemurRetriever, SearchParams
+
+    t0 = time.perf_counter()
+    n_add, budget, bits = 4, 8, 4
+    # the twin corpus: the snapshot's live docs (renumbered 0..n-1 — this
+    # phase is self-contained; ann state rides along unused under exact scan)
+    alive0 = np.flatnonzero(np.asarray(snap.store.alive)[:snap.m])
+    toks0, mask0 = pages.gather_docs(snap.store, alive0)
+    toks0, mask0 = np.asarray(toks0), np.asarray(mask0)
+    W0 = np.asarray(snap.store.W)[alive0]
+    ptoks, pmask = pages.pool_tokens(toks0, mask0, budget)
+    codec = train_residual_codec(
+        jax.random.PRNGKey(seed + 60),
+        jnp.asarray(ptoks[pmask]), bits=bits, ncent=64, iters=4)
+    rcfg = snap.cfg.residual.replace(enabled=True, bits=bits, ncent=64,
+                                     token_budget=budget, kmeans_iters=4)
+    store, _ = pages.from_dense(W0, ptoks, pmask, codec=codec)
+    r = LemurRetriever(snap._replace(cfg=snap.cfg.replace(residual=rcfg),
+                                     store=store))
+    # raw[slot] = the POOLED tokens that slot was encoded from — the
+    # rebuild-parity oracle re-encodes exactly these with the same codec
+    raw = {int(i): (ptoks[i], pmask[i]) for i in range(len(alive0))}
+
+    def batch(s):
+        c = synthetic.make_corpus(m=n_add, d=d, avg_tokens=12, max_tokens=16,
+                                  seed=s)
+        return np.asarray(c.doc_tokens), np.asarray(c.doc_mask)
+
+    def record(ids, toks_b, mask_b):
+        pt, pm = pages.pool_tokens(toks_b, mask_b, budget)
+        for j, i in enumerate(np.asarray(ids).tolist()):
+            raw[int(i)] = (pt[j], pm[j])
+
+    rng = np.random.default_rng(seed + 61)
+    q = rng.standard_normal((4, 8, d)).astype(np.float32)
+    qm = np.ones((4, 8), bool)
+    params = SearchParams(use_ann=False, k=10, k_prime=min(64, r.m))
+
+    # warm-up: one full round absorbs any one-time pow2 pool/slot growth,
+    # one search compiles the (params, shape) the loop re-issues
+    toks_b, mask_b = batch(seed + 62)
+    r.add(toks_b, mask_b)
+    record(r.last_added_ids, toks_b, mask_b)
+    warm = np.asarray(r.last_added_ids)
+    upd = r.update(warm[:1], toks_b[:1], mask_b[:1])
+    raw.pop(int(warm[0]))
+    record(upd, toks_b[:1], mask_b[:1])
+    for i in np.concatenate([warm[1:], np.asarray(upd)]).tolist():
+        raw.pop(int(i))
+    r.delete(np.concatenate([warm[1:], np.asarray(upd)]))
+    r.search(q, qm, params)
+
+    v0, t_warm = r.version, r.trace_count()
+    versions, live = [], []
+    for step in range(churn_steps):
+        toks_b, mask_b = batch(seed + 70 + step)
+        r.add(toks_b, mask_b)
+        versions.append(r.version)
+        ids = np.asarray(r.last_added_ids)
+        record(ids, toks_b, mask_b)
+        r.search(q, qm, params)
+        for i in ids[:2].tolist():
+            raw.pop(int(i))
+        r.delete(ids[:2])
+        versions.append(r.version)
+        if live:
+            raw.pop(live[-1])
+            upd = r.update([live.pop()], toks_b[:1], mask_b[:1])
+            versions.append(r.version)
+            record(upd, toks_b[:1], mask_b[:1])
+            live.extend(np.asarray(upd).tolist())
+        live.extend(ids[2:].tolist())
+    trace_delta = r.trace_count() - t_warm
+    monotone = versions == list(range(v0 + 1, v0 + len(versions) + 1))
+
+    # from-scratch compressed rebuild over the survivors: same pooled
+    # tokens, same codec, one-shot from_dense — ids must map bit-identically
+    st = r.index.store
+    surv = sorted(raw)
+    assert len(surv) == r.n_alive
+    rt = np.zeros((len(surv), budget, d), np.float32)
+    rm = np.zeros((len(surv), budget), bool)
+    for j, i in enumerate(surv):
+        t, mk = raw[i]
+        rt[j, : mk.sum()] = t[mk]
+        rm[j, : mk.sum()] = True
+    store2, _ = pages.from_dense(np.asarray(st.W)[surv], rt, rm,
+                                 codec=st.codec)
+    r2 = LemurRetriever(r.index._replace(store=store2))
+    _, ids_a = r.search(q, qm, params)
+    _, ids_b = r2.search(q, qm, params)
+    rebuild_identical = bool(np.array_equal(
+        np.asarray(ids_a), np.asarray(surv, np.int64)[np.asarray(ids_b)]))
+    wall = time.perf_counter() - t0
+
+    row = {
+        "op": "mutation_churn_residual",
+        "shape": (f"m={len(alive0)},backend={backend},steps={churn_steps},"
+                  f"bits={bits},budget={budget}"),
+        "n_mutations": len(versions),
+        "versions_monotone": monotone,
+        "final_version": versions[-1] if versions else None,
+        "trace_delta": trace_delta,
+        "trace_count": r.trace_count(),
+        "n_alive": r.n_alive,
+        "m_slots": r.m,
+        "bytes_per_doc": pages.token_bytes(st) / max(r.n_alive, 1),
+        "rebuild_identical": rebuild_identical,
+        "wall_s": wall,
+        "parity": monotone and trace_delta == 0 and rebuild_identical,
+    }
+    common.emit("serving_mutation_churn_residual", wall * 1e6,
+                f"trace_delta={trace_delta},rebuild_identical="
+                f"{rebuild_identical},B/doc={row['bytes_per_doc']:.0f}")
+    return [row]
 
 
 def _lifecycle_phase(*, m, d, rate, duration, backend, epochs, seed,

@@ -94,7 +94,9 @@ class IVFRetriever:
             raise ValueError("ivf backend needs latent vectors")
         cfg = cfg or IVFBackendConfig()
         return _ivf.build_ivf(key, jnp.asarray(corpus.latent),
-                              int(cfg.nlist), sq8=bool(cfg.sq8))
+                              int(cfg.nlist), sq8=bool(cfg.sq8),
+                              residual_bits=int(getattr(cfg, "residual_bits",
+                                                        0) or 0))
 
     def search(self, state, query: QueryBatch, k: int,
                params: IVFSearchParams | None = None):
@@ -125,12 +127,18 @@ class IVFRetriever:
             arrays["scales"] = state.scales
         if state.mean is not None:
             arrays["mean"] = state.mean
+        if state.rq_cuts is not None:
+            arrays["rq_cuts"] = state.rq_cuts
+        if state.rq_values is not None:
+            arrays["rq_values"] = state.rq_values
         return arrays, {}
 
     def unpack_state(self, arrays, meta):
         return _ivf.IVFIndex(centroids=arrays["centroids"], ids=arrays["ids"],
                              vecs=arrays["vecs"], scales=arrays.get("scales"),
-                             counts=arrays["counts"], mean=arrays.get("mean"))
+                             counts=arrays["counts"], mean=arrays.get("mean"),
+                             rq_cuts=arrays.get("rq_cuts"),
+                             rq_values=arrays.get("rq_values"))
 
 
 @register

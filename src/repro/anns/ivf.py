@@ -22,7 +22,13 @@ import numpy as np
 
 from repro.anns.base import pad_topk
 from repro.anns.kmeans import kmeans
-from repro.anns.quantization import sq8_dequant, sq8_quant
+from repro.anns.quantization import (
+    ResidualCodec,
+    residual_decode,
+    residual_encode,
+    sq8_dequant,
+    sq8_quant,
+)
 from repro.kernels import ops
 
 
@@ -30,10 +36,16 @@ class IVFIndex(NamedTuple):
     centroids: jax.Array   # (nlist, d)
     ids: jax.Array         # (nlist, cap) int32, -1 padded
     vecs: jax.Array        # (nlist, cap, d) fp32  OR int8 codes when sq8
+                           # OR (nlist, cap, d*bits//8) uint8 packed residual
+                           # codes when rq (coded against the OWN cluster
+                           # centroid — the id is implicit in the list row)
     scales: jax.Array | None  # (nlist, cap) fp32 when sq8 else None
     counts: jax.Array      # (nlist,) int32
     mean: jax.Array | None = None  # (d,) corpus mean (centered MIPS: ranking
                                    # by q.(w-mean) == ranking by q.w)
+    # residual-codec storage tier (None unless built with residual_bits)
+    rq_cuts: jax.Array | None = None    # (d, L-1) per-dim bucket boundaries
+    rq_values: jax.Array | None = None  # (d, L)   per-dim reconstruction vals
 
     @property
     def nlist(self) -> int:
@@ -42,6 +54,10 @@ class IVFIndex(NamedTuple):
     @property
     def capacity(self) -> int:
         return self.ids.shape[1]
+
+    @property
+    def residual(self) -> bool:
+        return self.rq_values is not None
 
 
 def default_nlist(m: int) -> int:
@@ -53,12 +69,18 @@ def default_nlist(m: int) -> int:
 
 
 def build_ivf(key, vectors: jax.Array, nlist: int = 0, *, sq8: bool = False,
-              kmeans_iters: int = 10, train_sample: int = 131072,
-              center: bool = True) -> IVFIndex:
+              residual_bits: int = 0, kmeans_iters: int = 10,
+              train_sample: int = 131072, center: bool = True) -> IVFIndex:
     """``center=True`` subtracts the corpus mean before clustering/scan:
     learned LEMUR W rows carry a large shared component (globally
     standardized OLS targets) that otherwise dominates the coarse quantizer;
-    MIPS ranking is invariant to it (q·mean is constant per query)."""
+    MIPS ranking is invariant to it (q·mean is constant per query).
+
+    ``residual_bits`` (2 or 4) switches the list storage to the residual
+    codec: each vector is kept as a packed 2/4-bit per-dim residual against
+    its OWN cluster centroid (the centroid id is the list row — free), with
+    per-dim bucket boundaries/values trained from the corpus residual
+    quantiles.  Supersedes ``sq8`` (d/2 or d/4 bytes/vector vs d+4)."""
     m, d = vectors.shape
     mean = None
     if center:
@@ -73,7 +95,12 @@ def build_ivf(key, vectors: jax.Array, nlist: int = 0, *, sq8: bool = False,
     centroids, _ = kmeans(ktrain, sample, nlist, iters=kmeans_iters)
     assign = assign_clusters(vectors, centroids)  # full corpus
     ids, vecs, scales, counts = _pack_lists(vectors, np.asarray(assign), nlist,
-                                            sq8=sq8)
+                                            sq8=sq8 and not residual_bits)
+    if residual_bits:
+        cuts, values = _train_rq(vecs, ids, centroids, int(residual_bits))
+        vecs = _residual_pack(centroids, cuts, values, ids, vecs)
+        return IVFIndex(centroids, ids, vecs, None, counts, mean,
+                        rq_cuts=cuts, rq_values=values)
     return IVFIndex(centroids, ids, vecs, scales, counts, mean)
 
 
@@ -112,6 +139,43 @@ def _pack_lists(vectors, assign: np.ndarray, nlist: int, *, sq8: bool,
     return ids, vecs, scales, jnp.asarray(counts, jnp.int32)
 
 
+def _train_rq(vecs_fp, ids, centroids, bits: int):
+    """Per-dim residual quantile tables over the packed lists' VALID rows:
+    cuts at (l+1)/L, reconstruction values at bucket midpoints (l+0.5)/L
+    (same rule as ``quantization.train_residual_codec``, but the residuals
+    are against each vector's own cluster centroid)."""
+    L = 1 << int(bits)
+    r = np.asarray(vecs_fp - centroids[:, None, :])[np.asarray(ids) >= 0]
+    rv = jnp.asarray(r, jnp.float32)                    # (n_valid, d)
+    qs_cut = jnp.arange(1, L, dtype=jnp.float32) / L
+    qs_val = (jnp.arange(L, dtype=jnp.float32) + 0.5) / L
+    cuts = jnp.quantile(rv, qs_cut, axis=0).T           # (d, L-1)
+    values = jnp.quantile(rv, qs_val, axis=0).T         # (d, L)
+    return cuts, values
+
+
+def _residual_pack(centroids, cuts, values, ids, vecs_fp):
+    """fp32 padded lists (nlist, cap, d) -> packed residual codes
+    (nlist, cap, d*bits//8) uint8 coded against the own-cluster centroid."""
+    codec = ResidualCodec(centroids=centroids, cuts=cuts, values=values)
+    nlist, cap = ids.shape
+    cent = jnp.broadcast_to(
+        jnp.arange(nlist, dtype=jnp.int32)[:, None], (nlist, cap))
+    _, packed = residual_encode(codec, vecs_fp, cent)
+    return jnp.where((ids >= 0)[..., None], packed, jnp.uint8(0))
+
+
+def _residual_unpack(index: IVFIndex) -> jax.Array:
+    """Decode the packed lists back to (nlist, cap, d) fp32 (centered)."""
+    codec = ResidualCodec(centroids=index.centroids, cuts=index.rq_cuts,
+                          values=index.rq_values)
+    nlist, cap = index.ids.shape
+    cent = jnp.broadcast_to(
+        jnp.arange(nlist, dtype=jnp.int32)[:, None], (nlist, cap))
+    full = residual_decode(codec, cent, index.vecs)
+    return full * (index.ids >= 0)[..., None]
+
+
 def extend_ivf(index: IVFIndex, new_vectors: jax.Array) -> IVFIndex:
     """Incremental add: assign new vectors to the FROZEN coarse quantizer and
     re-pack the padded lists (host-side, like build).  New docs get ids
@@ -129,9 +193,18 @@ def extend_ivf(index: IVFIndex, new_vectors: jax.Array) -> IVFIndex:
     m_old = int(valid.sum())
     m_new = newv.shape[0]
     sq8 = index.scales is not None
+    rq = index.residual
     # reconstruct the (centered) stored vectors; SQ8 requant is exact because
-    # each row's max code is 127, so the recomputed scale equals the old one
-    full = sq8_dequant(index.vecs, index.scales) if sq8 else index.vecs
+    # each row's max code is 127, so the recomputed scale equals the old one;
+    # residual re-encode is code-stable because decode reconstructs bucket
+    # MIDPOINTS, which fall strictly inside their own bucket and so re-bucket
+    # to the same code — repeated adds never drift the retained rows
+    if rq:
+        full = _residual_unpack(index)
+    elif sq8:
+        full = sq8_dequant(index.vecs, index.scales)
+    else:
+        full = index.vecs
     full = np.asarray(full)
     all_vecs = np.zeros((m_old + m_new, d), np.float32)
     all_assign = np.zeros(m_old + m_new, np.int64)
@@ -143,7 +216,14 @@ def extend_ivf(index: IVFIndex, new_vectors: jax.Array) -> IVFIndex:
     ids2, vecs2, scales2, counts2 = _pack_lists(all_vecs, all_assign, nlist,
                                                 sq8=sq8,
                                                 cap_floor=index.capacity)
-    return IVFIndex(index.centroids, ids2, vecs2, scales2, counts2, index.mean)
+    if rq:
+        # the trained tables are FROZEN like the coarse quantizer — new
+        # vectors are coded with the existing cuts/values
+        vecs2 = _residual_pack(index.centroids, index.rq_cuts,
+                               index.rq_values, ids2, vecs2)
+    return IVFIndex(index.centroids, ids2, vecs2, scales2, counts2,
+                    index.mean, rq_cuts=index.rq_cuts,
+                    rq_values=index.rq_values)
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "k", "use_fused_gather"))
@@ -161,7 +241,15 @@ def search_ivf(index: IVFIndex, q: jax.Array, nprobe: int, k: int,
     cs = q @ index.centroids.T                     # (B, nlist)
     _, probe = jax.lax.top_k(cs, nprobe)           # (B, nprobe)
     ids = jnp.take(index.ids, probe, axis=0)       # (B, nprobe, cap)
-    if use_fused_gather:
+    if index.residual:
+        # decode-at-source scan (in-kernel on TPU); the "legacy" path for
+        # this tier IS the decode-then-score oracle, so use_fused_gather
+        # only decides whether the Pallas kernel may be used
+        s = ops.fused_ivf_scan_res(q, probe, index.ids, index.vecs,
+                                   index.centroids, index.rq_values,
+                                   use_kernel=None if use_fused_gather
+                                   else False)
+    elif use_fused_gather:
         # masked -inf inside the scan (same pad convention as below)
         s = ops.fused_ivf_scan(q, probe, index.ids, index.vecs, index.scales)
     else:
@@ -200,7 +288,12 @@ def search_ivf_one_launch(index: IVFIndex, psi_params, q_tokens, q_mask,
     ``pool_queries`` + :func:`search_ivf` — fp32 ids are bit-identical.
     q_tokens: (B, Tq, d) -> (scores (B, k), ids (B, k))."""
     kp = min(k, nprobe * index.capacity)
-    top, out_ids = ops.fused_query(
-        q_tokens, q_mask, psi_params, index.centroids, index.ids, index.vecs,
-        index.scales, nprobe=nprobe, kp=kp)
+    if index.residual:
+        top, out_ids = ops.fused_query_res(
+            q_tokens, q_mask, psi_params, index.centroids, index.ids,
+            index.vecs, index.rq_values, nprobe=nprobe, kp=kp)
+    else:
+        top, out_ids = ops.fused_query(
+            q_tokens, q_mask, psi_params, index.centroids, index.ids,
+            index.vecs, index.scales, nprobe=nprobe, kp=kp)
     return pad_topk(top, out_ids, k)

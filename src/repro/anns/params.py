@@ -49,11 +49,31 @@ class IVFBackendConfig(BackendConfig):
     nlist: int = 0           # 0 => 4*sqrt(m) rounded down to pow2 (paper's rule)
     nprobe: int = 32         # default query-time probe count
     sq8: bool = True         # scalar-quantize the latent corpus (Glass-style)
+    residual_bits: int = 0   # 2/4 => residual-codec list storage (packed
+                             # codes vs the own-cluster centroid; supersedes
+                             # sq8); 0 => off
     use_fused_gather: bool = True  # gather-at-source probe scan (kernels.
                                    # gather_scan); False = legacy HBM gather
     use_one_launch: bool = False   # fuse ψ-pool + probe scan + top-k' into
                                    # ONE launch (kernels.query_fused); the
                                    # legacy 3-launch path stays the default
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualConfig(ConfigBase):
+    """The compressed TOKEN-corpus tier (``cfg.residual``) — a third storage
+    tier next to fp32 and SQ8: ColBERTv2-style centroid id + packed 2/4-bit
+    per-dim residual per token, plus optional index-time constant-space
+    token pooling.  Build-time: changing any field rebuilds the store."""
+
+    enabled: bool = False    # store doc tokens in the residual codec tier
+    bits: int = 4            # residual bits/dim (2 or 4)
+    ncent: int = 256         # coarse token centroids (1-byte ids at <=256)
+    token_budget: int = 0    # constant-space pooling: max tokens/doc
+                             # (hierarchical cluster-pooling at index/add
+                             # time; 0 = keep all tokens)
+    kmeans_iters: int = 8    # codec k-means iterations
+    train_sample: int = 65536  # token sample for codec training
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +119,7 @@ class TokenPruningSearchParams(BackendSearchParams):
 __all__ = [
     "BackendConfig",
     "BackendSearchParams",
+    "ResidualConfig",
     "BruteforceBackendConfig",
     "IVFBackendConfig",
     "MuveraBackendConfig",

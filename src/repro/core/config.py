@@ -25,6 +25,7 @@ from repro.anns.params import (
     DessertBackendConfig,
     IVFBackendConfig,
     MuveraBackendConfig,
+    ResidualConfig,
     TokenPruningBackendConfig,
 )
 from repro.common.config import ConfigBase
@@ -68,6 +69,11 @@ class LemurConfig(ConfigBase):
     muvera: MuveraBackendConfig = MuveraBackendConfig()
     dessert: DessertBackendConfig = DessertBackendConfig()
     token_pruning: TokenPruningBackendConfig = TokenPruningBackendConfig()
+    # compressed token-corpus tier (codec + constant-space pooling): OFF by
+    # default — fp32 paged store; enabling is a BUILD-time decision (the
+    # corpus must be encoded), use_residual on SearchParams only selects
+    # which store a compiled query fn reads
+    residual: ResidualConfig = ResidualConfig()
     rerank_block: int = 1024     # docs per MaxSim rerank tile
     use_fused_gather: bool = True  # candidate-gather rerank through the
                                    # gather-at-source kernel path (kernels.

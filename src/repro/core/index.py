@@ -47,11 +47,13 @@ class LemurIndex(NamedTuple):
 
     @classmethod
     def from_dense(cls, cfg, psi, stats, W, doc_tokens, doc_mask, backend,
-                   ann) -> "LemurIndex":
+                   ann, *, codec=None) -> "LemurIndex":
         """Build from the dense padded layout (same positional order the v1
         constructor took, so legacy call sites swap constructor for
-        classmethod)."""
-        store, _ = pages.from_dense(W, doc_tokens, doc_mask)
+        classmethod).  ``codec`` (a trained
+        :class:`~repro.anns.quantization.ResidualCodec`) stores the tokens
+        in the compressed residual tier instead of fp32 pages."""
+        store, _ = pages.from_dense(W, doc_tokens, doc_mask, codec=codec)
         return cls(cfg, psi, stats, store, backend, ann)
 
     # -- host-side dense views (concrete index only; O(corpus) gathers) ----

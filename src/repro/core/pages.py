@@ -40,6 +40,16 @@ they logically moved — the accounting ``benchmarks/serving_online.py`` gates
 on (paged bytes-per-add must be O(doc), not O(corpus)).  The traced helpers
 (:func:`gather_docs`, :func:`mask_dead`) are jit-safe and feed the query
 pipeline.
+
+**Compressed tier** (``codec=...``): the same page/slot machinery can store
+tokens as a ColBERTv2-style residual code instead of fp32 — a per-token
+centroid id (``cent_pages``) plus a 2/4-bit packed residual
+(``code_pages``), with the trained :class:`~repro.anns.quantization.
+ResidualCodec` riding along as pytree leaves.  Slot ids, tombstones,
+page accounting, and the in-capacity zero-retrace mutation contract are
+IDENTICAL to the fp32 tier; only the page payload changes.  Index-time
+constant-space pooling (:func:`pool_tokens`) caps every doc at a fixed
+token budget before pagination, so corpus memory is bounded per doc.
 """
 from __future__ import annotations
 
@@ -48,6 +58,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.anns.quantization import (
+    ResidualCodec,
+    residual_decode,
+    residual_encode,
+)
 
 TOKENS_PER_PAGE = 16   # power of two — the paged-KV NUM_TOKENS_IN_BLOCK
 MIN_CAPACITY = 8       # smallest doc-slot bucket
@@ -69,6 +85,10 @@ class PagedStore(NamedTuple):
     W: jax.Array           # (C, d')       latent rows (dead slots zeroed)
     alive: jax.Array       # (C,)          bool tombstone mask
     n_docs: jax.Array      # (1,)          int32 slot high-water mark
+    # compressed tier (None on the fp32 tier; tok_pages is then (P, page, 0))
+    cent_pages: jax.Array | None = None   # (P, page)      int32 centroid ids
+    code_pages: jax.Array | None = None   # (P, page, db)  uint8 packed residuals
+    codec: ResidualCodec | None = None    # trained codec tables (pytree leaves)
 
     # shape-derived introspection (trace-safe: static under jit)
     @property
@@ -81,7 +101,14 @@ class PagedStore(NamedTuple):
 
     @property
     def d(self) -> int:
+        if self.codec is not None:
+            return self.codec.d
         return self.tok_pages.shape[2]
+
+    @property
+    def residual(self) -> bool:
+        """True when tokens live in the compressed (codec) tier."""
+        return self.codec is not None
 
     @property
     def capacity(self) -> int:
@@ -104,15 +131,16 @@ class PagedStore(NamedTuple):
 # host-side mutation (concrete arrays; returns logical bytes moved)
 # --------------------------------------------------------------------------
 
-def _paginate(doc_tokens, doc_mask, page: int, pmax: int):
-    """Compact n docs into page-sized chunks (host, vectorized).
+def _paginate(doc_mask, page: int, pmax: int, flats: list):
+    """Compact n docs' per-token payloads into page-sized chunks (host).
 
-    Returns ``(chunks (need, page, d) f32, local_table (n, pmax) int32 of
-    LOCAL chunk indices or -1, counts (n,) int32)`` — callers map local
-    chunk indices through their page allocation."""
-    dt = np.asarray(doc_tokens, np.float32)
+    ``flats``: arrays ``(k, ...)`` over the k VALID tokens in doc-major
+    order (one per payload stream — fp32 tokens, or centroid ids + packed
+    residual codes).  Returns ``(chunks [one (need, page, ...) array per
+    payload], local_table (n, pmax) int32 of LOCAL chunk indices or -1,
+    counts (n,) int32)`` — callers map local chunk indices through their
+    page allocation."""
     dm = np.asarray(doc_mask, bool)
-    n, _, d = dt.shape
     counts = dm.sum(axis=1).astype(np.int64)
     ppd = -(-counts // page)                       # pages per doc (0 if empty)
     if int(ppd.max(initial=0)) > pmax:
@@ -122,22 +150,38 @@ def _paginate(doc_tokens, doc_mask, page: int, pmax: int):
     need = int(ppd.sum())
     j = np.arange(pmax, dtype=np.int64)[None, :]
     local = np.where(j < ppd[:, None], starts[:, None] + j, -1).astype(np.int32)
-    chunks = np.zeros((need, page, d), np.float32)
     if need:
-        flat = dt[dm]                               # doc-major valid tokens
         tok_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
         t = np.arange(int(counts.sum())) - np.repeat(tok_start, counts)
-        chunks[np.repeat(starts, counts) + t // page, t % page] = flat
+        rows = np.repeat(starts, counts) + t // page
+        cols = t % page
+    chunks = []
+    for f in flats:
+        f = np.asarray(f)
+        out = np.zeros((need, page) + f.shape[1:], f.dtype)
+        if need:
+            out[rows, cols] = f
+        chunks.append(out)
     return chunks, local, counts.astype(np.int32)
 
 
+def _encode_flat(codec: ResidualCodec, flat: np.ndarray):
+    """fp32 valid tokens (k, d) -> [cent (k,) int32, packed (k, db) uint8]."""
+    cid, packed = residual_encode(codec, jnp.asarray(flat, jnp.float32))
+    return [np.asarray(cid, np.int32), np.asarray(packed, np.uint8)]
+
+
 def from_dense(W, doc_tokens, doc_mask, *, page: int = TOKENS_PER_PAGE,
-               min_capacity: int = MIN_CAPACITY):
+               min_capacity: int = MIN_CAPACITY,
+               codec: ResidualCodec | None = None):
     """Build a :class:`PagedStore` from the dense padded layout.
 
-    Returns ``(store, bytes_moved)`` — the one-time O(corpus) build cost.
-    The free list is derivable (:func:`free_list`), so it is not threaded
-    through immutable index snapshots."""
+    With ``codec`` the tokens are residual-encoded into the compressed tier
+    (``cent_pages``/``code_pages``; ``tok_pages`` keeps a zero-width fp32
+    pool so every shape property still derives from it).  Returns
+    ``(store, bytes_moved)`` — the one-time O(corpus) build cost.  The free
+    list is derivable (:func:`free_list`), so it is not threaded through
+    immutable index snapshots."""
     W = np.asarray(W)
     m = W.shape[0]
     dt = np.asarray(doc_tokens, np.float32)
@@ -145,12 +189,12 @@ def from_dense(W, doc_tokens, doc_mask, *, page: int = TOKENS_PER_PAGE,
     d = dt.shape[2]
     counts = dm.sum(axis=1)
     pmax = max(1, int((-(-counts // page)).max(initial=1)))
-    chunks, local, counts = _paginate(dt, dm, page, pmax)
-    need = chunks.shape[0]
+    flat = dt[dm]
+    flats = [flat] if codec is None else _encode_flat(codec, flat)
+    chunks, local, counts = _paginate(dm, page, pmax, flats)
+    need = chunks[0].shape[0]
     C = max(min_capacity, next_pow2(m))
     P = next_pow2(max(1, need))
-    pool = np.zeros((P, page, d), np.float32)
-    pool[:need] = chunks
     table = np.full((C, pmax), -1, np.int32)
     table[:m] = local                               # local idx == page id here
     ntok = np.zeros((C,), np.int32)
@@ -159,13 +203,85 @@ def from_dense(W, doc_tokens, doc_mask, *, page: int = TOKENS_PER_PAGE,
     Wc[:m] = W
     alive = np.zeros((C,), bool)
     alive[:m] = True
+    extra = {}
+    if codec is None:
+        pool = np.zeros((P, page, d), np.float32)
+        pool[:need] = chunks[0]
+    else:
+        pool = np.zeros((P, page, 0), np.float32)
+        cent_pool = np.zeros((P, page), np.int32)
+        cent_pool[:need] = chunks[0]
+        code_pool = np.zeros((P, page, chunks[1].shape[-1]), np.uint8)
+        code_pool[:need] = chunks[1]
+        extra = dict(cent_pages=jnp.asarray(cent_pool),
+                     code_pages=jnp.asarray(code_pool), codec=codec)
     store = PagedStore(jnp.asarray(pool), jnp.asarray(table),
                        jnp.asarray(ntok), jnp.asarray(Wc),
                        jnp.asarray(alive),
-                       jnp.asarray([m], dtype=jnp.int32))
-    moved = (chunks.nbytes + table.nbytes + ntok.nbytes + Wc.nbytes
-             + alive.nbytes)
+                       jnp.asarray([m], dtype=jnp.int32), **extra)
+    moved = (sum(c.nbytes for c in chunks) + table.nbytes + ntok.nbytes
+             + Wc.nbytes + alive.nbytes)
     return store, moved
+
+
+def pool_tokens(doc_tokens, doc_mask, budget: int):
+    """Index-time constant-space token pooling (PAPERS.md: Efficient
+    Constant-Space Multi-Vector Retrieval): hierarchically cluster-pool each
+    doc's token embeddings down to a fixed per-doc ``budget``.
+
+    Deterministic (greedy closest-pair agglomeration, count-weighted means,
+    first-index tie-break) and host-side — pooling happens once at
+    index/add time, never on the query path.  Returns
+    ``(pooled (n, min(T, budget), d) fp32, mask)``; ``budget <= 0`` is a
+    no-op passthrough."""
+    dt = np.asarray(doc_tokens, np.float32)
+    dm = np.asarray(doc_mask, bool)
+    if budget <= 0 or dt.shape[1] <= budget:
+        return dt, dm
+    n, T, d = dt.shape
+    tp = min(T, budget)
+    out = np.zeros((n, tp, d), np.float32)
+    om = np.zeros((n, tp), bool)
+    for i in range(n):
+        toks = dt[i][dm[i]]
+        if toks.shape[0] > budget:
+            toks = _pool_one(toks, budget)
+        t = toks.shape[0]
+        out[i, :t] = toks
+        om[i, :t] = True
+    return out, om
+
+
+def _pool_one(toks: np.ndarray, budget: int) -> np.ndarray:
+    """Agglomerate one doc's (t, d) tokens to ``budget`` count-weighted
+    means by repeatedly merging the closest pair (squared Euclidean)."""
+    reps = toks.astype(np.float64)
+    w = np.ones(len(reps))
+    alive = np.ones(len(reps), bool)
+    while int(alive.sum()) > budget:
+        idx = np.flatnonzero(alive)
+        sub = reps[idx]
+        sq = np.sum(np.square(sub), axis=1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * (sub @ sub.T)
+        iu = np.triu_indices(len(idx), k=1)
+        flatpos = np.argmin(d2[iu])
+        a, b = iu[0][flatpos], iu[1][flatpos]
+        i, j = int(idx[a]), int(idx[b])
+        reps[i] = (w[i] * reps[i] + w[j] * reps[j]) / (w[i] + w[j])
+        w[i] += w[j]
+        alive[j] = False
+    return reps[alive].astype(np.float32)
+
+
+def token_bytes(store: PagedStore) -> int:
+    """Resident bytes of the token payload: the fp32 page pool, or the
+    compressed tier's id/code pools plus the (corpus-amortized) codec
+    tables.  The recall bench's bytes-per-doc column divides this by the
+    live doc count."""
+    if store.codec is not None:
+        tables = sum(int(np.asarray(x).nbytes) for x in store.codec)
+        return int(store.cent_pages.nbytes + store.code_pages.nbytes) + tables
+    return int(store.tok_pages.nbytes)
 
 
 # --------------------------------------------------------------------------
@@ -256,15 +372,24 @@ def add_docs(store: PagedStore, free_pages: list[int], w_new, doc_tokens,
         )
 
     # 3. page-pool bucket (amortized doubling)
-    chunks, local, counts = _paginate(dt, dm, page, pmax)
-    need = chunks.shape[0]
+    flat = dt[dm]
+    flats = [flat] if store.codec is None else _encode_flat(store.codec, flat)
+    chunks, local, counts = _paginate(dm, page, pmax, flats)
+    need = chunks[0].shape[0]
     free_pages = list(free_pages)
     if need > len(free_pages):
         P = store.n_pages
         newP = max(next_pow2(P - len(free_pages) + need), 2 * P)
         moved += store.tok_pages.nbytes
-        store = store._replace(tok_pages=jnp.pad(
+        grown = dict(tok_pages=jnp.pad(
             store.tok_pages, ((0, newP - P), (0, 0), (0, 0))))
+        if store.codec is not None:
+            moved += store.cent_pages.nbytes + store.code_pages.nbytes
+            grown.update(
+                cent_pages=jnp.pad(store.cent_pages, ((0, newP - P), (0, 0))),
+                code_pages=jnp.pad(store.code_pages,
+                                   ((0, newP - P), (0, 0), (0, 0))))
+        store = store._replace(**grown)
         free_pages.extend(range(P, newP))
 
     # 4. allocate (lowest page ids first — deterministic) and scatter
@@ -273,20 +398,28 @@ def add_docs(store: PagedStore, free_pages: list[int], w_new, doc_tokens,
     table_rows = np.where(local >= 0, alloc[np.maximum(local, 0)],
                           -1).astype(np.int32)
     ids = np.arange(m, m + n, dtype=np.int32)
-    tok_pages = store.tok_pages
+    pools = {}
     if need:
-        tok_pages = tok_pages.at[jnp.asarray(alloc)].set(jnp.asarray(chunks))
+        ja = jnp.asarray(alloc)
+        if store.codec is None:
+            pools["tok_pages"] = store.tok_pages.at[ja].set(
+                jnp.asarray(chunks[0]))
+        else:
+            pools["cent_pages"] = store.cent_pages.at[ja].set(
+                jnp.asarray(chunks[0]))
+            pools["code_pages"] = store.code_pages.at[ja].set(
+                jnp.asarray(chunks[1]))
     store = store._replace(
-        tok_pages=tok_pages,
         page_table=store.page_table.at[m:m + n].set(jnp.asarray(table_rows)),
         n_tokens=store.n_tokens.at[m:m + n].set(jnp.asarray(counts)),
         W=store.W.at[m:m + n].set(jnp.asarray(w_new, store.W.dtype)),
         alive=store.alive.at[m:m + n].set(True),
         n_docs=jnp.asarray([m + n], dtype=jnp.int32),
+        **pools,
     )
     # logical write set: the new pages + the touched table/W/count rows.
     # O(doc), never O(corpus) — the property the serving bench gates on.
-    moved += (chunks.nbytes + table_rows.nbytes + counts.nbytes
+    moved += (sum(c.nbytes for c in chunks) + table_rows.nbytes + counts.nbytes
               + n * store.d_prime * _ITEM + n + _ITEM)
     if _MUTATION_TAPS:
         _notify_taps("add", ids, doc_tokens=dt, doc_mask=dm,
@@ -360,14 +493,27 @@ def gather_docs(store: PagedStore, doc_ids):
 
     ``-1`` (or dead) ids yield an all-False mask and zeroed tokens.  This
     is the legacy-gather twin of the paged rerank kernel — identical token
-    values in identical positions, so scores agree bit for bit."""
+    values in identical positions, so scores agree bit for bit.
+
+    On the compressed tier the tokens are residual-DECODED on the fly
+    (pure jnp, jit-safe): callers always see fp32 ``(…, td_max, d)``
+    tokens, whichever tier backs them."""
     doc_ids = jnp.asarray(doc_ids)
     safe = jnp.maximum(doc_ids, 0)
     table = jnp.take(store.page_table, safe, axis=0)       # (..., pmax)
     nt = jnp.take(store.n_tokens, safe, axis=0)            # (...,)
     nt = jnp.where(doc_ids >= 0, nt, 0)
-    toks = jnp.take(store.tok_pages, jnp.maximum(table, 0), axis=0)
-    toks = toks.reshape(doc_ids.shape + (store.td_max, store.d))
+    safe_pg = jnp.maximum(table, 0)
+    if store.codec is not None:
+        cent = jnp.take(store.cent_pages, safe_pg, axis=0)   # (..., pmax, page)
+        codes = jnp.take(store.code_pages, safe_pg, axis=0)  # (..., pmax, pg, db)
+        cent = cent.reshape(doc_ids.shape + (store.td_max,))
+        codes = codes.reshape(doc_ids.shape + (store.td_max,
+                                               codes.shape[-1]))
+        toks = residual_decode(store.codec, cent, codes)
+    else:
+        toks = jnp.take(store.tok_pages, safe_pg, axis=0)
+        toks = toks.reshape(doc_ids.shape + (store.td_max, store.d))
     pos = jnp.arange(store.td_max, dtype=jnp.int32)
     mask = pos < nt[..., None]
     return toks * mask[..., None], mask

@@ -193,7 +193,8 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
                     k_prime_local: int | None = None,
                     m_real: int | None = None,
                     use_fused_gather: bool | None = None,
-                    use_one_launch: bool | None = None):
+                    use_one_launch: bool | None = None,
+                    use_residual: bool | None = None):
     """Returns a jit-able serve_step(state, q_tokens, q_mask) -> (scores, ids).
 
     Queries are replicated over the corpus shards (the corpus uses every mesh
@@ -208,7 +209,14 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
     kernel path (default: ``cfg.use_fused_gather``).
     ``use_one_launch``: per-shard latent scan + top-k' as ONE fused kernel
     launch (default: ``cfg.use_one_launch``); ids match the legacy
-    scan-then-top-k branch bit for bit on fp32."""
+    scan-then-top-k branch bit for bit on fp32.
+    ``use_residual``: the compressed-token-tier compile key (default:
+    ``cfg.residual.enabled``, i.e. OFF unless the index was built with the
+    residual codec).  The sharded slot pool stores DECODED rows — a
+    residual base store is dequantized once at state build (then optionally
+    SQ8-requantized per row), never on the serve path — so the knob only
+    pins the compiled-step identity to match the single-device facade's
+    (backend, resolved-params) cache contract."""
     axes = corpus_axes(mesh)
     axis_sizes = tuple(mesh.shape[a] for a in axes)
     n_shards = int(np.prod(axis_sizes))
@@ -218,6 +226,9 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
         use_fused_gather = bool(cfg.use_fused_gather)
     if use_one_launch is None:
         use_one_launch = bool(getattr(cfg, "use_one_launch", False))
+    if use_residual is None:
+        use_residual = bool(getattr(cfg, "residual", None) is not None
+                            and cfg.residual.enabled)
     corpus_spec = P(axes)
     body = functools.partial(
         _local_retrieve, k=cfg.k, k_prime=k_prime_local, axes=axes,
@@ -225,6 +236,8 @@ def make_serve_step(mesh: Mesh, cfg: LemurConfig, *,
         use_fused_gather=bool(use_fused_gather),
         use_one_launch=bool(use_one_launch),
     )
+    del use_residual  # resolved + part of the caller's compile key; the
+    #                   per-shard body always scans the decoded slot pool
 
     def serve_step(state: ShardedRetrievalState, q_tokens, q_mask):
         sq8 = state.W_scales is not None

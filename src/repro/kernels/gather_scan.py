@@ -297,3 +297,207 @@ def rerank_paged_scores(q, q_mask, cand_ids, tok_pages, page_table, n_tokens,
         out_shape=jax.ShapeDtypeStruct((B, kp), jnp.float32),
         interpret=interpret,
     )(pt, nt, q, qm, tok_pages)
+
+
+# --------------------------------------------------------------------------
+# residual-codec tier: in-kernel centroid lookup + residual unpack
+# --------------------------------------------------------------------------
+#
+# The compressed corpus stores each token as a centroid id (int32) plus a
+# packed 2/4-bit per-dim residual code (``repro.anns.quantization``).  The
+# kernels below decode INSIDE the grid — the fp32 token slab never exists in
+# HBM — generalizing the SQ8 hi/lo-bf16 trick from "scale a cheap int8 dot"
+# to "reconstruct, then dot".  Mosaic has no dynamic-gather primitive, so
+# the decode avoids gathers entirely:
+#
+# * packed codes unpack with int32 shifts/ANDs (vector ALU);
+# * per-dim reconstruction values resolve by a select-sum over the L static
+#   levels (``sum_l values[:, l] * (idx == l)``);
+# * centroid rows resolve by a one-hot MXU matmul
+#   (``onehot(cent, ncent) @ centroids``).
+#
+# Every output element is the sum of exactly one fp32 term plus zeros, so
+# the in-kernel decode is BIT-IDENTICAL to the host-side
+# ``quantization.residual_decode`` (``jnp.take``/``take_along_axis``) — the
+# property ``tests/test_residual_codec.py`` pins down.
+
+
+def _unpack_codes_i32(codes, *, bits):
+    """Packed (n, db) uint8 -> (n, db * 8//bits) int32 bucket indices.
+
+    Same little-endian-within-byte layout as ``quantization.pack_codes``:
+    dim ``i*per + j`` sits at bit ``bits*j`` of byte ``i``."""
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    b = codes.astype(jnp.int32)
+    parts = [(b >> (bits * j)) & mask for j in range(per)]
+    idx = jnp.stack(parts, axis=-1)                    # (n, db, per)
+    return idx.reshape(idx.shape[0], idx.shape[1] * per)
+
+
+def _residual_values(idx, values):
+    """Bucket indices (n, d) + per-dim tables (d, L) -> (n, d) fp32 via a
+    select-sum over the L static levels (exactly one nonzero term/element)."""
+    L = values.shape[1]
+    res = jnp.zeros(idx.shape, jnp.float32)
+    for l in range(L):
+        res = res + jnp.where(idx == l, values[:, l][None, :], 0.0)
+    return res
+
+
+def residual_decode_onehot(cent, codes, centroids, values, *, bits):
+    """Gather-free residual decode (kernel-safe, also called by tests).
+
+    cent: (n,) int32 centroid ids; codes: (n, db) uint8 packed residuals;
+    centroids: (ncent, d) fp32; values: (d, L) fp32 -> (n, d) fp32,
+    bit-identical to ``quantization.residual_decode`` on the same inputs."""
+    n = cent.shape[0]
+    ncent = centroids.shape[0]
+    idx = _unpack_codes_i32(codes, bits=bits)          # (n, d)
+    res = _residual_values(idx, values)                # (n, d)
+    onehot = (cent[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (n, ncent), 1)
+              ).astype(jnp.float32)
+    cvec = jax.lax.dot_general(
+        onehot, centroids, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (n, d)
+    return cvec + res
+
+
+def _ivf_scan_res_kernel(probe_ref, q_ref, ids_ref, codes_ref, cent_ref,
+                         val_ref, out_ref, *, bits):
+    # codes: (1, cap, db) packed residuals of ONE cluster; cent: (1, d) the
+    # SAME cluster's centroid row (IVF storage codes each vector against its
+    # own cluster, so the id is implicit in the list and both tiles are
+    # DMA'd by the one prefetched probe id) — no one-hot lookup needed here
+    q = q_ref[...]                                     # (1, d) fp32
+    _, cap, db = codes_ref.shape
+    idx = _unpack_codes_i32(codes_ref[...].reshape(cap, db), bits=bits)
+    v = _residual_values(idx, val_ref[...]) + cent_ref[...]   # (cap, d)
+    s = jax.lax.dot_general(
+        q, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (1, cap)
+    out_ref[...] = jnp.where(ids_ref[...] >= 0, s, -jnp.inf).reshape(
+        1, 1, out_ref.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ivf_probe_res_scan(q, probe, ids, codes, centroids, values, *,
+                       interpret: bool = False):
+    """Residual-tier IVF probe scan: decode-at-source, never materializing
+    the fp32 cluster lists.
+
+    q: (B, d) fp32; probe: (B, nprobe) int32; ids: (nlist, cap) int32 (-1
+    padded); codes: (nlist, cap, db) uint8 packed residuals coded against
+    each vector's OWN cluster centroid; centroids: (nlist, d) fp32; values:
+    (d, L) fp32 -> (B, nprobe, cap) fp32 scores, pad slots ``-inf``.
+    """
+    B, d = q.shape
+    nprobe = probe.shape[1]
+    nlist, cap = ids.shape
+    db = codes.shape[2]
+    L = values.shape[1]
+    bits = int(L).bit_length() - 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, p, pr: (b, 0)),
+            pl.BlockSpec((1, cap), lambda b, p, pr: (pr[b, p], 0)),
+            pl.BlockSpec((1, cap, db), lambda b, p, pr: (pr[b, p], 0, 0)),
+            pl.BlockSpec((1, d), lambda b, p, pr: (pr[b, p], 0)),
+            pl.BlockSpec((d, L), lambda b, p, pr: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cap), lambda b, p, pr: (b, p, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_scan_res_kernel, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nprobe, cap), jnp.float32),
+        interpret=interpret,
+    )(probe.astype(jnp.int32), q, ids, codes, centroids, values)
+
+
+def _rerank_paged_res_kernel(pt_ref, nt_ref, q_ref, qm_ref, cent_ref,
+                             code_ref, cb_ref, val_ref, out_ref, acc_ref, *,
+                             pmax, bits):
+    # the paged fp rerank with the page DMA swapped for cent ids (1, page)
+    # int32 + packed codes (1, page, db) uint8 and an in-VMEM decode; the
+    # codec tables (cb: (ncent, d), val: (d, L)) ride along as full blocks
+    b, c, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full(acc_ref.shape, NEG, jnp.float32)
+
+    _, Tq, d = q_ref.shape
+    _, page = cent_ref.shape
+    toks = residual_decode_onehot(
+        cent_ref[...].reshape(page), code_ref[...].reshape(page, -1),
+        cb_ref[...], val_ref[...], bits=bits,
+    )                                                  # (page, d)
+    s = jax.lax.dot_general(
+        q_ref[...].reshape(Tq, d), toks, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Tq, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (Tq, page), 1)
+    s = jnp.where(pos < nt_ref[b, c], s, NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...],
+                               jnp.max(s, axis=-1, keepdims=True))
+
+    @pl.when(j == pmax - 1)
+    def _flush():
+        best = jnp.where(qm_ref[...].reshape(Tq, 1) > 0, acc_ref[...], 0.0)
+        out_ref[...] = jnp.sum(best).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rerank_paged_res_scores(q, q_mask, cand_ids, cent_pages, code_pages,
+                            page_table, n_tokens, centroids, values, *,
+                            interpret: bool = False):
+    """Residual-tier paged MaxSim rerank: stream each candidate's COMPRESSED
+    token pages and decode in VMEM — the fp32 slab never exists in HBM.
+
+    q: (B, Tq, d); cand_ids: (B, k') int32 (-1 padded, caller masks);
+    cent_pages: (P, page) int32; code_pages: (P, page, db) uint8;
+    page_table: (C, pmax) int32 (-1 padded); n_tokens: (C,) int32;
+    centroids: (ncent, d) / values: (d, L) the codec tables -> (B, k') fp32
+    raw pair scores, bit-identical to decoding the pages host-side and
+    running :func:`rerank_paged_scores`.
+    """
+    B, Tq, d = q.shape
+    kp = cand_ids.shape[1]
+    _, page = cent_pages.shape
+    db = code_pages.shape[2]
+    ncent = centroids.shape[0]
+    L = values.shape[1]
+    bits = int(L).bit_length() - 1
+    pmax = page_table.shape[1]
+    safe = jnp.maximum(cand_ids, 0).astype(jnp.int32)
+    pt = jnp.maximum(jnp.take(page_table, safe, axis=0), 0).astype(jnp.int32)
+    nt = jnp.take(n_tokens, safe, axis=0).astype(jnp.int32)
+    nt = jnp.where(cand_ids >= 0, nt, 0)         # (B, k')
+    qm = q_mask.astype(jnp.int8)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, kp, pmax),
+        in_specs=[
+            pl.BlockSpec((1, Tq, d), lambda b, c, j, pt, nt: (b, 0, 0)),
+            pl.BlockSpec((1, Tq), lambda b, c, j, pt, nt: (b, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, c, j, pt, nt: (pt[b, c, j], 0)),
+            pl.BlockSpec((1, page, db),
+                         lambda b, c, j, pt, nt: (pt[b, c, j], 0, 0)),
+            pl.BlockSpec((ncent, d), lambda b, c, j, pt, nt: (0, 0)),
+            pl.BlockSpec((d, L), lambda b, c, j, pt, nt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, j, pt, nt: (b, c)),
+        scratch_shapes=[pltpu.VMEM((Tq, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rerank_paged_res_kernel, pmax=pmax, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kp), jnp.float32),
+        interpret=interpret,
+    )(pt, nt, q, qm, cent_pages, code_pages, centroids, values)

@@ -116,6 +116,25 @@ def fused_ivf_scan(q, probe, ids, vecs, scales=None, *,
                               interpret=not _on_tpu())
 
 
+def fused_ivf_scan_res(q, probe, ids, codes, centroids, values, *,
+                       use_kernel: bool | None = None):
+    """Residual-tier IVF probe scan: the packed 2/4-bit cluster lists are
+    decoded at the source (in-kernel on TPU) — the fp32 lists never exist.
+
+    q: (B, d); probe: (B, nprobe) int32; ids (nlist, cap) / codes (nlist,
+    cap, db) uint8 coded against each cluster's own centroid; centroids
+    (nlist, d); values (d, L) -> (B, nprobe, cap) fp32, pad slots ``-inf``.
+    Decode is bit-identical between the kernel (one-hot/select-sum) and the
+    host oracle (``quantization.residual_decode``), so both paths agree.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.ivf_scan_res_ref(q, probe, ids, codes, centroids, values)
+    return _gs.ivf_probe_res_scan(q, probe, ids, codes, centroids, values,
+                                  interpret=not _on_tpu())
+
+
 def fused_rerank(q, q_mask, cand_ids, doc_tokens, doc_mask, k: int, *,
                  doc_scales=None, use_kernel: bool | None = None):
     """Fused candidate-gather exact MaxSim rerank -> (scores, ids), (B, k).
@@ -180,6 +199,38 @@ def fused_rerank_paged(q, q_mask, cand_ids, tok_pages, page_table, n_tokens,
     return top, out_ids
 
 
+def fused_rerank_paged_res(q, q_mask, cand_ids, cent_pages, code_pages,
+                           page_table, n_tokens, centroids, values, k: int,
+                           *, use_kernel: bool | None = None):
+    """Residual-tier paged MaxSim rerank -> (scores, ids), (B, k).
+
+    The compressed twin of :func:`fused_rerank_paged`: candidates' token
+    pages arrive as centroid-id pages (P, page) int32 + packed residual
+    pages (P, page, db) uint8 plus the codec tables, decoded in VMEM on the
+    TPU path (host-side by the oracle — bit-identical).  Same ``-1``-pad
+    contract as :func:`fused_rerank`.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        s = ref.rerank_scores_paged_res_ref(q, q_mask, cand_ids, cent_pages,
+                                            code_pages, page_table, n_tokens,
+                                            centroids, values)
+    else:
+        s = _gs.rerank_paged_res_scores(q, q_mask, cand_ids, cent_pages,
+                                        code_pages, page_table, n_tokens,
+                                        centroids, values,
+                                        interpret=not _on_tpu())
+    s = jnp.where(cand_ids >= 0, s, ref.NEG)
+    kk = min(k, s.shape[1])
+    top, idx = jax.lax.top_k(s, kk)
+    out_ids = jnp.take_along_axis(cand_ids, idx, axis=1)
+    if kk < k:
+        top = jnp.pad(top, ((0, 0), (0, k - kk)), constant_values=ref.NEG)
+        out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return top, out_ids
+
+
 def fused_query(q_tokens, q_mask, psi_params, centroids, ids, vecs,
                 scales=None, *, nprobe: int, kp: int,
                 use_kernel: bool | None = None):
@@ -209,6 +260,34 @@ def fused_query(q_tokens, q_mask, psi_params, centroids, ids, vecs,
                                    probe, ids, vecs, scales, kp=kp)
     return _qf.query_fused(q_tokens, q_mask, kernel, bias, g, b, probe, ids,
                            vecs, scales, kp=kp, interpret=not _on_tpu())
+
+
+def fused_query_res(q_tokens, q_mask, psi_params, centroids, ids, codes,
+                    rq_values, *, nprobe: int, kp: int,
+                    use_kernel: bool | None = None):
+    """One-launch first stage over a RESIDUAL-compressed IVF index.
+
+    Same contract as :func:`fused_query`; the cluster lists are packed
+    2/4-bit residual codes (nlist, cap, db) coded against each cluster's
+    own centroid row (the same (nlist, d') table the probe-select prelude
+    scores), with rq_values (d', L) the per-dim reconstruction tables.
+    """
+    kernel = psi_params["dense"]["kernel"]
+    bias = psi_params["dense"]["bias"]
+    g = psi_params["ln"]["scale"]
+    b = psi_params["ln"]["bias"]
+    psi_q = ref.psi_pool_ref(q_tokens, q_mask, kernel, bias, g, b)
+    cs = psi_q @ centroids.T
+    _, probe = jax.lax.top_k(cs, nprobe)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return ref.query_fused_res_ref(q_tokens, q_mask, kernel, bias, g, b,
+                                       probe, ids, codes, centroids,
+                                       rq_values, kp=kp)
+    return _qf.query_fused_res(q_tokens, q_mask, kernel, bias, g, b, probe,
+                               ids, codes, centroids, rq_values, kp=kp,
+                               interpret=not _on_tpu())
 
 
 def mips_topk_fused(q, W, W_scales, kp: int, valid=None, *,

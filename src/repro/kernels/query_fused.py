@@ -152,6 +152,43 @@ def _query_fused_sq8_kernel(probe_ref, qt_ref, qm_ref, w_ref, b_ref, g_ref,
         out_i_ref[...] = best_i[...]
 
 
+def _query_fused_res_kernel(probe_ref, qt_ref, qm_ref, w_ref, b_ref, g_ref,
+                            beta_ref, ids_ref, codes_ref, cent_ref, val_ref,
+                            out_s_ref, out_i_ref, q_acc, best_s, best_i, *,
+                            eps, nprobe, bits):
+    # residual-tier cluster lists decoded IN-KERNEL: packed 2/4-bit codes
+    # unpack via shifts/ANDs, per-dim values via a select-sum over the L
+    # static levels, and the cluster's OWN centroid row (IVF residual
+    # storage) arrives as a (1, d') tile DMA'd by the same prefetched probe
+    # id — the fp32 cluster list never exists in HBM (gather_scan.
+    # _ivf_scan_res_kernel, fused behind the pooled-ψ carry)
+    from repro.kernels.gather_scan import _residual_values, _unpack_codes_i32
+
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        q_acc[...] = _pool_psi(qt_ref, qm_ref, w_ref, b_ref, g_ref, beta_ref,
+                               eps)
+        best_s[...] = jnp.full(best_s.shape, -jnp.inf, jnp.float32)
+        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
+
+    _, cap, db = codes_ref.shape
+    idx = _unpack_codes_i32(codes_ref[...].reshape(cap, db), bits=bits)
+    v = _residual_values(idx, val_ref[...]) + cent_ref[...]   # (cap, d')
+    s = jax.lax.dot_general(
+        q_acc[...], v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, cap)
+    s = jnp.where(ids_ref[...] >= 0, s, -jnp.inf)
+    _merge_topk(best_s, best_i, s, ids_ref[...])
+
+    @pl.when(p == nprobe - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
 @functools.partial(jax.jit, static_argnames=("kp", "interpret"))
 def query_fused(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias, probe,
                 ids, vecs, scales=None, *, kp: int, interpret: bool = False,
@@ -205,6 +242,58 @@ def query_fused(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias, probe,
                    jax.ShapeDtypeStruct((B, kp), jnp.int32)],
         interpret=interpret,
     )(probe.astype(jnp.int32), *args)
+
+
+@functools.partial(jax.jit, static_argnames=("kp", "interpret"))
+def query_fused_res(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias, probe,
+                    ids, codes, centroids, rq_values, *, kp: int,
+                    interpret: bool = False, eps: float = 1e-5):
+    """One-launch fused query over a RESIDUAL-compressed IVF index.
+
+    Same contract as :func:`query_fused`, with the cluster lists stored as
+    packed residual codes: codes (nlist, cap, db) uint8 coded against each
+    cluster's own centroid row; centroids (nlist, d') fp32 (the SAME table
+    the probe-select prelude scores); rq_values (d', L) fp32.  Returns
+    (scores (B, kp) fp32, ids (B, kp) int32) padded with ``(-inf, -1)``.
+    """
+    B, Tq, d = q_tokens.shape
+    nprobe = probe.shape[1]
+    nlist, cap = ids.shape
+    db = codes.shape[2]
+    dp = kernel.shape[1]
+    L = rq_values.shape[1]
+    bits = int(L).bit_length() - 1
+    qm = q_mask.astype(jnp.int8)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, Tq, d), lambda b, p, pr: (b, 0, 0)),
+            pl.BlockSpec((1, Tq), lambda b, p, pr: (b, 0)),
+            pl.BlockSpec((d, dp), lambda b, p, pr: (0, 0)),
+            pl.BlockSpec((dp,), lambda b, p, pr: (0,)),
+            pl.BlockSpec((dp,), lambda b, p, pr: (0,)),
+            pl.BlockSpec((dp,), lambda b, p, pr: (0,)),
+            pl.BlockSpec((1, cap), lambda b, p, pr: (pr[b, p], 0)),
+            pl.BlockSpec((1, cap, db), lambda b, p, pr: (pr[b, p], 0, 0)),
+            pl.BlockSpec((1, dp), lambda b, p, pr: (pr[b, p], 0)),
+            pl.BlockSpec((dp, L), lambda b, p, pr: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, kp), lambda b, p, pr: (b, 0)),
+                   pl.BlockSpec((1, kp), lambda b, p, pr: (b, 0))],
+        scratch_shapes=[pltpu.VMEM((1, dp), jnp.float32),
+                        pltpu.VMEM((1, kp), jnp.float32),
+                        pltpu.VMEM((1, kp), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_query_fused_res_kernel, eps=eps, nprobe=nprobe,
+                          bits=bits),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, kp), jnp.int32)],
+        interpret=interpret,
+    )(probe.astype(jnp.int32), q_tokens, qm, kernel, bias, ln_scale, ln_bias,
+      ids, codes, centroids, rq_values)
 
 
 # --------------------------------------------------------------------------

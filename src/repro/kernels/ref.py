@@ -75,6 +75,31 @@ def ivf_scan_ref(q, probe, ids, vecs, scales=None):
     return jnp.where(gids >= 0, s, -jnp.inf)
 
 
+def _residual_codec(centroids, values):
+    # cuts are only used at ENCODE time; decode needs centroids + values
+    from repro.anns.quantization import ResidualCodec
+    return ResidualCodec(centroids=centroids, cuts=None, values=values)
+
+
+def ivf_scan_res_ref(q, probe, ids, codes, centroids, values):
+    """Oracle for :func:`repro.kernels.gather_scan.ivf_probe_res_scan` —
+    gather the probed packed lists, decode host-side
+    (``quantization.residual_decode`` with each vector's centroid id = its
+    own cluster row), then the fp32 contraction.
+    q: (B, d); probe: (B, nprobe); ids: (nlist, cap); codes: (nlist, cap,
+    db) uint8; centroids: (nlist, d); values: (d, L) -> (B, nprobe, cap)
+    fp32, pad slots ``-inf``."""
+    from repro.anns.quantization import residual_decode
+    codec = _residual_codec(centroids, values)
+    gids = jnp.take(ids, probe, axis=0)                 # (B, P, cap)
+    gc = jnp.take(codes, probe, axis=0)                 # (B, P, cap, db)
+    cent = jnp.broadcast_to(probe[..., None], gids.shape)
+    v = residual_decode(codec, cent, gc)                # (B, P, cap, d)
+    s = jnp.einsum("bd,bpcd->bpc", q.astype(jnp.float32), v,
+                   preferred_element_type=jnp.float32)
+    return jnp.where(gids >= 0, s, -jnp.inf)
+
+
 def rerank_scores_ref(q, q_mask, cand_ids, doc_tokens, doc_mask,
                       doc_scales=None):
     """Oracle for :func:`repro.kernels.gather_scan.rerank_gather_scores` —
@@ -117,6 +142,41 @@ def rerank_scores_paged_ref(q, q_mask, cand_ids, tok_pages, page_table,
     best = jnp.max(s, axis=-1)                          # (B, k', Tq)
     best = jnp.where(q_mask[:, None, :], best, 0.0)
     return jnp.sum(best, axis=-1)                       # (B, k')
+
+
+def rerank_scores_paged_res_ref(q, q_mask, cand_ids, cent_pages, code_pages,
+                                page_table, n_tokens, centroids, values):
+    """Oracle for :func:`repro.kernels.gather_scan.rerank_paged_res_scores`
+    — decode the WHOLE compressed page pool host-side, then run the fp32
+    paged oracle on the reconstructed pages (same math, and the decode is
+    bit-identical to the in-kernel one-hot path).
+    cent_pages: (P, page) int32; code_pages: (P, page, db) uint8."""
+    from repro.anns.quantization import residual_decode
+    codec = _residual_codec(centroids, values)
+    tok_pages = residual_decode(codec, cent_pages, code_pages)  # (P, page, d)
+    return rerank_scores_paged_ref(q, q_mask, cand_ids, tok_pages,
+                                   page_table, n_tokens)
+
+
+def query_fused_res_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias,
+                        probe, ids, codes, centroids, values, *, kp: int):
+    """Oracle for :func:`repro.kernels.query_fused.query_fused_res` — the
+    legacy composition over a residual-compressed index: ψ-pool, decode-
+    then-score probe scan, flat top-k' (same stable tie contract as
+    :func:`query_fused_ref`)."""
+    psi_q = psi_pool_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias)
+    s = ivf_scan_res_ref(psi_q, probe, ids, codes, centroids, values)
+    gids = jnp.take(ids, probe, axis=0)                 # (B, P, cap)
+    B = s.shape[0]
+    flat_s = s.reshape(B, -1)
+    flat_i = gids.reshape(B, -1)
+    kk = min(kp, flat_s.shape[1])
+    top, pos = jax.lax.top_k(flat_s, kk)
+    out_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    if kk < kp:
+        top = jnp.pad(top, ((0, 0), (0, kp - kk)), constant_values=-jnp.inf)
+        out_i = jnp.pad(out_i, ((0, 0), (0, kp - kk)), constant_values=-1)
+    return top, out_i
 
 
 def psi_pool_ref(q_tokens, q_mask, kernel, bias, ln_scale, ln_bias,

@@ -142,10 +142,20 @@ def search_pipeline(index: LemurIndex, q_tokens, q_mask, params: SearchParams):
     benchmarkable — both return bit-identical ids on fp32."""
     cand = first_stage(index, q_tokens, q_mask, params)
     store = index.store
-    if params.use_fused_gather:
+    if store.residual and params.use_residual and params.use_fused_gather:
+        # compressed tier, fused path: candidate pages are DMA'd as centroid
+        # ids + packed residual codes and dequantized INSIDE the rerank
+        # kernel — fp32 token pages never exist
+        return ops.fused_rerank_paged_res(
+            q_tokens, q_mask, cand, store.cent_pages, store.code_pages,
+            store.page_table, store.n_tokens, store.codec.centroids,
+            store.codec.values, params.k)
+    if params.use_fused_gather and not store.residual:
         return ops.fused_rerank_paged(q_tokens, q_mask, cand,
                                       store.tok_pages, store.page_table,
                                       store.n_tokens, params.k)
+    # legacy HBM gather; on the compressed tier gather_docs residual-decodes
+    # on the fly, so this is also the use_residual=False decoded-view path
     toks, tmask = pages.gather_docs(store, cand)
     return maxsim.rerank_gathered(q_tokens, q_mask, cand, toks, tmask,
                                   params.k)
@@ -313,8 +323,33 @@ class LemurRetriever:
                        cfg.backend_config(backend))
         if verbose:
             print(f"[build] {backend} index complete ({time.time()-t0:.1f}s)")
-        index = LemurIndex.from_dense(cfg, phi["psi"], stats, W, doc_tokens,
-                                      doc_mask, backend, ann)
+
+        # 5. corpus store — optionally pooled to a constant per-doc token
+        # budget and/or residual-encoded (cfg.residual).  ψ/OLS/backend above
+        # always train on the RAW tokens; pooling/compression only change
+        # what the store keeps for the exact-MaxSim rerank.
+        st_tokens, st_mask, codec = doc_tokens, doc_mask, None
+        rcfg = cfg.residual
+        if int(rcfg.token_budget) > 0:
+            st_tokens, st_mask = pages.pool_tokens(doc_tokens, doc_mask,
+                                                   int(rcfg.token_budget))
+            st_tokens = jnp.asarray(st_tokens)
+            st_mask = jnp.asarray(st_mask)
+        if rcfg.enabled:
+            from repro.anns import quantization as _q
+
+            flat = np.asarray(st_tokens)[np.asarray(st_mask)]
+            # fold_in (not a wider split) keeps keys[0..3] — and thus ψ/W —
+            # bit-identical to a build without the compressed tier
+            codec = _q.train_residual_codec(
+                jax.random.fold_in(keys[3], 1), jnp.asarray(flat),
+                bits=int(rcfg.bits), ncent=int(rcfg.ncent),
+                iters=int(rcfg.kmeans_iters), sample=int(rcfg.train_sample))
+            if verbose:
+                print(f"[build] residual codec trained "
+                      f"({time.time()-t0:.1f}s)")
+        index = LemurIndex.from_dense(cfg, phi["psi"], stats, W, st_tokens,
+                                      st_mask, backend, ann, codec=codec)
         return cls(index, solver_state=solver)
 
     def with_backend(self, backend: str, *, key=None,
@@ -387,6 +422,12 @@ class LemurRetriever:
         w_new = indexer.fit_docs(solver, doc_tokens, doc_mask, idx.stats)
         be = registry.get_backend(idx.backend)
         ann = be.add(idx.ann, CorpusView(w_new, doc_tokens, doc_mask))
+        # mirror build(): W/backend see raw tokens, the store keeps the
+        # pooled view (add_docs residual-encodes via store.codec itself)
+        budget = int(idx.cfg.residual.token_budget)
+        if budget > 0:
+            doc_tokens, doc_mask = pages.pool_tokens(doc_tokens, doc_mask,
+                                                     budget)
         store, free, ids, moved = pages.add_docs(
             idx.store, self._free(), w_new, doc_tokens, doc_mask)
         self._free_pages = free
@@ -669,6 +710,14 @@ class LemurRetriever:
             },
             "ann": dict(ann_arrays),
         }
+        if st.codec is not None:
+            # compressed tier: id/code pools + the trained codec tables
+            # (cuts included so add() keeps encoding after a reload)
+            tree["pages"]["cent_pages"] = st.cent_pages
+            tree["pages"]["code_pages"] = st.code_pages
+            tree["codec"] = {"centroids": st.codec.centroids,
+                             "cuts": st.codec.cuts,
+                             "values": st.codec.values}
         if self._x_ols is not None:
             tree["solver"] = {"x_ols": self._x_ols}
         extra = {"format": FORMAT, "cfg": idx.cfg.to_dict(),
@@ -700,10 +749,19 @@ class LemurRetriever:
         stats = TargetStats(tree["stats"]["mean"], tree["stats"]["std"])
         if "pages" in tree:
             p = tree["pages"]
+            codec = None
+            if "codec" in tree:
+                from repro.anns.quantization import ResidualCodec
+
+                c = tree["codec"]
+                codec = ResidualCodec(centroids=c["centroids"],
+                                      cuts=c["cuts"], values=c["values"])
             store = pages.PagedStore(
                 p["tok_pages"], p["page_table"], p["n_tokens"], p["W"],
                 jnp.asarray(p["alive"], bool),
-                jnp.asarray(p["n_docs"], jnp.int32))
+                jnp.asarray(p["n_docs"], jnp.int32),
+                cent_pages=p.get("cent_pages"),
+                code_pages=p.get("code_pages"), codec=codec)
             index = LemurIndex(cfg, tree["psi"], stats, store, backend, ann)
         else:
             # legacy dense checkpoint (pre-paged format): migrate on load

@@ -46,6 +46,14 @@ class SearchParams:
                                                # and the sharded dense scan; the
                                                # IVF twin rides in
                                                # IVFSearchParams.use_one_launch.
+    use_residual: bool | None = None           # rerank off the compressed
+                                               # (residual-codec) token tier via
+                                               # the in-kernel dequant path
+                                               # (None => cfg.residual.enabled).
+                                               # Only meaningful on a store
+                                               # BUILT with the codec; False on
+                                               # such a store reads the decoded
+                                               # fp32 view (legacy gather).
 
     def resolve(self, cfg, backend_name: str) -> "SearchParams":
         """Fill every ``None`` from the build config: ``k``/``k_prime`` from
@@ -84,6 +92,9 @@ class SearchParams:
             use_one_launch=bool(
                 cfg.use_one_launch if self.use_one_launch is None
                 else self.use_one_launch),
+            use_residual=bool(
+                cfg.residual.enabled if self.use_residual is None
+                else self.use_residual),
         )
 
 

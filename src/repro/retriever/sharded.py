@@ -207,7 +207,7 @@ class ShardedLemurRetriever:
 
     def _compiled_fn(self, resolved: SearchParams):
         key = (resolved.k, resolved.k_prime, resolved.use_fused_gather,
-               resolved.use_one_launch)
+               resolved.use_one_launch, resolved.use_residual)
         fn = self._compiled.get(key)
         if fn is None:
             serve = dist.make_serve_step(
@@ -215,7 +215,8 @@ class ShardedLemurRetriever:
                 self.cfg.replace(k=resolved.k, k_prime=resolved.k_prime),
                 k_prime_local=self._k_prime_local,
                 use_fused_gather=resolved.use_fused_gather,
-                use_one_launch=resolved.use_one_launch)
+                use_one_launch=resolved.use_one_launch,
+                use_residual=resolved.use_residual)
             counts = self._trace_counts
             shapes = self._trace_shapes
 
@@ -249,7 +250,7 @@ class ShardedLemurRetriever:
         resolved = self.resolve(params)
         return self._trace_counts.get(
             (resolved.k, resolved.k_prime, resolved.use_fused_gather,
-             resolved.use_one_launch), 0)
+             resolved.use_one_launch, resolved.use_residual), 0)
 
     def trace_shapes(self) -> dict[tuple, int]:
         """Per-shape compile accounting (same contract as the single-device

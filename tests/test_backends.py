@@ -151,6 +151,97 @@ def test_rerank_masks_padded_candidates(tiny_corpus):
     assert float(np.asarray(scores)[0, 2]) <= maxsim.NEG / 2
 
 
+# --------------------------------------------------------------------------
+# cross-tier conformance: backend x storage tier x gather path
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tier_system():
+    """fp32-store and residual-store twins over the SAME reduction on a
+    well-separated corpus (one topic per doc, strongly expressed), so every
+    tier x backend x gather path must retrieve a doc's own token set top-1.
+    The codec key is folded off the build key, so ψ/W are bit-identical
+    between the twins; k' covers the whole corpus so approximate first
+    stages cannot blur the contract."""
+    from repro.anns.params import ResidualConfig
+    from repro.data import synthetic
+    from repro.retriever import LemurRetriever
+
+    corpus = synthetic.make_corpus(m=64, d=16, avg_tokens=8, max_tokens=12,
+                                   n_centers=64, topic_strength=4.0, seed=5)
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=48, n_train=512, n_ols=256,
+                      epochs=3, k=5, k_prime=64, anns="bruteforce")
+    rcfg = cfg.replace(residual=ResidualConfig(enabled=True, bits=4, ncent=32,
+                                               kmeans_iters=4,
+                                               token_budget=6))
+    r_fp = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    r_res = LemurRetriever.build(corpus, rcfg, key=jax.random.PRNGKey(0))
+    picks = [3, 17, 31, 50]
+    q = jnp.asarray(corpus.doc_tokens[picks])
+    qm = jnp.asarray(corpus.doc_mask[picks])
+    return r_fp, r_res, q, qm, picks
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_cross_tier_grid_identical_ids(name, tier_system):
+    """Within a tier, every gather path (fused kernel / legacy HBM gather /
+    residual-decoded view) returns IDENTICAL ids; across tiers, the top-1
+    self-retrieval agrees — for every registered backend."""
+    from repro.retriever import LemurRetriever, SearchParams
+
+    r_fp, r_res, q, qm, picks = tier_system
+    key = jax.random.PRNGKey(1)
+    for base in (r_fp, r_res):
+        r = base.with_backend(name, key=key)
+        spellings = [SearchParams(), SearchParams(use_fused_gather=False)]
+        if r.index.store.residual:
+            # use_residual=False on a residual store reads the decoded
+            # fp32 view through the legacy gather — same answers required
+            spellings.append(SearchParams(use_residual=False))
+        ids = [np.asarray(r.search(q, qm, p)[1]) for p in spellings]
+        for other in ids[1:]:
+            np.testing.assert_array_equal(other, ids[0])
+        assert ids[0][:, 0].tolist() == picks, (
+            f"{name}/{'res' if r.index.store.residual else 'fp32'}: "
+            f"top-1 {ids[0][:, 0].tolist()} != {picks}")
+
+
+def test_residual_tier_tombstones_never_surface(tier_system):
+    """Deleted docs on a residual-tier store can never surface, even under
+    the exact full-capacity scan (the widest candidate set)."""
+    from repro.retriever import SearchParams
+
+    _, r_res, q, qm, picks = tier_system
+    r = r_res.clone()
+    dead = [int(picks[0]), int(picks[1])]
+    r.delete(dead)
+    _, ids = r.search(q, qm, SearchParams(use_ann=False, k=10, k_prime=r.m))
+    got = set(np.asarray(ids).ravel().tolist())
+    assert not (got & set(dead)), f"tombstoned docs surfaced: {got & set(dead)}"
+
+
+def test_residual_tier_adds_exactly_one_compile_key(tier_system):
+    """``use_residual`` is ONE compile key: flipping it on a residual store
+    compiles exactly one more fn; every equivalent spelling shares a trace;
+    on an fp32 store the resolved default adds nothing."""
+    from repro.retriever import LemurRetriever, SearchParams
+
+    r_fp, r_res, q, qm, _ = tier_system
+    r = LemurRetriever(r_res.index)       # fresh compile cache
+    r.search(q, qm, SearchParams())
+    r.search(q, qm, SearchParams(use_residual=True))   # the resolved default
+    assert r.trace_count() == 1
+    r.search(q, qm, SearchParams(use_residual=False))  # the decoded view
+    assert r.trace_count() == 2
+    r.search(q, qm, SearchParams())
+    assert r.trace_count() == 2
+
+    rf = LemurRetriever(r_fp.index)
+    rf.search(q, qm, SearchParams())
+    rf.search(q, qm, SearchParams(use_residual=False))
+    assert rf.trace_count() == 1
+
+
 def test_add_docs_grows_index_and_stays_searchable(lemur_system):
     from repro.data import synthetic
 

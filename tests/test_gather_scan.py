@@ -178,6 +178,61 @@ def test_rerank_kernel_interpret_vs_ref():
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("B,nlist,cap,d,nprobe,bits", [
+    (4, 8, 5, 16, 3, 4),      # tiny cap
+    (1, 16, 9, 8, 8, 2),      # B=1, 2-bit codes
+])
+def test_ivf_res_scan_kernel_interpret_vs_ref(B, nlist, cap, d, nprobe, bits):
+    """Residual-tier probe scan (in-kernel decode-at-source) is BIT-identical
+    to the host decode-then-score oracle — the one-hot decode sums exactly
+    one fp32 term per element, so no tolerance is needed."""
+    rng = np.random.default_rng(B * nlist + bits)
+    ids = jnp.asarray(rng.integers(-1, 99, (nlist, cap)), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, 256, (nlist, cap, d * bits // 8)),
+                        jnp.uint8)
+    centroids = jnp.asarray(rng.standard_normal((nlist, d)), jnp.float32)
+    values = jnp.asarray(np.sort(rng.standard_normal((d, 1 << bits)), axis=1),
+                         jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    probe = jnp.asarray(rng.integers(0, nlist, (B, nprobe)), jnp.int32)
+    out = gather_scan.ivf_probe_res_scan(q, probe, ids, codes, centroids,
+                                         values, interpret=True)
+    want = ref.ivf_scan_res_ref(q, probe, ids, codes, centroids, values)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,C,Tq,d,kp,bits", [
+    (3, 12, 4, 16, 5, 4),
+    (1, 8, 3, 8, 6, 2),       # B=1, 2-bit, k' > #docs
+])
+def test_rerank_paged_res_kernel_interpret_vs_ref(B, C, Tq, d, kp, bits):
+    """Residual-tier paged rerank (compressed pages decoded in VMEM) is
+    bit-identical to decoding the whole pool host-side and running the fp32
+    paged oracle, -1 pads and short docs included."""
+    rng = np.random.default_rng(B * C + bits)
+    page, pmax = 4, 2
+    P = C * pmax
+    cent_pages = jnp.asarray(rng.integers(0, 10, (P, page)), jnp.int32)
+    code_pages = jnp.asarray(rng.integers(0, 256, (P, page, d * bits // 8)),
+                             jnp.uint8)
+    centroids = jnp.asarray(rng.standard_normal((10, d)), jnp.float32)
+    values = jnp.asarray(np.sort(rng.standard_normal((d, 1 << bits)), axis=1),
+                         jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(P).reshape(C, pmax), jnp.int32)
+    n_tokens = jnp.asarray(rng.integers(1, pmax * page + 1, (C,)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, Tq, d)), jnp.float32)
+    qm = jnp.asarray(rng.random((B, Tq)) > 0.3).at[:, 0].set(True)
+    cand = jnp.asarray(rng.integers(-1, C, (B, kp)), jnp.int32)
+    out = gather_scan.rerank_paged_res_scores(
+        q, qm, cand, cent_pages, code_pages, table, n_tokens, centroids,
+        values, interpret=True)
+    want = ref.rerank_scores_paged_res_ref(
+        q, qm, cand, cent_pages, code_pages, table, n_tokens, centroids,
+        values)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
 def test_ops_fused_dispatch_kernel_vs_ref():
     """ops wrappers: forced-kernel (interpret) results == forced-ref results
     (fp32 exact), i.e. platform dispatch cannot change answers."""

@@ -1,0 +1,230 @@
+"""Property suite for the compressed corpus tier (residual codec).
+
+Four contracts:
+
+* **Round-trip error bound.**  For 2- and 4-bit codecs trained on the
+  encoded data, per-dimension reconstruction error never exceeds the
+  quantization step (the widest residual bucket of that dimension) — on
+  random tokens AND the adversarial shapes (all-zero rows, max-norm rows,
+  duplicated tokens) that break naive per-dim quantizers.
+* **Packed layout.**  ``pack_codes``/``unpack_codes`` round-trip every
+  bucket index, and the host decoder (``quantization.residual_decode``) is
+  BIT-identical to the gather-free one-hot decoder the Pallas kernels use
+  (``gather_scan.residual_decode_onehot``) — the layout contract the
+  in-kernel dequant depends on.
+* **Checkpoint round-trip.**  A retriever built with the residual tier
+  saves/loads with bit-identical compressed pages, codec tables, and
+  search ids (2-bit path end-to-end).
+* **SQ8 zero-row regression.**  An all-zero row (a fully-masked pad doc's
+  latent) must quantize to finite codes/scales and dequantize to exact 0 —
+  the unclamped scale divided by zero and poisoned every score with NaN.
+
+Deterministic grids run everywhere; the ``@given`` twins widen the sweep
+when hypothesis is installed (tests/_hypothesis_compat.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.anns import ivf
+from repro.anns import quantization as quant
+from repro.kernels import gather_scan
+
+BITS = (2, 4)
+
+
+def _adversarial(rng, n, d):
+    """Random tokens + the shapes that break naive per-dim quantizers."""
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    x[0] = 0.0                                    # all-zero row
+    x[1] = 12.0 * np.sign(rng.standard_normal(d))  # max-norm row
+    x[2] = x[3]                                   # duplicate tokens
+    return x
+
+
+def _roundtrip_bound(x, codec):
+    """|decode(encode(x)) - x| per dim vs the widest bucket of that dim.
+
+    Every residual lands in a bucket whose reconstruction value (a quantile
+    INSIDE the bucket) shares its interval, so the error is bounded by the
+    bucket width; the extreme buckets extend to the actual residual
+    min/max."""
+    cid, packed = quant.residual_encode(codec, jnp.asarray(x))
+    dec = np.asarray(quant.residual_decode(codec, cid, packed))
+    r = x - np.asarray(codec.centroids)[np.asarray(cid)]
+    cuts = np.asarray(codec.cuts)                 # (d, L-1)
+    vals = np.asarray(codec.values)               # (d, L)
+    lo = np.minimum(r.min(axis=0), vals[:, 0])
+    hi = np.maximum(r.max(axis=0), vals[:, -1])
+    edges = np.concatenate([lo[:, None], cuts, hi[:, None]], axis=1)
+    step = np.diff(edges, axis=1).max(axis=1)     # (d,) widest bucket
+    err = np.abs(dec - x)
+    assert np.all(err <= step[None, :] + 1e-5), (
+        f"max err {err.max():.4f} > widest bucket {step.max():.4f}")
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_roundtrip_error_bounded_by_quantization_step(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _adversarial(rng, 400, 16)
+    codec = quant.train_residual_codec(jax.random.PRNGKey(seed),
+                                       jnp.asarray(x), bits=bits, ncent=16,
+                                       iters=4)
+    _roundtrip_bound(x, codec)
+
+
+@settings(deadline=None, max_examples=8)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 1000))
+def test_roundtrip_error_bounded_random(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _adversarial(rng, 200, 8)
+    codec = quant.train_residual_codec(jax.random.PRNGKey(seed),
+                                       jnp.asarray(x), bits=bits, ncent=8,
+                                       iters=3)
+    _roundtrip_bound(x, codec)
+
+
+# --------------------------------------------------------------------------
+# packed-nibble layout: pack/unpack + host decode == one-hot kernel decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("d", [8, 16, 20])
+def test_pack_unpack_roundtrip(bits, d):
+    rng = np.random.default_rng(bits * d)
+    idx = jnp.asarray(rng.integers(0, 1 << bits, (50, d)), jnp.int32)
+    packed = quant.pack_codes(idx, bits)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (50, d * bits // 8)
+    np.testing.assert_array_equal(np.asarray(quant.unpack_codes(packed, bits)),
+                                  np.asarray(idx))
+
+
+def test_pack_rejects_bad_bits_and_widths():
+    idx = jnp.zeros((3, 8), jnp.int32)
+    with pytest.raises(ValueError, match="2 or 4 bits"):
+        quant.pack_codes(idx, 3)
+    with pytest.raises(ValueError, match="not divisible"):
+        quant.pack_codes(jnp.zeros((3, 5), jnp.int32), 4)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_host_decode_bit_identical_to_onehot_kernel_decode(bits):
+    """The layout contract: ``residual_decode`` (take/take_along_axis) and
+    ``residual_decode_onehot`` (shift/AND unpack + select-sum + one-hot
+    matmul — what runs inside the Pallas kernels) agree BIT-exactly on
+    arbitrary codec tables and codes."""
+    rng = np.random.default_rng(bits)
+    n, d, ncent, L = 64, 16, 12, 1 << bits
+    codec = quant.ResidualCodec(
+        centroids=jnp.asarray(rng.standard_normal((ncent, d)), jnp.float32),
+        cuts=None,  # decode never reads cuts
+        values=jnp.asarray(np.sort(rng.standard_normal((d, L)), axis=1),
+                           jnp.float32))
+    cent = jnp.asarray(rng.integers(0, ncent, (n,)), jnp.int32)
+    packed = jnp.asarray(rng.integers(0, 256, (n, d * bits // 8)), jnp.uint8)
+    host = quant.residual_decode(codec, cent, packed)
+    kern = gather_scan.residual_decode_onehot(cent, packed, codec.centroids,
+                                              codec.values, bits=bits)
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(kern))
+
+
+@settings(deadline=None, max_examples=10)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 1000))
+def test_host_decode_matches_onehot_random(bits, seed):
+    rng = np.random.default_rng(seed)
+    n, d, ncent = 16, 8, 5
+    codec = quant.ResidualCodec(
+        centroids=jnp.asarray(rng.standard_normal((ncent, d)), jnp.float32),
+        cuts=None,
+        values=jnp.asarray(rng.standard_normal((d, 1 << bits)), jnp.float32))
+    cent = jnp.asarray(rng.integers(0, ncent, (n,)), jnp.int32)
+    packed = jnp.asarray(rng.integers(0, 256, (n, d * bits // 8)), jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(quant.residual_decode(codec, cent, packed)),
+        np.asarray(gather_scan.residual_decode_onehot(
+            cent, packed, codec.centroids, codec.values, bits=bits)))
+
+
+def test_encode_is_decode_stable_on_fixed_assignment():
+    """Re-encoding a decoded vector AGAINST ITS OWN centroid reproduces the
+    codes exactly (reconstruction values live strictly inside their
+    buckets) — the property the paged store's gather/re-add path relies
+    on."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((300, 16)).astype(np.float32)
+    codec = quant.train_residual_codec(jax.random.PRNGKey(0), jnp.asarray(x),
+                                       bits=4, ncent=16, iters=4)
+    cid, packed = quant.residual_encode(codec, jnp.asarray(x))
+    dec = quant.residual_decode(codec, cid, packed)
+    cid2, packed2 = quant.residual_encode(codec, dec, cent_ids=cid)
+    np.testing.assert_array_equal(np.asarray(packed2), np.asarray(packed))
+
+
+# --------------------------------------------------------------------------
+# checkpoint round-trip (2-bit end-to-end)
+# --------------------------------------------------------------------------
+
+def test_residual_store_save_load_bit_identical(tmp_path):
+    from repro.anns.params import ResidualConfig
+    from repro.core import LemurConfig
+    from repro.data import synthetic
+    from repro.retriever import LemurRetriever, SearchParams
+
+    corpus = synthetic.make_corpus(m=80, d=16, avg_tokens=8, max_tokens=12,
+                                   n_centers=16, seed=0)
+    cfg = LemurConfig(d=16, d_prime=24, m_pretrain=48, n_train=512, n_ols=256,
+                      epochs=2, k=5, k_prime=40, anns="ivf",
+                      residual=ResidualConfig(enabled=True, bits=2, ncent=32,
+                                              kmeans_iters=3, token_budget=6))
+    r = LemurRetriever.build(corpus, cfg, key=jax.random.PRNGKey(0))
+    assert r.index.store.residual and r.index.store.codec.bits == 2
+    r.save(tmp_path)
+    r2 = LemurRetriever.load(tmp_path)
+    st, st2 = r.index.store, r2.index.store
+    np.testing.assert_array_equal(np.asarray(st.cent_pages),
+                                  np.asarray(st2.cent_pages))
+    np.testing.assert_array_equal(np.asarray(st.code_pages),
+                                  np.asarray(st2.code_pages))
+    for a, b in zip(st.codec, st2.codec):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    q = jnp.asarray(corpus.doc_tokens[:4])
+    qm = jnp.asarray(corpus.doc_mask[:4])
+    for params in (SearchParams(), SearchParams(use_ann=False)):
+        _, ids = r.search(q, qm, params)
+        _, ids2 = r2.search(q, qm, params)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+
+
+# --------------------------------------------------------------------------
+# SQ8 zero-row regression (the fully-masked pad doc)
+# --------------------------------------------------------------------------
+
+def test_sq8_all_zero_row_quantizes_finite():
+    x = jnp.asarray(np.r_[np.zeros((1, 8)),
+                          np.random.default_rng(0).standard_normal((5, 8))],
+                    jnp.float32)
+    codes, scales = quant.sq8_quant(x)
+    assert np.all(np.isfinite(np.asarray(scales))) and np.asarray(scales)[0] > 0
+    dec = np.asarray(quant.sq8_dequant(codes, scales))
+    assert np.all(np.isfinite(dec))
+    np.testing.assert_array_equal(dec[0], np.zeros(8))
+
+
+def test_sq8_ivf_with_pad_doc_scores_finite():
+    """An SQ8 first-stage index over a corpus containing a fully-masked pad
+    doc (all-zero latent row) must return finite scores for every real
+    candidate — the unclamped per-row scale made them all NaN."""
+    rng = np.random.default_rng(1)
+    vecs = rng.standard_normal((40, 16)).astype(np.float32)
+    vecs[7] = 0.0                                 # the pad doc's latent row
+    index = ivf.build_ivf(jax.random.PRNGKey(0), jnp.asarray(vecs), 8,
+                          sq8=True, kmeans_iters=2)
+    q = jnp.asarray(rng.standard_normal((3, 16)), jnp.float32)
+    scores, ids = ivf.search_ivf(index, q, 8, 10)
+    s = np.asarray(scores)
+    assert np.all(np.isfinite(s[np.asarray(ids) >= 0]))
+    assert not np.any(np.isnan(s))

@@ -406,6 +406,109 @@ def test_server_delete_update_fifo_visibility(base):
     assert r.m == m0 + 5 and r.n_alive == m0 + 2
 
 
+def test_residual_store_churn_zero_traces_and_rebuild_parity(tiny_corpus):
+    """Mutation churn on the COMPRESSED (residual-codec) tier through the
+    live server: once the pool is warm and adds stay in capacity the churn
+    issues ZERO new traces (codec leaves ride jit as arguments), every
+    mutation bumps the snapshot version by exactly one, and the post-churn
+    ids are BIT-identical to a from-scratch compressed rebuild over the
+    survivors' pooled tokens with the same codec."""
+    import jax.numpy as jnp
+
+    from repro.anns.params import ResidualConfig
+    from repro.core import pages
+    from repro.data import synthetic
+
+    budget = 6
+    cfg = LemurConfig(d=16, d_prime=32, m_pretrain=128, n_train=1024,
+                      n_ols=512, epochs=3, k=5, k_prime=64, anns="bruteforce",
+                      residual=ResidualConfig(enabled=True, bits=4, ncent=64,
+                                              kmeans_iters=4,
+                                              token_budget=budget))
+    r = LemurRetriever.build(tiny_corpus, cfg, key=jax.random.PRNGKey(0))
+    assert r.index.store.residual
+    # raw[slot] = the POOLED tokens that slot was encoded from; the rebuild
+    # oracle below re-encodes exactly these with the same codec
+    ptoks, pmask = pages.pool_tokens(np.asarray(tiny_corpus.doc_tokens),
+                                     np.asarray(tiny_corpus.doc_mask), budget)
+    raw = {i: (ptoks[i], pmask[i]) for i in range(r.m)}
+
+    def batch(s):
+        c = synthetic.make_corpus(m=3, d=16, avg_tokens=8, max_tokens=12,
+                                  n_centers=24, seed=800 + s)
+        return np.asarray(c.doc_tokens), np.asarray(c.doc_mask)
+
+    def record(ids, toks, mask):
+        pt, pm = pages.pool_tokens(toks, mask, budget)
+        for j, i in enumerate(np.asarray(ids).tolist()):
+            raw[int(i)] = (pt[j], pm[j])
+
+    params = SearchParams(use_ann=False, k=5, k_prime=64)
+    q = _ragged_query(7, 16, seed=0)
+    with RetrieverServer(r, ladder=BucketLadder((8, 16), 2),
+                         max_wait_us=200) as srv:
+        # warm-up round: absorbs any one-time pow2 pool growth + compiles
+        # the (params, shape) the loop re-issues
+        toks, mask = batch(0)
+        f = srv.add(toks, mask)
+        f.result(timeout=TIMEOUT)
+        record(f.added_ids, toks, mask)
+        warm = np.asarray(f.added_ids)
+        for i in warm.tolist():
+            raw.pop(i)
+        srv.delete(warm).result(timeout=TIMEOUT)
+        srv.search(q, params=params, timeout=TIMEOUT)
+
+        v0, t0 = r.version, srv.trace_count()
+        futs, live = [], []
+        for step in range(3):
+            toks, mask = batch(1 + step)
+            fa = srv.add(toks, mask)
+            futs.append(fa)
+            fa.result(timeout=TIMEOUT)
+            ids = np.asarray(fa.added_ids)
+            record(ids, toks, mask)
+            srv.search(q, params=params, timeout=TIMEOUT)
+            raw.pop(int(ids[0]))
+            futs.append(srv.delete(ids[:1]))
+            if live:
+                raw.pop(live[-1])
+                fu = srv.update([live.pop()], toks[:1], mask[:1])
+                futs.append(fu)
+                record(fu.result(timeout=TIMEOUT), toks[:1], mask[:1])
+                live.extend(np.asarray(fu.result(timeout=0)).tolist())
+            live.extend(ids[1:].tolist())
+        for f in futs:
+            f.result(timeout=TIMEOUT)
+        versions = [f.snapshot_version for f in futs]
+        assert versions == list(range(v0 + 1, v0 + len(futs) + 1)), versions
+        srv.search(q, params=params, timeout=TIMEOUT)
+        assert srv.trace_count() - t0 == 0, (
+            f"warm residual-tier churn issued {srv.trace_count() - t0} traces")
+
+    # from-scratch compressed rebuild over the survivors: same pooled
+    # tokens, same codec, one-shot from_dense — ids must map bit-identically
+    st = r.index.store
+    surv = sorted(raw)
+    assert len(surv) == r.n_alive
+    rt = np.zeros((len(surv), budget, 16), np.float32)
+    rm = np.zeros((len(surv), budget), bool)
+    for j, i in enumerate(surv):
+        t, mk = raw[i]
+        rt[j, : mk.sum()] = t[mk]
+        rm[j, : mk.sum()] = True
+    store2, _ = pages.from_dense(np.asarray(st.W)[surv], rt, rm,
+                                 codec=st.codec)
+    r2 = LemurRetriever(r.index._replace(store=store2))
+    qb = jnp.asarray(q[None])
+    qm = np.ones((1, len(q)), bool)
+    _, ids_a = r.search(qb, qm, params)
+    _, ids_b = r2.search(qb, qm, params)
+    np.testing.assert_array_equal(
+        np.asarray(ids_a),
+        np.asarray(surv, np.int64)[np.asarray(ids_b)])
+
+
 def test_server_stop_without_drain_cancels(base):
     r = LemurRetriever(base.index)
     srv = RetrieverServer(r, ladder=BucketLadder((8,), 2),
